@@ -1,0 +1,53 @@
+"""Fig. 6: evolution of the local compute ratio over runtime for each
+placement method (all non-baseline methods use DanceMoE's migration)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import all_plans, make_setup
+from repro.core.migration import CostModel, MigrationController
+from repro.core.baselines import eplb_plan, smartmoe_plan
+from repro.core.placement import dancemoe_placement
+from repro.serving.simulator import EdgeSimulator
+
+
+def run(model="deepseek-v2-lite", workload="bigbench",
+        duration: float = 1800.0, seed: int = 1):
+    pf, cl, wl, cap, slots = make_setup(model, workload, duration=duration)
+    cm = CostModel(expert_bytes=pf.expert_bytes,
+                   activation_bytes=128 * pf.hidden_bytes_per_token,
+                   bandwidth=cl.bandwidth,
+                   io_speed=np.array([s.io_speed for s in cl.servers]),
+                   tokens_per_horizon=2e4)
+    static = all_plans(pf, cl, wl, cap, slots)
+    series = {}
+    for name in ("Uniform", "Redundance"):
+        r = EdgeSimulator(cl, pf, wl, plan=static[name], seed=seed).run()
+        series[name] = r.local_ratio_t
+    for name, fn in [("SmartMoE", lambda f: smartmoe_plan(f, cap, slots)),
+                     ("EPLB", lambda f: eplb_plan(f, cap, slots)),
+                     ("DanceMoE", lambda f: dancemoe_placement(f, cap,
+                                                               slots))]:
+        ctrl = MigrationController(placement_fn=fn, cost=cm, interval=300.0)
+        r = EdgeSimulator(cl, pf, wl, controller=ctrl, seed=seed).run()
+        series[name] = r.local_ratio_t
+    return series
+
+
+def main(csv: bool = False):
+    series = run()
+    means = {k: float(np.mean([x[1] for x in v])) for k, v in series.items()}
+    if csv:
+        for k, v in means.items():
+            print(f"fig6,local_ratio_{k},{round(v, 4)}")
+    else:
+        for k, v in series.items():
+            pts = " ".join(f"{t/60:.0f}m:{r:.2f}" for t, r in v[::5])
+            print(f"{k:11s} mean={means[k]:.3f}  {pts}")
+    assert means["DanceMoE"] >= max(v for k, v in means.items()
+                                    if k != "DanceMoE") - 0.02, means
+    return series
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Deliverable (g) reporting: aggregate the dry-run JSONs into the roofline
+table (also embedded in EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+
+def load(results_dir: str = "results/dryrun", mesh: str = "16x16"):
+    rows = []
+    for f in sorted(glob.glob(f"{results_dir}/*__{mesh}.json")):
+        r = json.loads(Path(f).read_text())
+        if not r.get("ok"):
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "error": r.get("error", "?")})
+            continue
+        ro = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "compute_ms": ro["compute_s"] * 1e3,
+            "memory_ms": ro["memory_s"] * 1e3,
+            "collective_ms": ro["collective_s"] * 1e3,
+            "dominant": ro["dominant"],
+            "useful": ro["useful_flops_ratio"],
+            "mfu_bound": ro["mfu_bound"],
+            "args_gb": r["argument_size_in_bytes"] / 1e9,
+        })
+    return rows
+
+
+def main(csv: bool = False, mesh: str = "16x16"):
+    rows = load(mesh=mesh)
+    if not rows:
+        print(f"roofline,no_results_for_{mesh},0")
+        return rows
+    if csv:
+        for r in rows:
+            if "error" in r:
+                print(f"roofline,{r['arch']}/{r['shape']},ERROR")
+            else:
+                print(f"roofline,{r['arch']}/{r['shape']}/{r['dominant']},"
+                      f"{r['compute_ms']:.2f}|{r['memory_ms']:.2f}|"
+                      f"{r['collective_ms']:.2f}")
+    else:
+        hdr = (f"{'arch':26s} {'shape':12s} {'comp_ms':>9s} {'mem_ms':>9s} "
+               f"{'coll_ms':>9s} {'dominant':>10s} {'useful':>7s} "
+               f"{'args_GB':>8s}")
+        print(hdr)
+        for r in rows:
+            if "error" in r:
+                print(f"{r['arch']:26s} {r['shape']:12s} ERROR {r['error']}")
+            else:
+                print(f"{r['arch']:26s} {r['shape']:12s} "
+                      f"{r['compute_ms']:9.2f} {r['memory_ms']:9.2f} "
+                      f"{r['collective_ms']:9.2f} {r['dominant']:>10s} "
+                      f"{r['useful']:7.2f} {r['args_gb']:8.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

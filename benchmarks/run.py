@@ -1,0 +1,35 @@
+"""Benchmark driver: one function per paper table/figure.
+Prints ``name,case,value`` CSV lines (plus human-readable sections)."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    import benchmarks.table1 as table1
+    import benchmarks.table2 as table2
+    import benchmarks.fig5 as fig5
+    import benchmarks.fig6 as fig6
+    import benchmarks.fig7 as fig7
+    import benchmarks.fig8 as fig8
+    import benchmarks.roofline_table as roofline_table
+
+    csv = "--csv" in sys.argv
+    for name, fn in [
+        ("Table I  (offload vs collaboration)", table1.main),
+        ("Table II (5 methods x 2 models x 2 workloads)", table2.main),
+        ("Fig. 5   (latency vs remote fraction)", fig5.main),
+        ("Fig. 6   (local compute ratio over time)", fig6.main),
+        ("Fig. 7   (migration under workload shift)", fig7.main),
+        ("Fig. 8   (scalability + bandwidth)", fig8.main),
+        ("Roofline (single-pod dry-run)", roofline_table.main),
+    ]:
+        t0 = time.time()
+        print(f"\n##### {name}")
+        fn(csv=csv)
+        print(f"##### done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Table II: serve latency across 5 placement methods x 2 models x 2
+workloads (BigBench 10s / MultiData 20s Poisson), 3 heterogeneous servers."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import all_plans, make_setup
+from repro.serving.simulator import EdgeSimulator
+
+
+def run(duration: float = 1200.0, seed: int = 1):
+    out = {}
+    for model in ("deepseek-v2-lite", "mixtral-8x7b"):
+        for workload in ("bigbench", "multidata"):
+            pf, cl, wl, cap, slots = make_setup(model, workload,
+                                                duration=duration)
+            plans = all_plans(pf, cl, wl, cap, slots)
+            rows = []
+            for name, plan in plans.items():
+                r = EdgeSimulator(cl, pf, wl, plan=plan, seed=seed).run()
+                per = r.avg_latency_per_server(cl.n)
+                rows.append((name, *np.round(per, 2),
+                             round(r.avg_latency, 2)))
+            out[(model, workload)] = rows
+    return out
+
+
+def main(csv: bool = False, duration: float = 1200.0):
+    out = run(duration=duration)
+    for (model, workload), rows in out.items():
+        if not csv:
+            print(f"\n=== {model} / {workload} ===")
+            print(f"{'Method':12s} {'S1':>8s} {'S2':>8s} {'S3':>8s} "
+                  f"{'Avg':>8s}")
+        best = min(r[-1] for r in rows)
+        for name, s1, s2, s3, avg in rows:
+            if csv:
+                print(f"table2,{model}/{workload}/{name},{avg}")
+            else:
+                mark = " <= best" if avg == best else ""
+                print(f"{name:12s} {s1:8.2f} {s2:8.2f} {s3:8.2f} "
+                      f"{avg:8.2f}{mark}")
+        by = {r[0]: r[-1] for r in rows}
+        assert by["DanceMoE"] <= min(v for k, v in by.items()
+                                     if k != "DanceMoE") * 1.02, \
+            f"paper claim: DanceMoE best ({model}/{workload}): {by}"
+    return out
+
+
+if __name__ == "__main__":
+    main()

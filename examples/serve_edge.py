@@ -1,0 +1,96 @@
+"""End-to-end serving driver (the paper's kind of system): serve a small
+Mixtral-family MoE with BATCHED requests through the real JAX engine, with
+the global scheduler collecting gating statistics and migrating the expert
+placement live (zero recompile — tables and expert slots are jit arguments).
+
+Phases:
+  1. serve task-skewed traffic under the Uniform placement (cold start),
+  2. the scheduler reviews the observed f_n^l(e) and migrates to the
+     DanceMoE placement,
+  3. serve more traffic — the local compute ratio rises, and generated
+     tokens are bit-identical before/after migration (function preserved).
+
+Run:  PYTHONPATH=src python examples/serve_edge.py
+"""
+import os
+
+# 8 placeholder devices so the example exercises a real 2x4 edge mesh
+# (standalone script — safe to set before jax initialises)
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.migration import CostModel
+from repro.core.placement import build_ep_placement, dancemoe_placement
+from repro.data.pipeline import TaskTokenSource
+from repro.launch.mesh import make_test_mesh
+from repro.models import moe as M
+from repro.models import transformer as tr
+from repro.serving.engine import ServingEngine
+from repro.serving.scheduler import GlobalScheduler
+
+
+def regather(dense_groups, pls, n_groups):
+    out = {}
+    for k, v in dense_groups.items():
+        if "router" in v:
+            per = [M.dense_to_ep(jax.tree.map(lambda a: a[g], v),
+                                 jax.tree.map(lambda a: a[g], pls))
+                   for g in range(n_groups)]
+            out[k] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+        else:
+            out[k] = v
+    return out
+
+
+def main(steps: int = 8, batches: int = 3):
+    cfg = get_config("mixtral-8x7b").reduced()  # 4 experts, top-2, 2 layers
+    mesh = make_test_mesh(2, 4)                 # 2x4 fake mesh: 4 EP ranks
+    spec = M.EPSpec.build(mesh, cfg, ep_axes=("model",), slots=2,
+                          capacity=4096, slot_capacity=8192)
+    _, n_groups = cfg.layer_pattern()
+    key = jax.random.PRNGKey(0)
+    rt_dense = tr.Runtime(cfg=cfg, mesh=mesh, moe_impl="dense")
+    rt = tr.Runtime(cfg=cfg, mesh=mesh, moe_impl="ep", ep_spec=spec)
+    params_dense = tr.init_params(rt_dense, key)
+
+    pl0 = M.uniform_placement(spec.n_ep, spec.slots, cfg.num_experts)
+    pls0 = tr.stack_placement(pl0, n_groups)
+    params = dict(params_dense)
+    params["groups"] = regather(params_dense["groups"], pls0, n_groups)
+
+    engine = ServingEngine(rt=rt, params=params, placement=pls0,
+                           dense_master=params_dense["groups"], max_len=96)
+    cm = CostModel(expert_bytes=3 * cfg.d_model * cfg.d_ff * 2,
+                   activation_bytes=cfg.d_model * 2, bandwidth=62.5e6,
+                   tokens_per_horizon=1e5)
+    sched = GlobalScheduler(
+        engine=engine, capacity=np.full(spec.n_ep, spec.slots * n_groups),
+        cost=cm, interval_batches=batches,
+        placement_fn=lambda f: dancemoe_placement(
+            f, np.full(spec.n_ep, spec.slots * n_groups),
+            np.full(spec.n_ep, spec.slots)))
+
+    src = TaskTokenSource("arithmetic", cfg.vocab_size, seed=0)
+    prompts = src.sample(4, 32)
+    print("phase 1: uniform placement")
+    gen_before, info = engine.generate(prompts, steps=steps)
+    print(f"  local compute ratio: {info['local_frac']:.3f}")
+    migrated = sched.after_batch()
+    for _ in range(batches - 1):
+        engine.generate(src.sample(4, 32), steps=steps)
+        migrated = sched.after_batch() or migrated
+    print(f"phase 2: scheduler review -> migrated={migrated}")
+    gen_after, info2 = engine.generate(prompts, steps=steps)
+    print(f"  local compute ratio: {info2['local_frac']:.3f}")
+    same = bool((gen_before == gen_after).all())
+    print(f"  generations identical across migration: {same}")
+    assert same, "migration must preserve the served function"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

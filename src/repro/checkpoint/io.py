@@ -1,0 +1,65 @@
+"""Checkpointing: flat-key .npz for arrays + msgpack sidecar for metadata
+(step, config, placement tables). No orbax dependency — works offline."""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Any
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> dict:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}#{i}/"))
+    else:
+        out[prefix.rstrip("/")] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: dict) -> Any:
+    root: dict = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    def fix(node):
+        if not isinstance(node, dict):
+            return node
+        if node and all(k.startswith("#") for k in node):
+            return [fix(node[f"#{i}"]) for i in range(len(node))]
+        return {k: fix(v) for k, v in node.items()}
+
+    return fix(root)
+
+
+def save_checkpoint(path: str | Path, params, *, step: int = 0,
+                    extra: dict | None = None, opt_state=None) -> Path:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat = _flatten({"params": jax.device_get(params)})
+    if opt_state is not None:
+        flat.update(_flatten({"opt": jax.device_get(opt_state)}))
+    np.savez(str(path) + ".npz", **flat)
+    meta = {"step": step, "extra": extra or {},
+            "keys": sorted(flat)}
+    Path(str(path) + ".meta").write_bytes(msgpack.packb(meta))
+    return path
+
+
+def load_checkpoint(path: str | Path):
+    data = np.load(str(path) + ".npz")
+    meta = msgpack.unpackb(Path(str(path) + ".meta").read_bytes())
+    tree = _unflatten({k: data[k] for k in data.files})
+    return (tree.get("params"), tree.get("opt"), meta)

@@ -1,0 +1,2 @@
+from repro.configs.base import (ModelConfig, InputShape, INPUT_SHAPES,
+                                get_config, list_configs, register)

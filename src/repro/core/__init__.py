@@ -1,0 +1,8 @@
+from repro.core.stats import ActivationStats, entropy, lemma1_coverage_bound
+from repro.core.placement import (allocate_expert_counts, assign_experts_layer,
+                                  dancemoe_placement, build_ep_placement,
+                                  PlacementPlan, remote_cost, local_utility)
+from repro.core.baselines import (uniform_plan, redundance_plan,
+                                  smartmoe_plan, eplb_plan)
+from repro.core.migration import (CostModel, MigrationController,
+                                  migration_time, should_migrate)

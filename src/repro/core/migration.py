@@ -1,0 +1,95 @@
+"""Lightweight expert migration (Sec. III-C.3).
+
+Eq. (3): T_mig(P, P') = sum over changed placement entries of m_e / speed.
+Eq. (4): adopt P' iff  C(P') + T_mig(P, P') < C(P),
+where C(.) converts the Eq.-2 proxy (expected remote invocations) into
+seconds using the measured per-invocation remote cost and the request rate
+over the evaluation horizon — exactly the paper's "historical communication
+and computation time as estimation metrics".
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.placement import PlacementPlan, remote_cost
+
+
+@dataclasses.dataclass
+class CostModel:
+    """Converts proxy-objective units into seconds."""
+    expert_bytes: float                 # m_e
+    activation_bytes: float             # hidden-state transfer per invocation
+    bandwidth: float                    # bytes/s between servers
+    io_speed: np.ndarray | float = 1e9  # per-server weight-load bytes/s
+    per_call_overhead: float = 1e-3     # network round-trip + queuing (s)
+    tokens_per_horizon: float = 1e4     # expected token-layer invocations
+                                        # until the next placement review
+
+    def remote_invocation_time(self) -> float:
+        return (2.0 * self.activation_bytes / self.bandwidth
+                + self.per_call_overhead)
+
+    def comm_cost_seconds(self, plan: PlacementPlan,
+                          freqs: np.ndarray) -> float:
+        """C(P) in seconds over the horizon (Eq. 2 × cost/invocation)."""
+        return (remote_cost(plan, freqs) / freqs.shape[0]
+                * self.tokens_per_horizon * self.remote_invocation_time())
+
+
+def migration_time(old: PlacementPlan, new: PlacementPlan,
+                   cost: CostModel) -> float:
+    """Eq. (3): bytes moved / IO speed, per changed placement entry."""
+    speeds = np.broadcast_to(np.asarray(cost.io_speed, float),
+                             (len(new.assign[0]),))
+    t = 0.0
+    for l, (lo, ln) in enumerate(zip(old.assign, new.assign)):
+        for n, (ao, an) in enumerate(zip(lo, ln)):
+            added = set(an) - set(ao)
+            t += len(added) * cost.expert_bytes / speeds[n]
+    return t
+
+
+def should_migrate(old: PlacementPlan, new: PlacementPlan,
+                   freqs: np.ndarray, cost: CostModel
+                   ) -> tuple[bool, dict]:
+    """Eq. (4) decision. Returns (adopt?, diagnostics)."""
+    c_old = cost.comm_cost_seconds(old, freqs)
+    c_new = cost.comm_cost_seconds(new, freqs)
+    t_mig = migration_time(old, new, cost)
+    return c_new + t_mig < c_old, {
+        "C_old": c_old, "C_new": c_new, "T_mig": t_mig,
+        "gain": c_old - c_new - t_mig,
+    }
+
+
+@dataclasses.dataclass
+class MigrationController:
+    """Periodic placement review: re-run the placement pipeline on fresh
+    stats and adopt the candidate only when Eq. (4) holds."""
+    placement_fn: callable              # freqs -> PlacementPlan
+    cost: CostModel
+    interval: float = 300.0             # paper: every 5 minutes
+    current: PlacementPlan | None = None
+    last_review: float = 0.0
+    history: list = dataclasses.field(default_factory=list)
+
+    def maybe_migrate(self, now: float, freqs: np.ndarray
+                      ) -> tuple[PlacementPlan, bool]:
+        if self.current is None:
+            self.current = self.placement_fn(freqs)
+            self.last_review = now
+            return self.current, True
+        if now - self.last_review < self.interval:
+            return self.current, False
+        self.last_review = now
+        candidate = self.placement_fn(freqs)
+        adopt, diag = should_migrate(self.current, candidate, freqs,
+                                     self.cost)
+        diag["time"] = now
+        diag["adopted"] = adopt
+        self.history.append(diag)
+        if adopt:
+            self.current = candidate
+        return self.current, adopt

@@ -1,0 +1,41 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each op auto-selects interpret mode on CPU (the validation environment) and
+compiles the real TPU kernel otherwise; the pure-jnp oracles live in
+``ref.py`` and every kernel is swept against them in tests/.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.moe_gmm import moe_gmm as _gmm
+from repro.kernels.ssm_scan import ssm_scan as _scan
+
+
+def moe_gmm(x, w1, w3, w2, **kw):
+    """Grouped expert FFN [S, C, D] -> [S, C, D] (used by the EP MoE layer)."""
+    return _gmm(x, w1, w3, w2, **kw)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, **kw):
+    """Multi-head attention on [B, T, H, hd] with grouped KV [B, S, KVH, hd].
+
+    Reshapes to the kernel's [BH, T, hd] layout and expands KV to the q
+    heads (fused by XLA/Mosaic)."""
+    B, Tq, H, hd = q.shape
+    kvh = k.shape[2]
+    grp = H // kvh
+    kx = jnp.repeat(k, grp, axis=2)
+    vx = jnp.repeat(v, grp, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Tq, hd)
+    kf = kx.transpose(0, 2, 1, 3).reshape(B * H, -1, hd)
+    vf = vx.transpose(0, 2, 1, 3).reshape(B * H, -1, hd)
+    o = _flash(qf, kf, vf, causal=causal, window=window, **kw)
+    return o.reshape(B, H, Tq, hd).transpose(0, 2, 1, 3)
+
+
+def ssm_scan(x, dt, Bs, Cs, A, D, **kw):
+    """Fused Mamba-1 selective scan (used by the SSM block)."""
+    return _scan(x, dt, Bs, Cs, A, D, **kw)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def moe_gmm_ref(x, w1, w3, w2):
+    """Grouped expert FFN. x: [S, C, D]; w1/w3: [S, D, F]; w2: [S, F, D]."""
+    a = jnp.einsum("scd,sdf->scf", x, w1)
+    b = jnp.einsum("scd,sdf->scf", x, w3)
+    mid = (jax.nn.silu(a.astype(jnp.float32))
+           * b.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("scf,sfd->scd", mid, w2)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: [BH, Tq, hd]; k, v: [BH, Tk, hd] (kv already expanded to q heads).
+    Returns [BH, Tq, hd]."""
+    Tq, Tk = q.shape[1], k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (q.shape[-1] ** -0.5)
+    qpos = jnp.arange(Tq)[:, None]
+    kpos = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssm_scan_ref(x, dt, Bs, Cs, A, D):
+    """Mamba-1 selective scan.
+    x, dt: [B, T, d]; Bs, Cs: [B, T, N]; A: [d, N]; D: [d].
+    Returns y: [B, T, d] (fp32 math, cast to x.dtype)."""
+    B, T, d = x.shape
+    N = Bs.shape[-1]
+    a = jnp.exp(dt.astype(jnp.float32)[..., None] * A[None, None])  # [B,T,d,N]
+    b = (dt * x).astype(jnp.float32)[..., None] * \
+        Bs.astype(jnp.float32)[:, :, None, :]
+
+    def step(h, ab):
+        at, bt, ct = ab
+        h = at * h + bt
+        y = (h * ct[:, None, :]).sum(-1)
+        return h, y
+
+    h0 = jnp.zeros((B, d, N), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0, (a.transpose(1, 0, 2, 3), b.transpose(1, 0, 2, 3),
+                   Cs.astype(jnp.float32).transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2) + D.astype(jnp.float32) * x.astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+Target: TPU v5e, 256 chips/pod. Single-pod mesh (16, 16) = ("data",
+"model"); multi-pod (2, 16, 16) = ("pod", "data", "model"). Functions, not
+module constants — importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (possibly fake) devices exist."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+# v5e hardware constants used by the roofline analysis
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (~per-chip injection)
+CHIPS_PER_POD = 256

@@ -1,0 +1,282 @@
+"""GQA attention: flash-style chunked prefill/train + KV-cache decode.
+
+Head padding: q heads are padded to ``H_pad`` (next multiple of the model
+axis) with zero projection rows so every assigned architecture shards evenly
+over a 16-wide model axis. KV stays at its true head count and is expanded
+(``jnp.repeat``) right before the score einsum — XLA fuses the expansion, so
+neither HBM bytes nor collective bytes grow.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import apply_rope, dense_init, rms_norm
+
+NEG_INF = -1e30
+
+
+def attn_params(key, cfg, ep: int, dtype=jnp.float32) -> dict:
+    d, hd, kvh = cfg.d_model, cfg.hd, cfg.num_kv_heads
+    hp = cfg.padded_heads(ep)
+    ks = jax.random.split(key, 5)
+    wq = dense_init(ks[0], (d, hp * hd), 0, dtype)
+    # zero the padded head rows so padding is function-preserving
+    if hp != cfg.num_heads:
+        mask = (jnp.arange(hp * hd) < cfg.num_heads * hd).astype(dtype)
+        wq = wq * mask
+    p = {
+        "norm": jnp.ones((d,), dtype),
+        "wq": wq,
+        "wk": dense_init(ks[1], (d, kvh * hd), 0, dtype),
+        "wv": dense_init(ks[2], (d, kvh * hd), 0, dtype),
+        "wo": dense_init(ks[3], (hp * hd, d), 0, dtype),
+    }
+    if cfg.use_qkv_bias:
+        p["bq"] = jnp.zeros((hp * hd,), dtype)
+        p["bk"] = jnp.zeros((kvh * hd,), dtype)
+        p["bv"] = jnp.zeros((kvh * hd,), dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg, ep):
+    hd, kvh = cfg.hd, cfg.num_kv_heads
+    hp = cfg.padded_heads(ep)
+    q = x @ p["wq"] + (p.get("bq", 0.0))
+    k = x @ p["wk"] + (p.get("bk", 0.0))
+    v = x @ p["wv"] + (p.get("bv", 0.0))
+    B, T = x.shape[:2]
+    return (q.reshape(B, T, hp, hd), k.reshape(B, T, kvh, hd),
+            v.reshape(B, T, kvh, hd))
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int = 0,
+                      q_offset: Any = 0, chunk: int = 512) -> jax.Array:
+    """Flash-style attention via a scan over KV chunks (O(T·chunk) memory).
+
+    q: [B, Tq, H, hd]; k,v: [B, Tk, KVH, hd] with H % KVH == 0.
+    ``window`` > 0 restricts to a sliding window (q attends to keys within
+    the last `window` positions, inclusive of self).
+    """
+    B, Tq, H, hd = q.shape
+    Tk, kvh = k.shape[1], k.shape[2]
+    grp = H // kvh
+    nchunks = -(-Tk // chunk)
+    pad = nchunks * chunk - Tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, nchunks, chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nchunks, chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+    scale = hd ** -0.5
+    q32 = (q * scale).astype(q.dtype)
+    qpos = jnp.arange(Tq) + q_offset                       # [Tq]
+
+    def body(carry, xs):
+        m, l, acc = carry
+        ci, kci, vci = xs
+        kpos = ci * chunk + jnp.arange(chunk)              # [chunk]
+        kex = jnp.repeat(kci, grp, axis=2)                 # [B, c, H, hd]
+        s = jnp.einsum("bqhd,bkhd->bhqk", q32, kex,
+                       preferred_element_type=jnp.float32)  # [B,H,Tq,c]
+        mask = kpos[None, :] < Tk                           # pad mask
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        vex = jnp.repeat(vci, grp, axis=2)
+        pv = jnp.einsum("bhqk,bkhd->bqhd", p.astype(q.dtype), vex,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr.transpose(0, 2, 1)[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Tq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Tq), jnp.float32)
+    a0 = jnp.zeros((B, Tq, H, hd), jnp.float32)
+    (m, l, acc), _ = lax.scan(
+        body, (m0, l0, a0), (jnp.arange(nchunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# int8 KV-cache quantization (beyond-paper: halves the decode memory term)
+# ---------------------------------------------------------------------------
+
+def quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-(position, head) symmetric int8. x: [B, T, KVH, hd]."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0 + 1e-8
+    q8 = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q8.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q8: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q8.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, *, ring: bool = False,
+                     mesh=None, seq_sharded: bool = False) -> jax.Array:
+    """Single-token attention against a cache.
+
+    q: [B, 1, H, hd]; caches: [B, S, KVH, hd]. `pos` is the current absolute
+    position (already written to the cache). With ``ring=True`` the cache is
+    a sliding-window ring buffer: every entry older than `pos - S` has been
+    overwritten, so validity is `entry_age < S` via the stored slot index.
+    """
+    B, S, kvh, hd = k_cache.shape
+    H = q.shape[2]
+    grp = H // kvh
+    kex = jnp.repeat(k_cache, grp, axis=2)                 # [B,S,H,hd] (fused)
+    vex = jnp.repeat(v_cache, grp, axis=2)
+    if mesh is not None:
+        # flash-decoding layout: kv stays sequence-sharded (matching the
+        # cache), scores/softmax combine over the seq axes via small psums —
+        # otherwise the partitioner reshards the whole cache per layer
+        from jax.sharding import PartitionSpec
+        from repro.models import sharding as _sh
+        b = tuple(a for a in mesh.axis_names if a != "model")
+        seq_axes = (b + ("model",)) if seq_sharded else "model"
+        bb = None if seq_sharded else b
+        kex = _sh.constrain(mesh, kex, PartitionSpec(bb, seq_axes, None, None))
+        vex = _sh.constrain(mesh, vex, PartitionSpec(bb, seq_axes, None, None))
+    s = jnp.einsum("bqhd,bkhd->bhqk", (q * hd ** -0.5), kex,
+                   preferred_element_type=jnp.float32)      # [B,H,1,S]
+    idx = jnp.arange(S)
+    if ring:
+        # slot i currently holds absolute position: the latest p <= pos with
+        # p % S == i. All S slots are valid once pos >= S - 1.
+        slot_pos = pos - ((pos - idx) % S)
+        valid = slot_pos >= 0
+    else:
+        valid = idx <= pos
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(q.dtype), vex,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full attention sublayer (norm -> qkv -> rope -> attn -> out proj)
+# ---------------------------------------------------------------------------
+
+def attn_apply(p, cfg, x, *, ep: int, mode: str, cache=None, pos=None,
+               window: int = 0, norm_eps: float = 1e-5,
+               use_kernel: bool = False, mesh=None, cache_seq_sharded=False,
+               residual: bool = True, gather_kv: bool = False):
+    """Returns (out, new_cache). Cache layout: dict(k, v) [B, S, KVH, hd].
+
+    mode: 'train' | 'prefill' | 'decode'. For prefill the cache to fill is
+    passed pre-allocated (zeros) in `cache`; for train cache is None.
+    """
+    B, T = x.shape[:2]
+    h = rms_norm(x, p["norm"], norm_eps)
+    q, k, v = _project_qkv(p, h, cfg, ep)
+    if mode == "decode":
+        positions = jnp.full((B, 1), pos)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    def _attn(qq, kk, vv):
+        if use_kernel and qq.shape[1] % 128 == 0 and kk.shape[1] % 128 == 0:
+            from repro.kernels.ops import flash_attention
+            return flash_attention(qq, kk, vv, causal=True, window=window)
+        return chunked_attention(qq, kk, vv, causal=True, window=window)
+
+    new_cache = None
+    kv_quant = cache is not None and "k_scale" in cache
+    if mode == "train" and gather_kv and mesh is not None:
+        # context-parallel: q stays sequence-sharded, kv gathered (small —
+        # grouped kv heads make this far cheaper than activation all-reduce)
+        from jax.sharding import PartitionSpec
+        from repro.models import sharding as _sh
+        b = tuple(a for a in mesh.axis_names if a != "model")
+        k = _sh.constrain(mesh, k, PartitionSpec(b, None, None, None))
+        v = _sh.constrain(mesh, v, PartitionSpec(b, None, None, None))
+        from jax.ad_checkpoint import checkpoint_name
+        k = checkpoint_name(k, "kv_gathered")   # saveable across remat
+        v = checkpoint_name(v, "kv_gathered")
+    if mode != "train":
+        if not kv_quant:
+            k = k.astype(cache["k"].dtype)
+            v = v.astype(cache["v"].dtype)
+        if mesh is not None:
+            # match the cache layout BEFORE the cache update: k/v leave the
+            # projection sharded over (kvh*hd) on the model axis, and GSPMD
+            # would otherwise reshard (all-gather) the whole cache per layer
+            from jax.sharding import PartitionSpec
+            from repro.models import sharding as _sh
+            b = tuple(a for a in mesh.axis_names if a != "model")
+            spec = PartitionSpec(b if not cache_seq_sharded else None,
+                                 None, None, None)
+            k = _sh.constrain(mesh, k, spec)
+            v = _sh.constrain(mesh, v, spec)
+    def _store(kk, vv):
+        """Quantize (optionally) and return cache-layout tensors."""
+        if not kv_quant:
+            return {"k": kk, "v": vv}
+        k8, ks_ = quantize_kv(kk)
+        v8, vs_ = quantize_kv(vv)
+        return {"k": k8, "v": v8, "k_scale": ks_, "v_scale": vs_}
+
+    if mode == "train":
+        out = _attn(q, k, v)
+    elif mode == "prefill":
+        out = _attn(q, k.astype(q.dtype), v.astype(q.dtype))
+        S = cache["k"].shape[1]
+        if S < T:   # ring cache: keep only the last S, rotated to p % S
+            shift = (T - S) % S
+            k = jnp.roll(k[:, T - S:], shift, axis=1)
+            v = jnp.roll(v[:, T - S:], shift, axis=1)
+        entry = _store(k, v)
+        new_cache = {key: lax.dynamic_update_slice(
+            cache[key], val.astype(cache[key].dtype),
+            (0,) * cache[key].ndim) for key, val in entry.items()}
+    elif mode == "decode":
+        S = cache["k"].shape[1]
+        ring = window > 0  # windowed cache is a ring buffer (S == window)
+        slot = (pos % S) if ring else pos
+        entry = _store(k, v)
+        new_cache = {key: lax.dynamic_update_slice(
+            cache[key], val.astype(cache[key].dtype),
+            (0, slot) + (0,) * (cache[key].ndim - 2))
+            for key, val in entry.items()}
+        if kv_quant:
+            kc = dequantize_kv(new_cache["k"], new_cache["k_scale"], q.dtype)
+            vc = dequantize_kv(new_cache["v"], new_cache["v_scale"], q.dtype)
+        else:
+            kc, vc = new_cache["k"], new_cache["v"]
+        out = decode_attention(q, kc, vc, pos, ring=ring, mesh=mesh,
+                               seq_sharded=cache_seq_sharded)
+    else:
+        raise ValueError(mode)
+    hp, hd = cfg.padded_heads(ep), cfg.hd
+    out = out.reshape(B, T, hp * hd) @ p["wo"]
+    return (x + out if residual else out), new_cache
+
+
+def init_attn_cache(cfg, batch: int, seq_len: int, *, window: int = 0,
+                    dtype=jnp.bfloat16, quantized: bool = False) -> dict:
+    S = min(window, seq_len) if window else seq_len
+    kvh, hd = cfg.num_kv_heads, cfg.hd
+    if quantized:
+        return {"k": jnp.zeros((batch, S, kvh, hd), jnp.int8),
+                "v": jnp.zeros((batch, S, kvh, hd), jnp.int8),
+                "k_scale": jnp.zeros((batch, S, kvh, 1), jnp.bfloat16),
+                "v_scale": jnp.zeros((batch, S, kvh, 1), jnp.bfloat16)}
+    return {"k": jnp.zeros((batch, S, kvh, hd), dtype),
+            "v": jnp.zeros((batch, S, kvh, hd), dtype)}

@@ -1,0 +1,182 @@
+"""Sharding rules: parameter and cache PartitionSpecs for the production
+mesh. Convention: tensor/expert-parallel axis is named ``model``; remaining
+axes (``pod``, ``data``) shard the batch (and the sequence for long-context
+decode)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+M = "model"
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != M)
+
+
+# per-leaf specs for each block kind (unstacked; scan groups prepend None)
+_ATTN = {
+    "norm": P(), "wq": P(None, M), "wk": P(None, M), "wv": P(None, M),
+    "wo": P(M, None), "bq": P(M), "bk": P(M), "bv": P(M),
+}
+_MLP = {"norm": P(), "w1": P(None, M), "w3": P(None, M), "w2": P(M, None)}
+_MAMBA1 = {
+    "norm": P(), "in_proj": P(None, M), "conv_w": P(M, None), "conv_b": P(M),
+    "x_proj": P(M, None), "dt_proj": P(None, M), "dt_bias": P(M),
+    "A_log": P(M, None), "D": P(M), "out_proj": P(M, None),
+}
+_MAMBA2 = {
+    "norm": P(), "in_zx": P(None, M), "in_bc": P(), "in_dt": P(None, M),
+    "conv_w": P(M, None), "conv_b": P(M), "conv_bc_w": P(), "conv_bc_b": P(),
+    "dt_bias": P(M), "A_log": P(M), "D": P(M), "gnorm": P(M),
+    "out_proj": P(M, None),
+}
+
+
+def _moe_specs(ep_axes) -> dict:
+    e = tuple(ep_axes)
+    return {"norm": P(), "router": P(),
+            "w1": P(e, None, None, None), "w3": P(e, None, None, None),
+            "w2": P(e, None, None, None)}
+
+
+def _moe_dense_specs() -> dict:
+    return {"norm": P(), "router": P(),
+            "w1": P(None, None, M), "w3": P(None, None, M),
+            "w2": P(None, M, None)}
+
+
+def block_pspecs(kind: str, *, moe_impl: str = "ep",
+                 ep_axes=("model",)) -> dict:
+    from repro.configs.base import ATTN, MLP, MOE, MAMBA1, MAMBA2, SHARED_ATTN
+    if kind in (ATTN, SHARED_ATTN):
+        return dict(_ATTN)
+    if kind == MLP:
+        return dict(_MLP)
+    if kind == MOE:
+        return _moe_specs(ep_axes) if moe_impl == "ep" else _moe_dense_specs()
+    if kind == MAMBA1:
+        return dict(_MAMBA1)
+    if kind == MAMBA2:
+        return dict(_MAMBA2)
+    raise ValueError(kind)
+
+
+def _prepend(spec: P) -> P:
+    return P(*((None,) + tuple(spec)))
+
+
+def _replicate_all(tree):
+    return jax.tree.map(lambda s: P(), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_pspecs(rt) -> dict:
+    """PartitionSpec tree mirroring ``init_params`` output. Layout 'cp'
+    (context-parallel) replicates every weight; parallelism then comes from
+    batch (data) x sequence (model) activation sharding."""
+    cfg = rt.cfg
+    pattern, _ = cfg.layer_pattern()
+    groups = {}
+    for i, kind in enumerate(pattern):
+        from repro.configs.base import SHARED_ATTN
+        if kind == SHARED_ATTN:
+            continue
+        blk = block_pspecs(kind, moe_impl=rt.moe_impl, ep_axes=rt.ep_axes)
+        groups[f"b{i}"] = {k: _prepend(v) for k, v in blk.items()}
+    out = {
+        "embed": P(M, None),
+        "final_norm": P(),
+        "groups": groups,
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = P(None, M)
+    from repro.configs.base import SHARED_ATTN
+    if SHARED_ATTN in pattern:
+        out["shared_attn"] = dict(_ATTN)
+    if getattr(rt, "layout", "tp") == "cp":
+        return _replicate_all(out)
+    if getattr(rt, "layout", "tp") == "fsdp":
+        # vocab-sharded embedding would be gathered WHOLE per lookup when
+        # the token stream is sequence-sharded (measured: 4.1 GB/step on
+        # llama4); shard d_model instead — lookups stay local, only the
+        # [*, D] result needs a (6x smaller) gather
+        out["embed"] = P(None, M)
+        if "lm_head" in out:
+            out["lm_head"] = P(M, None)
+    return out
+
+
+def _prune_to(params, specs):
+    """Keep only spec entries whose param exists (e.g. optional biases)."""
+    if isinstance(params, dict):
+        return {k: _prune_to(params[k], specs[k]) for k in params}
+    return specs
+
+
+def pspecs_for(rt, params) -> dict:
+    return _prune_to(params, param_pspecs(rt))
+
+
+def cache_pspecs(rt, *, seq_sharded: bool = False) -> dict:
+    """Spec tree mirroring ``init_cache`` output (leading group dim on all)."""
+    from repro.configs.base import ATTN, MAMBA1, MAMBA2, SHARED_ATTN
+    cfg = rt.cfg
+    pattern, _ = cfg.layer_pattern()
+    b = tuple(a for a in rt.mesh.axis_names if a != M) if rt.mesh else ()
+    if seq_sharded:
+        # long-context, batch=1: flash-decoding over the whole mesh
+        seq_axes = tuple(b) + (M,)
+        kv_spec = P(None, None, seq_axes, None, None)
+    else:
+        # batch over data axes, sequence over model (flash-decoding):
+        # 16x less cache per chip and no per-layer cache resharding
+        kv_spec = P(None, b, M, None, None)
+    attn_spec = {"k": kv_spec, "v": kv_spec}
+    if getattr(rt, "kv_quant", False):
+        attn_spec["k_scale"] = kv_spec
+        attn_spec["v_scale"] = kv_spec
+    m1 = {"conv": P(None, b, None, M), "ssm": P(None, b, M, None)}
+    m2 = {"conv_x": P(None, b, None, M), "conv_bc": P(None, b, None, None),
+          "ssm": P(None, b, M, None, None)}
+    out = {}
+    for i, kind in enumerate(pattern):
+        if kind in (ATTN, SHARED_ATTN):
+            out[f"b{i}"] = dict(attn_spec)
+        elif kind == MAMBA1:
+            out[f"b{i}"] = dict(m1)
+        elif kind == MAMBA2:
+            out[f"b{i}"] = dict(m2)
+    return out
+
+
+def shardings(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _feasible_spec(mesh, shape, spec: P) -> P:
+    """Drop sharding on any dim the array size can't evenly divide."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    spec = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    for dim, s in zip(shape, spec):
+        if s is None:
+            out.append(None)
+            continue
+        axes = (s,) if isinstance(s, str) else tuple(s)
+        n = 1
+        for a in axes:
+            n *= sizes[a]
+        out.append(s if (dim % n == 0 and dim >= n) else None)
+    return P(*out)
+
+
+def constrain(mesh, tree, spec_tree):
+    """with_sharding_constraint with per-leaf feasibility fallback."""
+    def one(x, s):
+        sp = _feasible_spec(mesh, x.shape, s)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, sp))
+    return jax.tree.map(one, tree, spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

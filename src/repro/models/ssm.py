@@ -1,0 +1,243 @@
+"""State-space blocks: Mamba-1 (selective scan) and Mamba-2 (SSD, scalar
+per-head decay). Train/prefill run a chunked associative scan over time;
+decode is an O(1) recurrent state update (no KV cache).
+
+Distribution: the channel dimension d_inner shards over the `model` axis;
+the recurrent state [B, d_inner(, ...), N] inherits that sharding, so the
+time scan is embarrassingly parallel across chips (the paper's technique
+is inapplicable to attention-free archs — see DESIGN §Arch-applicability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import causal_conv1d, dense_init, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# Generic chunked linear scan:  h_t = a_t * h_{t-1} + b_t
+# ---------------------------------------------------------------------------
+
+def linear_scan(a: jax.Array, b: jax.Array, h0: jax.Array,
+                chunk: int = 256) -> tuple[jax.Array, jax.Array]:
+    """a, b: [B, T, ...]; h0: [B, ...]. Returns (h per step [B,T,...], h_T).
+
+    Runs an associative scan within chunks and a sequential scan across
+    chunks, bounding peak memory at [B, chunk, ...].
+    """
+    B, T = b.shape[:2]
+    nchunks = -(-T // chunk)
+    pad = nchunks * chunk - T
+    if pad:
+        a = jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2),
+                    constant_values=1.0)
+        b = jnp.pad(b, [(0, 0), (0, pad)] + [(0, 0)] * (b.ndim - 2))
+    ac = a.reshape((B, nchunks, chunk) + a.shape[2:]).transpose(
+        (1, 0, 2) + tuple(range(3, a.ndim + 1)))
+    bc = b.reshape((B, nchunks, chunk) + b.shape[2:]).transpose(
+        (1, 0, 2) + tuple(range(3, b.ndim + 1)))
+
+    def combine(x, y):
+        (a1, b1), (a2, b2) = x, y
+        return a1 * a2, a2 * b1 + b2
+
+    def body(h, xs):
+        aci, bci = xs  # [B, chunk, ...]
+        a_acc, b_acc = lax.associative_scan(combine, (aci, bci), axis=1)
+        hs = a_acc * h[:, None] + b_acc
+        return hs[:, -1], hs
+
+    hT, hs = lax.scan(body, h0, (ac, bc))
+    hs = hs.transpose((1, 0, 2) + tuple(range(3, b.ndim + 1)))
+    hs = hs.reshape((B, nchunks * chunk) + b.shape[2:])[:, :T]
+    return hs, hT
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+
+def mamba1_params(key, cfg, dtype=jnp.float32) -> dict:
+    d, di, n, ck = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    dtr = max(di // 16, 1)
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "in_proj": dense_init(ks[0], (d, 2 * di), 0, dtype),
+        "conv_w": dense_init(ks[1], (di, ck), 1, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * n), 0, dtype),
+        "dt_proj": dense_init(ks[3], (dtr, di), 0, dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),  # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[4], (di, d), 0, dtype),
+    }
+
+
+def _mamba1_core(p, cfg, x, conv_in, h0, *, single_step: bool,
+                 use_kernel: bool = False):
+    """Shared math. x: [B, T, di] post-in_proj gate split; conv_in: [B, T', di]
+    window including left context. Returns (y, hT, new_conv_tail)."""
+    di, n = cfg.d_inner, cfg.ssm_state
+    dtr = max(di // 16, 1)
+    xc = jax.nn.silu(causal_conv1d(conv_in, p["conv_w"], p["conv_b"]))
+    xc = xc[:, -x.shape[1]:]                              # drop left context
+    proj = xc @ p["x_proj"]
+    dt_raw, Bs, Cs = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw @ p["dt_proj"] + p["dt_bias"])  # [B,T,di]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                # [di,n]
+    if use_kernel and not single_step and xc.shape[1] % 32 == 0 \
+            and di % 128 == 0:
+        from repro.kernels.ops import ssm_scan
+        y = ssm_scan(xc, dt, Bs, Cs, A, p["D"].astype(jnp.float32),
+                     bd=min(256, di), bt=32)
+        # the fused kernel does not emit the final state; only usable when
+        # the caller discards it (training)
+        return y, h0, xc
+    a = jnp.exp(dt.astype(jnp.float32)[..., None] * A)          # [B,T,di,n]
+    b = (dt * xc).astype(jnp.float32)[..., None] * \
+        Bs.astype(jnp.float32)[..., None, :]                    # [B,T,di,n]
+    if single_step:
+        hT = a[:, 0] * h0 + b[:, 0]
+        hs = hT[:, None]
+    else:
+        hs, hT = linear_scan(a, b, h0)
+    y = jnp.einsum("btdn,btn->btd", hs, Cs.astype(jnp.float32))
+    y = (y + p["D"].astype(jnp.float32) * xc.astype(jnp.float32)).astype(x.dtype)
+    return y, hT, xc
+
+
+def mamba1_apply(p, cfg, x, *, mode: str, cache=None, norm_eps: float = 1e-5,
+                 use_kernel: bool = False):
+    """x: [B, T, D]. cache: {'conv': [B, ck-1, di], 'ssm': [B, di, n]}."""
+    B, T = x.shape[:2]
+    di, ck, n = cfg.d_inner, cfg.ssm_conv, cfg.ssm_state
+    h = rms_norm(x, p["norm"], norm_eps)
+    xz = h @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    if mode == "train":
+        h0 = jnp.zeros((B, di, n), jnp.float32)
+        y, _, _ = _mamba1_core(p, cfg, xi, xi, h0, single_step=False,
+                               use_kernel=use_kernel)
+        new_cache = None
+    elif mode == "prefill":
+        h0 = jnp.zeros((B, di, n), jnp.float32)
+        y, hT, _ = _mamba1_core(p, cfg, xi, xi, h0, single_step=False)
+        conv_tail = _conv_tail(xi, ck)
+        new_cache = {"conv": conv_tail, "ssm": hT}
+    elif mode == "decode":
+        conv_in = jnp.concatenate([cache["conv"].astype(xi.dtype), xi], axis=1)
+        y, hT, _ = _mamba1_core(p, cfg, xi, conv_in, cache["ssm"],
+                                single_step=True)
+        new_cache = {"conv": conv_in[:, 1:], "ssm": hT}
+    else:
+        raise ValueError(mode)
+    y = y * jax.nn.silu(z)
+    return x + y @ p["out_proj"], new_cache
+
+
+def _conv_tail(x, ck):
+    """Last ck-1 inputs (left-padded with zeros if T < ck-1)."""
+    B, T, C = x.shape
+    if T >= ck - 1:
+        return x[:, T - (ck - 1):]
+    return jnp.pad(x, ((0, 0), (ck - 1 - T, 0), (0, 0)))
+
+
+def init_mamba1_cache(cfg, batch: int, dtype=jnp.bfloat16) -> dict:
+    return {"conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+            "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD: scalar decay per head)
+# ---------------------------------------------------------------------------
+
+def mamba2_params(key, cfg, dtype=jnp.float32) -> dict:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh, ck = cfg.ssm_heads, cfg.ssm_conv
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "in_zx": dense_init(ks[0], (d, 2 * di), 0, dtype),
+        "in_bc": dense_init(ks[1], (d, 2 * n), 0, dtype),
+        "in_dt": dense_init(ks[2], (d, nh), 0, dtype),
+        "conv_w": dense_init(ks[3], (di, ck), 1, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "conv_bc_w": dense_init(ks[4], (2 * n, ck), 1, dtype),
+        "conv_bc_b": jnp.zeros((2 * n,), dtype),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "A_log": jnp.zeros((nh,), dtype),
+        "D": jnp.ones((nh,), dtype),
+        "gnorm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[5], (di, d), 0, dtype),
+    }
+
+
+def _mamba2_core(p, cfg, xi, bc, dt_raw, h0, *, single_step: bool):
+    """xi: [B,T,di] (post conv+silu), bc: [B,T,2n] (post conv), dt_raw [B,T,nh].
+    State h: [B, nh, hd, n]."""
+    n, nh, hd = cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    B, T = xi.shape[:2]
+    Bs, Cs = jnp.split(bc.astype(jnp.float32), 2, axis=-1)       # [B,T,n]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # [nh]
+    a = jnp.exp(dt * A)                                          # [B,T,nh]
+    xh = xi.astype(jnp.float32).reshape(B, T, nh, hd)
+    b = (dt[..., None, None] * xh[..., None]) * Bs[:, :, None, None, :]
+    #     [B,T,nh,hd,n]
+    a_b = a[..., None, None]                                     # [B,T,nh,1,1]
+    if single_step:
+        hT = a_b[:, 0] * h0 + b[:, 0]
+        hs = hT[:, None]
+    else:
+        hs, hT = linear_scan(jnp.broadcast_to(a_b, b.shape), b, h0)
+    y = jnp.einsum("bthdn,btn->bthd", hs, Cs)
+    y = y + p["D"].astype(jnp.float32)[:, None] * xh
+    return y.reshape(B, T, nh * hd).astype(xi.dtype), hT
+
+
+def mamba2_apply(p, cfg, x, *, mode: str, cache=None, norm_eps: float = 1e-5):
+    B, T = x.shape[:2]
+    di, n, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    ck = cfg.ssm_conv
+    h = rms_norm(x, p["norm"], norm_eps)
+    zx = h @ p["in_zx"]
+    z, xi = jnp.split(zx, 2, axis=-1)
+    bc = h @ p["in_bc"]
+    dt_raw = h @ p["in_dt"]
+    if mode == "decode":
+        conv_x_in = jnp.concatenate([cache["conv_x"].astype(xi.dtype), xi], 1)
+        conv_bc_in = jnp.concatenate([cache["conv_bc"].astype(bc.dtype), bc], 1)
+        h0 = cache["ssm"]
+    else:
+        conv_x_in, conv_bc_in = xi, bc
+        h0 = jnp.zeros((B, nh, hd, n), jnp.float32)
+    xc = jax.nn.silu(causal_conv1d(conv_x_in, p["conv_w"], p["conv_b"]))[:, -T:]
+    bcc = causal_conv1d(conv_bc_in, p["conv_bc_w"], p["conv_bc_b"])[:, -T:]
+    y, hT = _mamba2_core(p, cfg, xc, bcc, dt_raw, h0,
+                         single_step=(mode == "decode"))
+    y = rms_norm(y * jax.nn.silu(z), p["gnorm"], norm_eps)
+    out = y @ p["out_proj"]
+    if mode == "train":
+        new_cache = None
+    elif mode == "prefill":
+        new_cache = {"conv_x": _conv_tail(xi, ck), "conv_bc": _conv_tail(bc, ck),
+                     "ssm": hT}
+    else:
+        new_cache = {"conv_x": conv_x_in[:, 1:], "conv_bc": conv_bc_in[:, 1:],
+                     "ssm": hT}
+    return x + out, new_cache
+
+
+def init_mamba2_cache(cfg, batch: int, dtype=jnp.bfloat16) -> dict:
+    return {
+        "conv_x": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "conv_bc": jnp.zeros((batch, cfg.ssm_conv - 1, 2 * cfg.ssm_state), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                          cfg.ssm_state), jnp.float32),
+    }

@@ -1,0 +1,126 @@
+"""Optimizers, pure-pytree (no optax dependency).
+
+* ``adamw``    — standard AdamW, used by the small training examples.
+* ``adafactor``— factored second moments (Shazeer & Stern), used by the
+  production dry-run train steps: at 100B+ parameters on 16 GB/chip v5e,
+  unfactored fp32 Adam moments alone exceed HBM — factored states are the
+  standard TPU memory adaptation (noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]  # (g, state, p) ->
+                                                        # (new_p, new_state)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(s < warmup, warm, cos)
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g2 = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(g2)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+def adamw(lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01,
+          schedule=None) -> Optimizer:
+    lr_fn = schedule if schedule is not None else (lambda s: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / (1 - b1 ** step.astype(jnp.float32))
+            vh = v / (1 - b2 ** step.astype(jnp.float32))
+            delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * \
+                p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), \
+                m, v
+
+        flat = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_p = jax.tree.map(lambda t: t[0], flat,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], flat,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], flat,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v, "step": step}
+
+    return Optimizer(init=init, update=update)
+
+
+def adafactor(lr=1e-2, decay=0.8, eps=1e-30, clip_threshold=1.0,
+              schedule=None) -> Optimizer:
+    """Factored second-moment optimizer (memory ~ O(rows + cols))."""
+    lr_fn = schedule if schedule is not None else (lambda s: lr)
+
+    def _leaf_state(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    def init(params):
+        # per-leaf factored states as a flat list (leaf order of the tree)
+        return {"f": [_leaf_state(p) for p in jax.tree.leaves(params)],
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        beta = 1.0 - (step.astype(jnp.float32)) ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(-2)
+                denom = jnp.maximum(vr.mean(-1, keepdims=True), eps)
+                pre = (vr / denom)[..., None] * vc[..., None, :]
+                u = g * jax.lax.rsqrt(jnp.maximum(pre, eps))
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+                ns = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), ns
+
+        leaves_g, treedef = jax.tree.flatten(grads)
+        leaves_p = jax.tree.leaves(params)
+        outs = [upd(g, s, p)
+                for g, s, p in zip(leaves_g, state["f"], leaves_p)]
+        new_p = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        return new_p, {"f": [o[1] for o in outs], "step": step}
+
+    return Optimizer(init=init, update=update)

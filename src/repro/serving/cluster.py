@@ -1,0 +1,91 @@
+"""Edge-cluster description: heterogeneous servers, bandwidth, model profile.
+
+This is the faithful testbed model of the paper (Sec. IV): N servers with
+different GPU counts/memory/compute, linked by rate-limited networking
+(testbed: 500 Mbps via Linux tc). The event-driven simulator consumes it.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerSpec:
+    name: str
+    gpus: int = 1
+    mem_bytes: float = 16e9            # usable GPU memory for experts
+    compute_speed: float = 60e12       # effective FLOP/s for expert matmuls
+    io_speed: float = 8e9              # weight-load bytes/s (PCIe/NVMe)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    servers: tuple[ServerSpec, ...]
+    bandwidth: float = 500e6 / 8       # bytes/s between servers (500 Mbps)
+    rtt: float = 2e-3                  # per-remote-call latency (s)
+
+    @property
+    def n(self) -> int:
+        return len(self.servers)
+
+    def expert_capacity(self, expert_bytes: float) -> np.ndarray:
+        """Per-server total expert-slot budget (M_n / m_e of Algorithm 1)."""
+        return np.array([int(s.mem_bytes // expert_bytes)
+                         for s in self.servers])
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEProfile:
+    """Analytic per-token costs for one MoE model (drives the time model)."""
+    num_layers: int
+    num_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int
+    bytes_per_param: float = 2.0
+
+    @property
+    def expert_bytes(self) -> float:
+        return 3 * self.d_model * self.d_ff * self.bytes_per_param
+
+    @property
+    def expert_flops_per_token(self) -> float:
+        return 2 * 3 * self.d_model * self.d_ff
+
+    @property
+    def dense_flops_per_token(self) -> float:
+        # attention projections + attention math approximation per layer
+        return 2 * 4 * self.d_model * self.d_model
+
+    @property
+    def hidden_bytes_per_token(self) -> float:
+        return self.d_model * self.bytes_per_param
+
+    @staticmethod
+    def from_config(cfg) -> "MoEProfile":
+        return MoEProfile(num_layers=cfg.num_layers,
+                          num_experts=cfg.num_experts, top_k=cfg.top_k,
+                          d_model=cfg.d_model, d_ff=cfg.d_ff)
+
+
+def paper_testbed(mem_fraction: float = 1.0) -> ClusterSpec:
+    """The paper's testbed: 3 simulated edge servers with GPU allocations
+    1/1/2 (A100-40G), 500 Mbps interconnect. ``mem_fraction`` reproduces the
+    paper's artificial memory constraint (0.7 for Mixtral, 0.3 for
+    DeepSeek-V2-Lite)."""
+    return ClusterSpec(servers=(
+        ServerSpec("server1", gpus=1, mem_bytes=mem_fraction * 40e9,
+                   compute_speed=50e12),
+        ServerSpec("server2", gpus=1, mem_bytes=mem_fraction * 40e9,
+                   compute_speed=50e12),
+        ServerSpec("server3", gpus=2, mem_bytes=mem_fraction * 2 * 40e9,
+                   compute_speed=100e12),
+    ))
+
+
+MIXTRAL_PROFILE = MoEProfile(num_layers=32, num_experts=8, top_k=2,
+                             d_model=4096, d_ff=14336)
+DEEPSEEK_V2_LITE_PROFILE = MoEProfile(num_layers=26, num_experts=64, top_k=8,
+                                      d_model=2048, d_ff=1408)

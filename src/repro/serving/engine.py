@@ -1,0 +1,97 @@
+"""JAX serving engine: batched prefill + decode with the placement-aware EP
+MoE layer, activation-stats collection, and zero-recompile placement
+migration (the placement tables are jit arguments; migrating re-gathers the
+EP weight slots from the dense master copy — the on-device analogue of the
+paper's expert transfer)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.stats import ActivationStats
+from repro.models import moe as moe_mod
+from repro.models import transformer as tr
+
+
+@dataclasses.dataclass
+class ServingEngine:
+    rt: tr.Runtime
+    params: Any                        # EP-layout params (jit arg)
+    placement: Any                     # stacked EPPlacement [G, ...]
+    dense_master: Any = None           # dense expert weights (for migration)
+    max_len: int = 256
+
+    def __post_init__(self):
+        rt = self.rt
+        cfg = rt.cfg
+        _, self.n_groups = cfg.layer_pattern()
+        n_ep = rt.ep_spec.n_ep if rt.ep_spec else 1
+        self.stats = ActivationStats(self.n_groups, n_ep, cfg.num_experts)
+
+        def _prefill(params, tokens, placement):
+            return tr.prefill(rt, params, tokens=tokens, placement=placement,
+                              cache_len=self.max_len)
+
+        def _decode(params, cache, tokens, pos, placement):
+            return tr.decode_step(rt, params, cache, tokens, pos, placement)
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode)
+
+    # ------------------------------------------------------------------
+    def generate(self, tokens: np.ndarray, steps: int = 16,
+                 greedy: bool = True):
+        """tokens: [B, T] prompt. Returns (generated [B, steps], stats)."""
+        B, T = tokens.shape
+        assert T + steps <= self.max_len
+        logits, cache, mstats = self._prefill(self.params, jnp.asarray(tokens),
+                                              self.placement)
+        self._ingest(mstats, weight=T)
+        outs = []
+        cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        local_fracs = []
+        for i in range(steps):
+            outs.append(cur)
+            logits, cache, mstats = self._decode(
+                self.params, cache, cur, jnp.int32(T + i), self.placement)
+            self._ingest(mstats, weight=1)
+            if mstats is not None:
+                local_fracs.append(float(mstats["local_frac"].mean()))
+            cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        gen = jnp.concatenate(outs, axis=1)
+        return np.asarray(gen), {
+            "local_frac": float(np.mean(local_fracs)) if local_fracs else 1.0}
+
+    def _ingest(self, mstats, weight: float = 1.0):
+        if mstats is None:
+            return
+        counts = np.asarray(mstats["counts_per_rank"], np.float64)
+        self.stats.update(counts)
+
+    # ------------------------------------------------------------------
+    def migrate(self, new_placement_stacked) -> None:
+        """Adopt a new placement: re-gather EP expert slots from the dense
+        master weights (if available) and swap the tables. No recompile —
+        placement tables and weights are both jit arguments."""
+        self.placement = jax.tree.map(jnp.asarray, new_placement_stacked)
+        if self.dense_master is None:
+            return
+        groups = dict(self.params["groups"])
+        g_idx = 0
+        for k in sorted(groups):
+            if "router" not in groups[k]:
+                continue
+            dense = self.dense_master[k]          # stacked [G, E, ...]
+            per = []
+            for g in range(self.n_groups):
+                pl_g = jax.tree.map(lambda a: a[g], self.placement)
+                dp = jax.tree.map(lambda a: a[g], dense)
+                per.append(moe_mod.dense_to_ep(dp, pl_g))
+            groups[k] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+        params = dict(self.params)
+        params["groups"] = {**self.params["groups"], **groups}
+        self.params = params

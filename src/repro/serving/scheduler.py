@@ -1,0 +1,59 @@
+"""Global scheduler (paper Fig. 4, left): maintains the system-wide view —
+activation statistics per EP rank, placement strategy, and the migration
+policy — and drives the serving engine.
+
+The runtime reports gating statistics after every batch (``counts_per_rank``
+from the MoE layer); the scheduler periodically re-runs the placement
+pipeline and, when Eq. (4) favors it, instructs the engine to migrate."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core.migration import CostModel, should_migrate
+from repro.core.placement import PlacementPlan, build_ep_placement, \
+    dancemoe_placement
+from repro.serving.engine import ServingEngine
+
+
+@dataclasses.dataclass
+class GlobalScheduler:
+    engine: ServingEngine
+    capacity: np.ndarray                  # per-EP-rank slot budget
+    cost: CostModel
+    interval_batches: int = 8             # review period (batches ~ minutes)
+    placement_fn: Callable | None = None  # freqs -> PlacementPlan
+    current_plan: PlacementPlan | None = None
+    events: list = dataclasses.field(default_factory=list)
+    _batches: int = 0
+
+    def _place(self, freqs):
+        if self.placement_fn is not None:
+            return self.placement_fn(freqs)
+        slots = np.full(len(self.capacity), self.engine.rt.ep_spec.slots)
+        return dancemoe_placement(freqs, self.capacity, slots)
+
+    def after_batch(self) -> bool:
+        """Call once per served batch; returns True if a migration ran."""
+        self._batches += 1
+        if self._batches % self.interval_batches:
+            return False
+        freqs = self.engine.stats.freqs()
+        candidate = self._place(freqs)
+        if self.current_plan is None:
+            adopt, diag = True, {"reason": "initial"}
+        else:
+            adopt, diag = should_migrate(self.current_plan, candidate,
+                                         freqs, self.cost)
+        diag = dict(diag)
+        diag["batch"] = self._batches
+        diag["adopted"] = adopt
+        self.events.append(diag)
+        if adopt:
+            self.current_plan = candidate
+            stacked = build_ep_placement(candidate,
+                                         self.engine.rt.ep_spec.slots)
+            self.engine.migrate(stacked)
+        return adopt

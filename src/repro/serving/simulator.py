@@ -1,0 +1,187 @@
+"""Event-driven multi-server MoE inference simulator (paper Sec. IV).
+
+Five components, as in the paper's simulator description:
+  1. Prompt sequence generator  — Poisson arrivals + token volumes
+     (``repro.data.traces``).
+  2. Prompt routing generator   — samples per-layer expert activations from
+     the request's task profile and routes them under a placement plan.
+  3. Comm/comp time estimator   — linear per-token-batch model from the
+     cluster spec (bandwidth, RTT, FLOP rates, IO speed).
+  4. Time-stamp calculator      — per-layer Eq.-1 semantics: a layer
+     completes when its slowest expert invocation returns
+     (max over experts of comm + comp), on top of the dense-path time.
+  5. System timeline scheduler  — per-server FIFO occupancy plus
+     asynchronous remote-compute load on target servers; optional periodic
+     migration (Eq. 4) with per-server weight-loading pauses (Eq. 3).
+
+Also implements the paper's Table-I baselines: single-server memory
+offloading ("MoE-Infinity"-style), with and without request redirection.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.migration import MigrationController
+from repro.core.placement import PlacementPlan
+from repro.core.stats import ActivationStats
+from repro.data.traces import Workload, sample_expert_counts
+from repro.serving.cluster import ClusterSpec, MoEProfile
+
+
+@dataclasses.dataclass
+class SimResult:
+    latencies: np.ndarray            # per request
+    servers: np.ndarray              # per request
+    finish_times: np.ndarray
+    local_ratio_t: list              # (time, ratio) samples
+    migrations: list                 # diagnostics dicts
+    stats: ActivationStats
+
+    def avg_latency_per_server(self, n: int) -> np.ndarray:
+        return np.array([self.latencies[self.servers == i].mean()
+                         if (self.servers == i).any() else 0.0
+                         for i in range(n)])
+
+    @property
+    def avg_latency(self) -> float:
+        return float(self.latencies.mean())
+
+
+class EdgeSimulator:
+    def __init__(self, cluster: ClusterSpec, profile: MoEProfile,
+                 workload: Workload, plan: PlacementPlan | None = None,
+                 controller: MigrationController | None = None,
+                 mode: str = "collab", redirect: bool = False,
+                 seed: int = 0, ratio_bucket: float = 60.0):
+        """mode: 'collab' (distributed expert calls under `plan`) or
+        'offload' (each server caches its own top experts; misses load
+        weights from host RAM — the MoE-Infinity-style baseline).
+        redirect: route each request to the least-loaded server first."""
+        assert mode in ("collab", "offload")
+        if mode == "collab" and plan is None and controller is None:
+            raise ValueError("collab mode needs a plan or a controller")
+        self.cluster, self.profile, self.workload = cluster, profile, workload
+        self.plan, self.controller = plan, controller
+        self.mode, self.redirect = mode, redirect
+        self.rng = np.random.default_rng(seed)
+        self.ratio_bucket = ratio_bucket
+
+    # ------------------------------------------------------------------
+    def _offload_caches(self) -> list[set]:
+        """Per-server per-layer cached expert sets for offload mode (each
+        server keeps its own most-frequent experts, split evenly across
+        layers)."""
+        cl, pf = self.cluster, self.profile
+        exp_freq = self.workload.freqs_by_server(cl.n)   # [L, N, E]
+        cap = cl.expert_capacity(pf.expert_bytes)
+        per_layer = np.maximum(cap // pf.num_layers, 1)
+        caches = []
+        for n in range(cl.n):
+            layers = []
+            for l in range(pf.num_layers):
+                k = min(int(per_layer[n]), pf.num_experts)
+                layers.append(set(np.argsort(-exp_freq[l, n])[:k]))
+            caches.append(layers)
+        return caches
+
+    # ------------------------------------------------------------------
+    def run(self) -> SimResult:
+        cl, pf, wl = self.cluster, self.profile, self.workload
+        N, L, E = cl.n, pf.num_layers, pf.num_experts
+        speeds = np.array([s.compute_speed for s in cl.servers])
+        io = np.array([s.io_speed for s in cl.servers])
+
+        stats = ActivationStats(L, N, E)
+        plan = self.plan
+        if self.controller is not None:
+            plan, _ = self.controller.maybe_migrate(0.0, stats.freqs())
+        res = plan.residency() if plan is not None else None  # [L, N, E]
+
+        caches = self._offload_caches() if self.mode == "offload" else None
+        free = np.zeros(N)              # server occupancy timeline
+        latencies, servers, finishes = [], [], []
+        migrations = []
+        loc_hits = loc_tot = 0.0
+        ratio_samples = []
+        next_bucket = self.ratio_bucket
+
+        if self.mode == "offload":
+            cache_mask = np.zeros((N, L, E), bool)
+            for n in range(N):
+                for l in range(L):
+                    cache_mask[n, l, list(caches[n][l])] = True
+
+        for r in wl.requests:
+            n = r.server
+            if self.redirect:
+                n = int(np.argmin(np.maximum(free, r.arrival)))
+            start = max(r.arrival, free[n])
+            tokens = r.prompt_tokens + r.decode_tokens
+            probs = wl.tasks[r.task].probs
+            # component 2: per-layer expert activations for this request
+            layer_counts = self.rng.multinomial(
+                tokens * pf.top_k, probs)                   # [L, E]
+            dense_t = tokens * pf.dense_flops_per_token / speeds[n]
+            service = 0.0
+            if self.mode == "offload":
+                comp = layer_counts * pf.expert_flops_per_token / speeds[n]
+                miss = (layer_counts > 0) & ~cache_mask[n]
+                t_le = comp + miss * (pf.expert_bytes / io[n])
+                service = L * dense_t + t_le.max(-1).sum()
+                loc_hits += (layer_counts * cache_mask[n]).sum()
+                loc_tot += layer_counts.sum()
+            else:
+                for l in range(L):
+                    counts = layer_counts[l]
+                    active = counts > 0
+                    local = active & (res[l, n] > 0)
+                    remote = active & ~local
+                    comp_b = counts * pf.expert_flops_per_token
+                    worst = float((comp_b * local).max() / speeds[n]) \
+                        if local.any() else 0.0
+                    loc_hits += counts[local].sum()
+                    loc_tot += counts[active].sum()
+                    if remote.any():
+                        # nearest-idle replica per remote expert (Eq. 1)
+                        free_m = np.where(res[l].T[remote] > 0, free[None],
+                                          np.inf)            # [R, N]
+                        tgt = np.argmin(free_m, axis=-1)
+                        comm = (2 * counts[remote]
+                                * pf.hidden_bytes_per_token / cl.bandwidth
+                                + cl.rtt)
+                        comp = comp_b[remote] / speeds[tgt]
+                        np.add.at(free, tgt, comp)            # async load
+                        worst = max(worst, float((comm + comp).max()))
+                    service += dense_t + worst
+            free[n] = start + service
+            done = start + service
+            latencies.append(done - r.arrival)
+            servers.append(r.server)
+            finishes.append(done)
+            stats.update_server(r.server, layer_counts)
+
+            while done >= next_bucket:
+                ratio_samples.append((next_bucket,
+                                      loc_hits / max(loc_tot, 1.0)))
+                loc_hits = loc_tot = 0.0
+                next_bucket += self.ratio_bucket
+
+            if self.controller is not None:
+                plan2, adopted = self.controller.maybe_migrate(
+                    done, stats.freqs())
+                if adopted:
+                    # per-server weight-loading pause (Eq. 3)
+                    old_res, new_res = res, plan2.residency()
+                    added = np.maximum(new_res - old_res, 0).sum(0).sum(-1)
+                    free += added * pf.expert_bytes / io
+                    migrations.append({"time": done,
+                                       "added_per_server": added.tolist()})
+                    plan, res = plan2, new_res
+
+        return SimResult(latencies=np.array(latencies),
+                         servers=np.array(servers),
+                         finish_times=np.array(finishes),
+                         local_ratio_t=ratio_samples,
+                         migrations=migrations, stats=stats)

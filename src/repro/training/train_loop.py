@@ -1,0 +1,59 @@
+"""Training step / loop: causal-LM loss + MoE aux losses, grad clipping,
+pluggable optimizer. The same ``train_step`` is what the multi-pod dry-run
+lowers for the ``train_4k`` input shape."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tr
+from repro.optim.adamw import Optimizer, clip_by_global_norm
+
+
+def make_train_step(rt: tr.Runtime, opt: Optimizer, *,
+                    max_grad_norm: float = 1.0, aux_weight: float = 0.01):
+    """Returns train_step(params, opt_state, tokens, targets, placement)."""
+
+    def train_step(params, opt_state, tokens, targets, placement=None):
+        def loss_of(p):
+            loss, metrics = tr.loss_fn(rt, p, tokens, targets,
+                                       placement=placement,
+                                       aux_weight=aux_weight)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_of, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        params, opt_state = opt.update(grads, opt_state, params)
+        out = {"loss": loss, "grad_norm": gnorm,
+               "ce_loss": metrics["ce_loss"]}
+        if "aux_loss" in metrics:
+            out["aux_loss"] = metrics["aux_loss"]
+            out["local_frac"] = metrics["local_frac"]
+        return params, opt_state, out
+
+    return train_step
+
+
+def train_loop(rt: tr.Runtime, params, opt: Optimizer, batches, *,
+               placement=None, log_every: int = 10, jit: bool = True):
+    """batches: iterable of (tokens, targets). Returns (params, history)."""
+    step_fn = make_train_step(rt, opt)
+    if jit:
+        step_fn = jax.jit(step_fn)
+    opt_state = opt.init(params)
+    history = []
+    t0 = time.time()
+    for i, (tokens, targets) in enumerate(batches):
+        params, opt_state, m = step_fn(params, opt_state, tokens, targets,
+                                       placement)
+        if i % log_every == 0 or i < 3:
+            m = {k: float(v) for k, v in m.items()}
+            m["step"] = i
+            m["wall"] = time.time() - t0
+            history.append(m)
+    return params, opt_state, history

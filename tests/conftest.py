@@ -1,0 +1,10 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests must see the real single
+# CPU device. Multi-device SPMD tests run in subprocesses (test_multidevice).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

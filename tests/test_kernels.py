@@ -1,0 +1,149 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _rand(key, shape, dtype, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE grouped matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,C,D,F", [
+    (1, 128, 64, 256), (2, 128, 128, 512), (4, 256, 64, 256),
+    (3, 128, 96, 384),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moe_gmm_sweep(S, C, D, F, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(S * 1000 + C), 4)
+    x = _rand(ks[0], (S, C, D), dtype, 0.5)
+    w1 = _rand(ks[1], (S, D, F), dtype, D ** -0.5)
+    w3 = _rand(ks[2], (S, D, F), dtype, D ** -0.5)
+    w2 = _rand(ks[3], (S, F, D), dtype, F ** -0.5)
+    y = ops.moe_gmm(x, w1, w3, w2, bc=128, bf=128)
+    yr = ref.moe_gmm_ref(x, w1, w3, w2)
+    tol = 5e-6 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), atol=tol, rtol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([128, 256]),
+       st.sampled_from([64, 128]), st.sampled_from([256, 512]),
+       st.integers(0, 100))
+def test_moe_gmm_property(S, C, D, F, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = _rand(ks[0], (S, C, D), jnp.float32, 0.5)
+    w1 = _rand(ks[1], (S, D, F), jnp.float32, D ** -0.5)
+    w3 = _rand(ks[2], (S, D, F), jnp.float32, D ** -0.5)
+    w2 = _rand(ks[3], (S, F, D), jnp.float32, F ** -0.5)
+    y = ops.moe_gmm(x, w1, w3, w2, bc=128, bf=256)
+    yr = ref.moe_gmm_ref(x, w1, w3, w2)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=1e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Tq,Tk,H,kvh,hd,causal,window", [
+    (2, 128, 128, 4, 2, 64, True, 0),
+    (1, 256, 256, 4, 4, 64, True, 64),
+    (2, 128, 128, 2, 1, 128, True, 0),
+    (1, 128, 128, 4, 2, 32, False, 0),
+    (1, 512, 512, 2, 2, 64, True, 128),
+])
+def test_flash_attention_sweep(B, Tq, Tk, H, kvh, hd, causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(Tq + H), 3)
+    q = _rand(ks[0], (B, Tq, H, hd), jnp.float32)
+    k = _rand(ks[1], (B, Tk, kvh, hd), jnp.float32)
+    v = _rand(ks[2], (B, Tk, kvh, hd), jnp.float32)
+    o = ops.flash_attention(q, k, v, causal=causal, window=window,
+                            bq=64, bk=64)
+    grp = H // kvh
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Tq, hd)
+    kf = jnp.repeat(k, grp, 2).transpose(0, 2, 1, 3).reshape(B * H, Tk, hd)
+    vf = jnp.repeat(v, grp, 2).transpose(0, 2, 1, 3).reshape(B * H, Tk, hd)
+    orf = ref.flash_attention_ref(qf, kf, vf, causal=causal, window=window)
+    orf = orf.reshape(B, H, Tq, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_flash_attention_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (1, 128, 4, 64), jnp.bfloat16)
+    k = _rand(ks[1], (1, 128, 2, 64), jnp.bfloat16)
+    v = _rand(ks[2], (1, 128, 2, 64), jnp.bfloat16)
+    o = ops.flash_attention(q, k, v, bq=64, bk=64)
+    qf = q.transpose(0, 2, 1, 3).reshape(4, 128, 64)
+    kf = jnp.repeat(k, 2, 2).transpose(0, 2, 1, 3).reshape(4, 128, 64)
+    vf = jnp.repeat(v, 2, 2).transpose(0, 2, 1, 3).reshape(4, 128, 64)
+    orf = ref.flash_attention_ref(qf, kf, vf).reshape(1, 4, 128, 64)
+    np.testing.assert_allclose(np.asarray(o.transpose(0, 2, 1, 3), np.float32),
+                               np.asarray(orf, np.float32), atol=5e-2)
+
+
+def test_flash_matches_model_chunked_attention():
+    """Kernel agrees with the model-side pure-jnp chunked attention."""
+    from repro.models.attention import chunked_attention
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(ks[0], (2, 256, 4, 64), jnp.float32)
+    k = _rand(ks[1], (2, 256, 2, 64), jnp.float32)
+    v = _rand(ks[2], (2, 256, 2, 64), jnp.float32)
+    a = chunked_attention(q, k, v, causal=True, window=64, chunk=128)
+    b = ops.flash_attention(q, k, v, causal=True, window=64, bq=64, bk=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=2e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# SSM selective scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,T,d,N,dtype", [
+    (2, 64, 256, 16, jnp.float32),
+    (1, 128, 128, 8, jnp.float32),
+    (2, 32, 384, 16, jnp.float32),
+    (1, 64, 128, 16, jnp.bfloat16),
+])
+def test_ssm_scan_sweep(B, T, d, N, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(T + d), 6)
+    x = _rand(ks[0], (B, T, d), dtype, 0.5)
+    dt = jax.nn.softplus(_rand(ks[1], (B, T, d), jnp.float32) - 1).astype(dtype)
+    Bs = _rand(ks[2], (B, T, N), dtype, 0.3)
+    Cs = _rand(ks[3], (B, T, N), dtype, 0.3)
+    A = -jnp.exp(_rand(ks[4], (d, N), jnp.float32, 0.3))
+    D = jnp.ones((d,), jnp.float32)
+    y = ops.ssm_scan(x, dt, Bs, Cs, A, D, bd=128, bt=32)
+    yr = ref.ssm_scan_ref(x, dt, Bs, Cs, A, D)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), atol=tol, rtol=tol)
+
+
+def test_ssm_scan_matches_model_linear_scan():
+    """Kernel agrees with the model-side chunked associative scan."""
+    from repro.models.ssm import linear_scan
+    ks = jax.random.split(jax.random.PRNGKey(2), 6)
+    B, T, d, N = 1, 64, 128, 8
+    x = _rand(ks[0], (B, T, d), jnp.float32, 0.5)
+    dt = jax.nn.softplus(_rand(ks[1], (B, T, d), jnp.float32) - 1)
+    Bs = _rand(ks[2], (B, T, N), jnp.float32, 0.3)
+    Cs = _rand(ks[3], (B, T, N), jnp.float32, 0.3)
+    A = -jnp.exp(_rand(ks[4], (d, N), jnp.float32, 0.3))
+    a = jnp.exp(dt[..., None] * A)
+    b = (dt * x)[..., None] * Bs[:, :, None, :]
+    hs, _ = linear_scan(a, b, jnp.zeros((B, d, N)), chunk=16)
+    y_model = jnp.einsum("btdn,btn->btd", hs, Cs) + x
+    y_kernel = ops.ssm_scan(x, dt, Bs, Cs, A, jnp.ones((d,)), bd=128, bt=16)
+    np.testing.assert_allclose(np.asarray(y_model), np.asarray(y_kernel),
+                               atol=1e-5, rtol=1e-4)

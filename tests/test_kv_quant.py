@@ -1,0 +1,41 @@
+"""int8 KV-cache quantization (beyond-paper serving feature)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as tr
+from repro.models.attention import dequantize_kv, quantize_kv
+
+
+def test_quantize_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 64))
+    q8, s = quantize_kv(x)
+    assert q8.dtype == jnp.int8 and s.shape == (2, 8, 4, 1)
+    back = dequantize_kv(q8, s, jnp.float32)
+    rel = float(jnp.max(jnp.abs(back - x)) / jnp.max(jnp.abs(x)))
+    assert rel < 0.02
+
+
+@pytest.mark.parametrize("name,window", [
+    ("tinyllama-1.1b", 0), ("tinyllama-1.1b", 16), ("zamba2-2.7b", 0),
+])
+def test_int8_decode_close_to_fp(name, window):
+    cfg = get_config(name).reduced()
+    rt_f = tr.Runtime(cfg=cfg, window=window)
+    rt_q = tr.Runtime(cfg=cfg, window=window, kv_quant=True)
+    key = jax.random.PRNGKey(1)
+    params = tr.init_params(rt_f, key)
+    B, T = 2, 24
+    toks = jax.random.randint(key, (B, T + 1), 0, cfg.vocab_size)
+    full, _, _ = tr.prefill(rt_f, params, tokens=toks)
+    _, cq, _ = tr.prefill(rt_q, params, tokens=toks[:, :T], cache_len=T + 8)
+    dq, cq2, _ = tr.decode_step(rt_q, params, cq, toks[:, T:T + 1],
+                                jnp.int32(T))
+    rel = float(jnp.max(jnp.abs(full - dq))) / float(jnp.max(jnp.abs(full)))
+    assert rel < 0.06, (name, window, rel)
+    # cache stored as int8 + scales
+    ab = next(k for k in cq2 if "k" in cq2[k])
+    assert cq2[ab]["k"].dtype == jnp.int8
+    assert "k_scale" in cq2[ab]

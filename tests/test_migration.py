@@ -1,0 +1,71 @@
+"""Migration policy (Eq. 3 / Eq. 4) tests."""
+import numpy as np
+
+from repro.core.migration import (CostModel, MigrationController,
+                                  migration_time, should_migrate)
+from repro.core.placement import dancemoe_placement
+from repro.core.baselines import uniform_plan
+from tests.test_placement import skewed_freqs
+
+
+def _cost_model(io=1e9):
+    return CostModel(expert_bytes=50e6, activation_bytes=8192,
+                     bandwidth=62.5e6, io_speed=io,
+                     tokens_per_horizon=1e4)
+
+
+def test_migration_time_counts_added_experts():
+    L, N, E = 2, 2, 4
+    old = uniform_plan(L, N, E)
+    new = uniform_plan(L, N, E)
+    cm = _cost_model(io=1e8)
+    assert migration_time(old, old, cm) == 0.0
+    # force a difference: swap expert sets of server 0/1 in layer 0
+    new.assign[0][0], new.assign[0][1] = list(new.assign[0][1]), \
+        list(new.assign[0][0])
+    t = migration_time(old, new, cm)
+    assert t == (2 + 2) * 50e6 / 1e8           # 4 newly-placed experts
+
+
+def test_eq4_adopts_only_when_beneficial():
+    L, N, E = 4, 3, 8
+    freqs = skewed_freqs(L, N, E, seed=1)
+    cap = np.array([14, 16, 20])
+    slots = np.minimum(cap // L + 2, E)
+    good = dancemoe_placement(freqs, cap, slots)
+    bad = uniform_plan(L, N, E)
+    cm = _cost_model()
+    adopt, diag = should_migrate(bad, good, freqs, cm)
+    assert adopt and diag["gain"] > 0          # big win: adopt
+    adopt_back, diag2 = should_migrate(good, bad, freqs, cm)
+    assert not adopt_back                      # regression: reject
+
+
+def test_eq4_rejects_when_migration_too_expensive():
+    L, N, E = 4, 3, 8
+    freqs = skewed_freqs(L, N, E, seed=1)
+    cap = np.array([14, 16, 20])
+    slots = np.minimum(cap // L + 2, E)
+    good = dancemoe_placement(freqs, cap, slots)
+    bad = uniform_plan(L, N, E)
+    slow_io = _cost_model(io=1e3)              # pathologically slow loads
+    adopt, _ = should_migrate(bad, good, freqs, slow_io)
+    assert not adopt
+
+
+def test_controller_interval_and_shift():
+    L, N, E = 4, 3, 8
+    f1 = skewed_freqs(L, N, E, seed=1)
+    f2 = skewed_freqs(L, N, E, seed=9)         # shifted workload
+    cap = np.array([14, 16, 20])
+    slots = np.minimum(cap // L + 2, E)
+    ctrl = MigrationController(
+        placement_fn=lambda f: dancemoe_placement(f, cap, slots),
+        cost=_cost_model(), interval=300.0)
+    plan0, adopted0 = ctrl.maybe_migrate(0.0, f1)
+    assert adopted0                            # initial placement
+    _, a = ctrl.maybe_migrate(100.0, f2)
+    assert not a                               # within interval: no review
+    plan2, a2 = ctrl.maybe_migrate(400.0, f2)
+    assert a2                                  # workload shift -> migrate
+    assert plan2 is not plan0

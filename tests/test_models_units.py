@@ -1,0 +1,105 @@
+"""Model-substrate unit/property tests: attention math, linear scan,
+EP geometry."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import chunked_attention, decode_attention
+from repro.models.ssm import linear_scan
+from repro.kernels.ref import flash_attention_ref
+
+
+def naive_attention(q, k, v, causal=True, window=0):
+    B, Tq, H, hd = q.shape
+    kvh = k.shape[2]
+    grp = H // kvh
+    kx = jnp.repeat(k, grp, 2)
+    vx = jnp.repeat(v, grp, 2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) * hd ** -0.5
+    Tk = k.shape[1]
+    mask = jnp.ones((Tq, Tk), bool)
+    qpos = jnp.arange(Tq)[:, None]
+    kpos = jnp.arange(Tk)[None, :]
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vx.astype(jnp.float32))
+
+
+@pytest.mark.parametrize("Tq,kvh,H,window,chunk", [
+    (64, 2, 4, 0, 16), (96, 1, 4, 24, 32), (64, 4, 4, 16, 64),
+])
+def test_chunked_attention_matches_naive(Tq, kvh, H, window, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(Tq), 3)
+    q = jax.random.normal(ks[0], (2, Tq, H, 32))
+    k = jax.random.normal(ks[1], (2, Tq, kvh, 32))
+    v = jax.random.normal(ks[2], (2, Tq, kvh, 32))
+    got = chunked_attention(q, k, v, causal=True, window=window, chunk=chunk)
+    want = naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_decode_attention_ring_equals_full_window():
+    """Ring-buffer attention over window W == full attention restricted to
+    the last W positions."""
+    W, S, kvh, hd = 16, 48, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 1, 4, hd))
+    k_full = jax.random.normal(ks[1], (1, S, kvh, hd))
+    v_full = jax.random.normal(ks[2], (1, S, kvh, hd))
+    pos = S - 1
+    # ring cache holds positions pos-W+1 .. pos at slots p % W
+    ring_k = jnp.zeros((1, W, kvh, hd))
+    ring_v = jnp.zeros((1, W, kvh, hd))
+    for p in range(pos - W + 1, pos + 1):
+        ring_k = ring_k.at[:, p % W].set(k_full[:, p])
+        ring_v = ring_v.at[:, p % W].set(v_full[:, p])
+    got = decode_attention(q, ring_k, ring_v, jnp.int32(pos), ring=True)
+    want = naive_attention(q, k_full, v_full, causal=False)[
+        ...] * 0  # placeholder
+    # reference: softmax over exactly the last W positions
+    kx = jnp.repeat(k_full[:, pos - W + 1:], 2, 2)
+    vx = jnp.repeat(v_full[:, pos - W + 1:], 2, 2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q * hd ** -0.5, kx)
+    p = jax.nn.softmax(s, -1)
+    want = jnp.einsum("bhqk,bkhd->bqhd", p, vx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 3), st.integers(2, 40), st.integers(1, 8),
+       st.integers(0, 1000))
+def test_linear_scan_property(B, T, chunk, seed):
+    """Chunked associative scan == sequential recurrence, any chunking."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    a = jax.random.uniform(ks[0], (B, T, 4), minval=0.1, maxval=0.99)
+    b = jax.random.normal(ks[1], (B, T, 4))
+    h0 = jnp.zeros((B, 4))
+    hs, hT = linear_scan(a, b, h0, chunk=chunk)
+    h = h0
+    for t in range(T):
+        h = a[:, t] * h + b[:, t]
+        np.testing.assert_allclose(np.asarray(hs[:, t]), np.asarray(h),
+                                   atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(h), atol=1e-5,
+                               rtol=1e-4)
+
+
+def test_epspec_build_geometry():
+    from repro.launch.mesh import make_test_mesh
+    from repro.models.moe import EPSpec
+    from repro.configs import get_config
+    cfg = get_config("mixtral-8x7b")
+    mesh = make_test_mesh(1, 1)
+    spec = EPSpec.build(mesh, cfg, ep_axes=("model",))
+    assert spec.n_ep == 1 and spec.slots >= cfg.num_experts
+    assert spec.dispatch_row_axes == ("data", "model")
+    assert spec.batch_axes == ("data",)

@@ -1,0 +1,75 @@
+"""Property-based tests (hypothesis) for the placement system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.baselines import eplb_plan, uniform_plan
+from repro.core.placement import (allocate_expert_counts, dancemoe_placement,
+                                  remote_cost)
+from repro.core.stats import entropy
+
+
+@st.composite
+def placement_instance(draw):
+    L = draw(st.integers(1, 6))
+    N = draw(st.integers(2, 5))
+    E = draw(st.integers(2, 16))
+    seed = draw(st.integers(0, 2 ** 16))
+    rng = np.random.default_rng(seed)
+    freqs = rng.dirichlet(np.full(E, rng.uniform(0.2, 2.0)), size=(L, N))
+    # always-feasible capacity: at least full coverage + slack
+    slack = draw(st.integers(0, 3 * N))
+    cap_min = int(np.ceil(L * E / N))
+    cap = rng.integers(cap_min, cap_min + 2 * L, size=N) + slack
+    slots = np.minimum(cap // L + E, E)
+    return freqs, cap, slots
+
+
+@settings(max_examples=30, deadline=None)
+@given(placement_instance())
+def test_dancemoe_invariants(inst):
+    freqs, cap, slots = inst
+    L, N, E = freqs.shape
+    plan = dancemoe_placement(freqs, cap, slots)
+    res = plan.residency()
+    # 1) expert coverage: every expert of every layer placed somewhere
+    assert (res.sum(1) > 0).all()
+    # 2) per-(server, layer) slot cap respected
+    for l in range(L):
+        for n in range(N):
+            assert len(plan.assign[l][n]) <= slots[n]
+            assert len(set(plan.assign[l][n])) == len(plan.assign[l][n])
+    # 3) remote cost bounded by total mass
+    assert 0.0 <= remote_cost(plan, freqs) <= L * N + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(placement_instance())
+def test_dancemoe_no_worse_than_uniform(inst):
+    freqs, cap, slots = inst
+    L, N, E = freqs.shape
+    dm = remote_cost(dancemoe_placement(freqs, cap, slots), freqs)
+    up = remote_cost(uniform_plan(L, N, E), freqs)
+    assert dm <= up + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(placement_instance())
+def test_eplb_coverage(inst):
+    freqs, cap, slots = inst
+    plan = eplb_plan(freqs, cap, slots)
+    assert (plan.residency().sum(1) > 0).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 8), st.integers(2, 6), st.integers(2, 32),
+       st.integers(0, 2 ** 16))
+def test_alg1_invariants(L, N, E, seed):
+    rng = np.random.default_rng(seed)
+    freqs = rng.dirichlet(np.full(E, 0.5), size=(L, N))
+    v = entropy(freqs, axis=-1)
+    cap_min = int(np.ceil(L * E / N))
+    cap = rng.integers(cap_min, 2 * cap_min + 1, size=N)
+    counts = allocate_expert_counts(np.full(L, E), cap, v)
+    assert (counts.sum(1) >= E).all()
+    assert (counts.sum(0) <= cap).all()
+    assert (counts <= E).all() and (counts >= 0).all()

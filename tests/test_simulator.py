@@ -1,0 +1,125 @@
+"""Event-driven simulator tests (paper Sec. IV semantics)."""
+import numpy as np
+import pytest
+
+from repro.core.baselines import redundance_plan, uniform_plan
+from repro.core.migration import CostModel, MigrationController
+from repro.core.placement import dancemoe_placement
+from repro.data.traces import (BIGBENCH_TASKS, make_task_profile,
+                               poisson_workload)
+from repro.serving.cluster import (DEEPSEEK_V2_LITE_PROFILE, MIXTRAL_PROFILE,
+                                   paper_testbed)
+from repro.serving.simulator import EdgeSimulator
+
+
+@pytest.fixture(scope="module")
+def setup():
+    pf = DEEPSEEK_V2_LITE_PROFILE
+    cl = paper_testbed(0.3)
+    wl = poisson_workload(list(BIGBENCH_TASKS), num_layers=pf.num_layers,
+                          num_experts=pf.num_experts, mean_interarrival=10.0,
+                          duration=600.0, seed=0)
+    cap = cl.expert_capacity(pf.expert_bytes)
+    slots = np.minimum(np.maximum(cap // pf.num_layers, 1), pf.num_experts)
+    return pf, cl, wl, cap, slots
+
+
+def test_task_profiles_are_skewed_and_layer_dependent():
+    tp = make_task_profile("arithmetic", 8, 16, seed=0)
+    assert tp.probs.shape == (8, 16)
+    assert np.allclose(tp.probs.sum(-1), 1.0)
+    # different tasks prefer different experts (Fig. 2): the dominant
+    # experts must differ in at least one layer
+    tp2 = make_task_profile("ascii_recognition", 8, 16, seed=0)
+    assert any(np.argmax(tp.probs[l]) != np.argmax(tp2.probs[l])
+               for l in range(8))
+    # and within a task, skew varies across layers (Fig. 3)
+    tops = tp.probs.max(-1)
+    assert tops.max() / tops.min() > 1.5
+
+
+def test_workload_poisson_and_per_server_tasks():
+    wl = poisson_workload(["a", "b", "c"], num_layers=4, num_experts=8,
+                          mean_interarrival=5.0, duration=300.0, seed=1)
+    assert all(r.arrival < 300.0 for r in wl.requests)
+    by_server = {n: {r.task for r in wl.requests if r.server == n}
+                 for n in range(3)}
+    assert by_server[0] == {"a"} and by_server[2] == {"c"}
+    f = wl.freqs_by_server(3)
+    assert np.allclose(f.sum(-1), 1.0)
+
+
+def test_simulator_determinism(setup):
+    pf, cl, wl, cap, slots = setup
+    plan = uniform_plan(pf.num_layers, cl.n, pf.num_experts)
+    r1 = EdgeSimulator(cl, pf, wl, plan=plan, seed=3).run()
+    r2 = EdgeSimulator(cl, pf, wl, plan=plan, seed=3).run()
+    assert np.allclose(r1.latencies, r2.latencies)
+
+
+def test_paper_ordering_dancemoe_beats_uniform(setup):
+    pf, cl, wl, cap, slots = setup
+    freqs = wl.freqs_by_server(cl.n)
+    dm = EdgeSimulator(cl, pf, wl,
+                       plan=dancemoe_placement(freqs, cap, slots),
+                       seed=1).run()
+    up = EdgeSimulator(cl, pf, wl,
+                       plan=uniform_plan(pf.num_layers, cl.n,
+                                         pf.num_experts), seed=1).run()
+    assert dm.avg_latency < up.avg_latency
+    dm_ratio = np.mean([x[1] for x in dm.local_ratio_t])
+    up_ratio = np.mean([x[1] for x in up.local_ratio_t])
+    assert dm_ratio > up_ratio
+    assert 0.0 <= up_ratio <= 1.0
+
+
+def test_offload_baseline_slowest_for_large_experts():
+    """Table I: for Mixtral-sized experts, single-server offloading loses to
+    naive collaboration."""
+    pf = MIXTRAL_PROFILE
+    cl = paper_testbed(0.7)
+    wl = poisson_workload(list(BIGBENCH_TASKS), num_layers=pf.num_layers,
+                          num_experts=pf.num_experts, mean_interarrival=10.0,
+                          duration=600.0, seed=0)
+    cap = cl.expert_capacity(pf.expert_bytes)
+    slots = np.minimum(np.maximum(cap // pf.num_layers, 1), pf.num_experts)
+    off = EdgeSimulator(cl, pf, wl, mode="offload", seed=1).run()
+    off_lb = EdgeSimulator(cl, pf, wl, mode="offload", redirect=True,
+                           seed=1).run()
+    collab = EdgeSimulator(
+        cl, pf, wl, plan=redundance_plan(pf.num_layers, cl.n,
+                                         pf.num_experts, cap, slots),
+        seed=1).run()
+    assert collab.avg_latency < off.avg_latency
+    assert off_lb.avg_latency <= off.avg_latency * 1.05   # LB helps a bit
+
+
+def test_migration_recovers_after_workload_shift(setup):
+    pf, cl, wl, cap, slots = setup
+    from repro.data.traces import Request, Workload
+    wl2 = poisson_workload(["x_task", "y_task", "z_task"],
+                           num_layers=pf.num_layers,
+                           num_experts=pf.num_experts,
+                           mean_interarrival=10.0, duration=600.0, seed=5)
+    reqs = wl.requests + [Request(r.arrival + 600.0, r.server, r.task,
+                                  r.prompt_tokens, r.decode_tokens)
+                          for r in wl2.requests]
+    merged = Workload(requests=reqs, tasks={**wl.tasks, **wl2.tasks},
+                      duration=1200.0)
+    cm = CostModel(expert_bytes=pf.expert_bytes,
+                   activation_bytes=128 * pf.hidden_bytes_per_token,
+                   bandwidth=cl.bandwidth,
+                   io_speed=np.array([s.io_speed for s in cl.servers]),
+                   tokens_per_horizon=2e4)
+    static = EdgeSimulator(
+        cl, pf, merged,
+        plan=dancemoe_placement(wl.freqs_by_server(cl.n), cap, slots),
+        seed=1).run()
+    ctrl = MigrationController(
+        placement_fn=lambda f: dancemoe_placement(f, cap, slots),
+        cost=cm, interval=300.0)
+    dyn = EdgeSimulator(cl, pf, merged, controller=ctrl, seed=1).run()
+    assert len(dyn.migrations) >= 1
+    arr = np.array([q.arrival for q in merged.requests])
+    assert dyn.latencies[arr >= 600].mean() < \
+        static.latencies[arr >= 600].mean()
