@@ -12,9 +12,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.baselines import (eplb_plan, redundance_plan, smartmoe_plan,
-                                  uniform_plan)
-from repro.core.placement import dancemoe_placement
+from repro.core.policies import ClusterView, get_policy
 from repro.data.traces import (BIGBENCH_TASKS, MULTIDATA_TASKS,
                                poisson_workload)
 from repro.serving.cluster import (ClusterSpec, DEEPSEEK_V2_LITE_PROFILE,
@@ -61,13 +59,18 @@ def make_setup(model: str, workload: str, *, duration: float = 1200.0,
     return pf, cl, wl, cap, slots
 
 
+# paper-name -> registered policy name (repro.core.policies registry)
+POLICY_NAMES = {
+    "Uniform": "uniform",
+    "Redundance": "redundance",
+    "SmartMoE": "smartmoe",
+    "EPLB": "eplb",
+    "DanceMoE": "dancemoe",
+}
+
+
 def all_plans(pf, cl, wl, cap, slots):
     freqs = wl.freqs_by_server(cl.n)
-    L, N, E = pf.num_layers, cl.n, pf.num_experts
-    return {
-        "Uniform": uniform_plan(L, N, E),
-        "Redundance": redundance_plan(L, N, E, cap, slots),
-        "SmartMoE": smartmoe_plan(freqs, cap, slots),
-        "EPLB": eplb_plan(freqs, cap, slots),
-        "DanceMoE": dancemoe_placement(freqs, cap, slots),
-    }
+    cluster = ClusterView(capacity=cap, slots_cap=slots)
+    return {label: get_policy(name).propose(freqs, cluster)
+            for label, name in POLICY_NAMES.items()}

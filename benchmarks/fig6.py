@@ -4,10 +4,10 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import all_plans, make_setup
-from repro.core.migration import CostModel, MigrationController
-from repro.core.baselines import eplb_plan, smartmoe_plan
-from repro.core.placement import dancemoe_placement
+from benchmarks.common import POLICY_NAMES, all_plans, make_setup
+from repro.core.migration import CostModel
+from repro.core.policies import (ClusterView, PlacementController,
+                                 get_policy)
 from repro.serving.simulator import EdgeSimulator
 
 
@@ -19,16 +19,15 @@ def run(model="deepseek-v2-lite", workload="bigbench",
                    bandwidth=cl.bandwidth,
                    io_speed=np.array([s.io_speed for s in cl.servers]),
                    tokens_per_horizon=2e4)
+    cluster = ClusterView(capacity=cap, slots_cap=slots)
     static = all_plans(pf, cl, wl, cap, slots)
     series = {}
     for name in ("Uniform", "Redundance"):
         r = EdgeSimulator(cl, pf, wl, plan=static[name], seed=seed).run()
         series[name] = r.local_ratio_t
-    for name, fn in [("SmartMoE", lambda f: smartmoe_plan(f, cap, slots)),
-                     ("EPLB", lambda f: eplb_plan(f, cap, slots)),
-                     ("DanceMoE", lambda f: dancemoe_placement(f, cap,
-                                                               slots))]:
-        ctrl = MigrationController(placement_fn=fn, cost=cm, interval=300.0)
+    for name in ("SmartMoE", "EPLB", "DanceMoE"):
+        ctrl = PlacementController(policy=get_policy(POLICY_NAMES[name]),
+                                   cost=cm, cluster=cluster, interval=300.0)
         r = EdgeSimulator(cl, pf, wl, controller=ctrl, seed=seed).run()
         series[name] = r.local_ratio_t
     return series

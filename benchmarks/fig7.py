@@ -6,8 +6,9 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import calibrated_testbed, MODELS
-from repro.core.migration import CostModel, MigrationController
+from repro.core.migration import CostModel
 from repro.core.placement import dancemoe_placement
+from repro.core.policies import ClusterView, PlacementController, get_policy
 from repro.data.traces import (BIGBENCH_TASKS, MULTIDATA_TASKS, Request,
                                Workload, poisson_workload)
 from repro.serving.simulator import EdgeSimulator
@@ -48,9 +49,9 @@ def run(seed: int = 1):
     static_plan = dancemoe_placement(phase1.freqs_by_server(cl.n), cap,
                                      slots)
     r_wo = EdgeSimulator(cl, pf, wl, plan=static_plan, seed=seed).run()
-    ctrl = MigrationController(
-        placement_fn=lambda f: dancemoe_placement(f, cap, slots),
-        cost=cm, interval=300.0)
+    ctrl = PlacementController(
+        policy=get_policy("dancemoe"), cost=cm,
+        cluster=ClusterView(capacity=cap, slots_cap=slots), interval=300.0)
     r_w = EdgeSimulator(cl, pf, wl, controller=ctrl, seed=seed).run()
     return r_wo, r_w, wl, shift_t
 

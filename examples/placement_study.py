@@ -11,8 +11,8 @@ Run:  PYTHONPATH=src python examples/placement_study.py
 import numpy as np
 
 from repro.core.placement import (PlacementPlan, allocate_expert_counts,
-                                  assign_experts_layer, dancemoe_placement,
-                                  remote_cost)
+                                  assign_experts_layer, remote_cost)
+from repro.core.policies import ClusterView, get_policy
 from repro.core.stats import entropy
 from repro.data.traces import BIGBENCH_TASKS, poisson_workload
 from repro.serving.cluster import DEEPSEEK_V2_LITE_PROFILE, paper_testbed
@@ -62,11 +62,12 @@ def main():
     cap = cl.expert_capacity(pf.expert_bytes)
     slots = np.minimum(np.maximum(cap // pf.num_layers, 1), pf.num_experts)
     freqs = wl.freqs_by_server(cl.n)
+    cluster = ClusterView(capacity=cap, slots_cap=slots)
     variants = {
-        "DanceMoE (full)": dancemoe_placement(freqs, cap, slots),
+        "DanceMoE (full)": get_policy("dancemoe").propose(freqs, cluster),
         "w/o Alg.1 (flat counts)": flat_counts_plan(freqs, cap, slots),
-        "w/o spare-fill": dancemoe_placement(freqs, cap, slots,
-                                             fill_spare=False),
+        "w/o spare-fill": get_policy(
+            "dancemoe", fill_spare=False).propose(freqs, cluster),
         "w/o activation awareness": random_assignment_plan(freqs, cap,
                                                            slots),
     }

@@ -1,13 +1,15 @@
 """End-to-end serving driver (the paper's kind of system): serve a small
-Mixtral-family MoE with BATCHED requests through the real JAX engine, with
-the global scheduler collecting gating statistics and migrating the expert
-placement live (zero recompile — tables and expert slots are jit arguments).
+Mixtral-family MoE as a CONTINUOUS request stream through the real JAX
+engine, with the unified placement control plane collecting gating
+statistics and migrating the expert placement live (zero recompile — tables
+and expert slots are jit arguments).
 
 Phases:
-  1. serve task-skewed traffic under the Uniform placement (cold start),
-  2. the scheduler reviews the observed f_n^l(e) and migrates to the
-     DanceMoE placement,
-  3. serve more traffic — the local compute ratio rises, and generated
+  1. requests stream in and share decode batches under the Uniform
+     placement (cold start) — different arrival times, one KV-slot pool;
+  2. the ``PlacementController`` reviews the observed f_n^l(e) and migrates
+     to the DanceMoE placement (Eq.-4 adopt decision);
+  3. more traffic is served — the local compute ratio rises, and generated
      tokens are bit-identical before/after migration (function preserved).
 
 Run:  PYTHONPATH=src python examples/serve_edge.py
@@ -20,33 +22,19 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core.migration import CostModel
-from repro.core.placement import build_ep_placement, dancemoe_placement
+from repro.core.policies import ClusterView, PlacementController, get_policy
 from repro.data.pipeline import TaskTokenSource
 from repro.launch.mesh import make_test_mesh
 from repro.models import moe as M
 from repro.models import transformer as tr
 from repro.serving.engine import ServingEngine
-from repro.serving.scheduler import GlobalScheduler
+from repro.serving.runtime import ServingRuntime
 
 
-def regather(dense_groups, pls, n_groups):
-    out = {}
-    for k, v in dense_groups.items():
-        if "router" in v:
-            per = [M.dense_to_ep(jax.tree.map(lambda a: a[g], v),
-                                 jax.tree.map(lambda a: a[g], pls))
-                   for g in range(n_groups)]
-            out[k] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
-        else:
-            out[k] = v
-    return out
-
-
-def main(steps: int = 8, batches: int = 3):
+def main(steps: int = 8):
     cfg = get_config("mixtral-8x7b").reduced()  # 4 experts, top-2, 2 layers
     mesh = make_test_mesh(2, 4)                 # 2x4 fake mesh: 4 EP ranks
     spec = M.EPSpec.build(mesh, cfg, ep_axes=("model",), slots=2,
@@ -60,35 +48,44 @@ def main(steps: int = 8, batches: int = 3):
     pl0 = M.uniform_placement(spec.n_ep, spec.slots, cfg.num_experts)
     pls0 = tr.stack_placement(pl0, n_groups)
     params = dict(params_dense)
-    params["groups"] = regather(params_dense["groups"], pls0, n_groups)
+    params["groups"] = M.regather_ep_groups(params_dense["groups"], pls0,
+                                            n_groups)
 
     engine = ServingEngine(rt=rt, params=params, placement=pls0,
                            dense_master=params_dense["groups"], max_len=96)
     cm = CostModel(expert_bytes=3 * cfg.d_model * cfg.d_ff * 2,
                    activation_bytes=cfg.d_model * 2, bandwidth=62.5e6,
                    tokens_per_horizon=1e5)
-    sched = GlobalScheduler(
-        engine=engine, capacity=np.full(spec.n_ep, spec.slots * n_groups),
-        cost=cm, interval_batches=batches,
-        placement_fn=lambda f: dancemoe_placement(
-            f, np.full(spec.n_ep, spec.slots * n_groups),
-            np.full(spec.n_ep, spec.slots)))
+    controller = PlacementController(
+        policy=get_policy("dancemoe"), cost=cm,
+        cluster=ClusterView.from_ep_spec(spec, n_groups),
+        interval=2 * steps)               # review every ~2 requests' decodes
+    runtime = ServingRuntime(engine, max_slots=4, controller=controller)
 
     src = TaskTokenSource("arithmetic", cfg.vocab_size, seed=0)
-    prompts = src.sample(4, 32)
-    print("phase 1: uniform placement")
-    gen_before, info = engine.generate(prompts, steps=steps)
-    print(f"  local compute ratio: {info['local_frac']:.3f}")
-    migrated = sched.after_batch()
-    for _ in range(batches - 1):
-        engine.generate(src.sample(4, 32), steps=steps)
-        migrated = sched.after_batch() or migrated
-    print(f"phase 2: scheduler review -> migrated={migrated}")
-    gen_after, info2 = engine.generate(prompts, steps=steps)
-    print(f"  local compute ratio: {info2['local_frac']:.3f}")
+    probe = src.sample(1, 32)[0]
+
+    print("phase 1: uniform placement, continuous batching")
+    r0 = runtime.submit(probe, steps)
+    for _ in range(3):                    # staggered arrivals share batches
+        runtime.submit(src.sample(1, 32)[0], steps)
+        runtime.step()
+    gen_before = runtime.run()[r0]
+    print(f"  peak decode batch: {runtime.max_concurrency} requests")
+
+    print("phase 2: controller review -> migration")
+    for _ in range(4):
+        runtime.submit(src.sample(1, 32)[0], steps)
+    runtime.run()
+    print(f"  migrations so far: {len(runtime.migrations)}")
+
+    print("phase 3: serve the probe again after migration")
+    r1 = runtime.submit(probe, steps)
+    gen_after = runtime.run()[r1]
     same = bool((gen_before == gen_after).all())
     print(f"  generations identical across migration: {same}")
     assert same, "migration must preserve the served function"
+    assert runtime.max_concurrency >= 2, "decode batches were never shared"
     print("OK")
 
 

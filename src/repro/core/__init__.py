@@ -6,3 +6,7 @@ from repro.core.baselines import (uniform_plan, redundance_plan,
                                   smartmoe_plan, eplb_plan)
 from repro.core.migration import (CostModel, MigrationController,
                                   migration_time, should_migrate)
+from repro.core.policies import (ClusterView, PlacementController,
+                                 PlacementDecision, PlacementPolicy,
+                                 as_policy, get_policy, list_policies,
+                                 register_policy)

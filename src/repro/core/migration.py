@@ -64,32 +64,34 @@ def should_migrate(old: PlacementPlan, new: PlacementPlan,
     }
 
 
-@dataclasses.dataclass
+def _placement_controller():
+    # deferred import: policies imports should_migrate from this module
+    from repro.core.policies import PlacementController
+    return PlacementController
+
+
 class MigrationController:
-    """Periodic placement review: re-run the placement pipeline on fresh
-    stats and adopt the candidate only when Eq. (4) holds."""
-    placement_fn: callable              # freqs -> PlacementPlan
-    cost: CostModel
-    interval: float = 300.0             # paper: every 5 minutes
-    current: PlacementPlan | None = None
-    last_review: float = 0.0
-    history: list = dataclasses.field(default_factory=list)
+    """DEPRECATED shim — use ``repro.core.policies.PlacementController``.
+
+    Kept for the legacy ``maybe_migrate(now, freqs) -> (plan, adopted)``
+    API; all review/adopt logic lives in the unified controller."""
+
+    def __init__(self, placement_fn, cost: CostModel,
+                 interval: float = 300.0):
+        self.ctrl = _placement_controller()(
+            policy=placement_fn, cost=cost, interval=interval)
+
+    @property
+    def current(self) -> PlacementPlan | None:
+        return self.ctrl.plan
+
+    @property
+    def history(self) -> list:
+        """Non-initial review diagnostics (legacy semantics: the initial
+        adoption was never recorded here)."""
+        return [e for e in self.ctrl.events if e.get("reason") != "initial"]
 
     def maybe_migrate(self, now: float, freqs: np.ndarray
                       ) -> tuple[PlacementPlan, bool]:
-        if self.current is None:
-            self.current = self.placement_fn(freqs)
-            self.last_review = now
-            return self.current, True
-        if now - self.last_review < self.interval:
-            return self.current, False
-        self.last_review = now
-        candidate = self.placement_fn(freqs)
-        adopt, diag = should_migrate(self.current, candidate, freqs,
-                                     self.cost)
-        diag["time"] = now
-        diag["adopted"] = adopt
-        self.history.append(diag)
-        if adopt:
-            self.current = candidate
-        return self.current, adopt
+        dec = self.ctrl.review(now, freqs)
+        return dec.plan, dec.adopted

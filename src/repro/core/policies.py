@@ -1,0 +1,276 @@
+"""Unified placement control plane.
+
+Two pieces, consumed identically by the JAX serving stack and the
+event-driven simulator:
+
+* ``PlacementPolicy`` — one interface (``propose(freqs, cluster) ->
+  PlacementPlan``) over every placement strategy in the repo: the DanceMoE
+  pipeline (Algorithms 1+2) and the paper's baselines (Uniform, Redundance,
+  SmartMoE, EPLB). Policies are registered by name so launchers, benchmarks
+  and the simulator select them with a string.
+
+* ``PlacementController`` — the single owner of the observe -> place ->
+  adopt loop: it ingests activation statistics, periodically asks its
+  policy for a candidate plan, applies the Eq.-4 adopt decision
+  (``should_migrate``), and records migration events. It absorbs the review
+  logic that used to be duplicated between ``serving.scheduler
+  .GlobalScheduler`` (batch-clocked, JAX engine) and ``core.migration
+  .MigrationController`` (wall-clock, simulator); both survive as thin
+  deprecated shims over this class.
+
+The controller is clock-agnostic: ``now`` is any monotonically increasing
+scalar (seconds in the simulator, decode rounds in the serving runtime) and
+``interval`` is measured in the same units.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.placement import PlacementPlan, dancemoe_placement
+from repro.core.stats import ActivationStats
+
+
+# ---------------------------------------------------------------------------
+# Cluster view: what a policy is allowed to know about the hardware
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ClusterView:
+    """Capacity summary a placement policy consumes (decoupled from both
+    ``ClusterSpec`` and ``EPSpec`` so the same policy object serves the
+    simulator and the SPMD runtime)."""
+    capacity: np.ndarray                 # [N] total expert-slot budget
+    slots_cap: np.ndarray | None = None  # [N] per-(server, layer) slot cap
+
+    @property
+    def n(self) -> int:
+        return len(self.capacity)
+
+    @staticmethod
+    def from_cluster(cluster, profile) -> "ClusterView":
+        """From a simulator ``ClusterSpec`` + ``MoEProfile``."""
+        cap = cluster.expert_capacity(profile.expert_bytes)
+        slots = np.minimum(np.maximum(cap // profile.num_layers, 1),
+                           profile.num_experts)
+        return ClusterView(capacity=cap, slots_cap=slots)
+
+    @staticmethod
+    def from_ep_spec(spec, n_groups: int) -> "ClusterView":
+        """From the SPMD runtime's ``EPSpec`` (n_ep ranks x S slots over
+        ``n_groups`` MoE layers)."""
+        return ClusterView(
+            capacity=np.full(spec.n_ep, spec.slots * n_groups),
+            slots_cap=np.full(spec.n_ep, spec.slots))
+
+
+# ---------------------------------------------------------------------------
+# Policy protocol + registry
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class PlacementPolicy(Protocol):
+    def propose(self, freqs: np.ndarray,
+                cluster: ClusterView) -> PlacementPlan:
+        """freqs: [L, N, E] normalized activation frequencies."""
+        ...
+
+
+_REGISTRY: dict[str, type] = {}
+
+
+def register_policy(name: str):
+    def deco(cls):
+        _REGISTRY[name] = cls
+        cls.name = name
+        return cls
+    return deco
+
+
+def get_policy(name: str, **kwargs) -> PlacementPolicy:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown placement policy {name!r}; "
+                       f"available: {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kwargs)
+
+
+def list_policies() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+@register_policy("dancemoe")
+@dataclasses.dataclass
+class DanceMoEPolicy:
+    """Algorithm 1 + Algorithm 2 (+ spare-slot replication)."""
+    fill_spare: bool = True
+
+    def propose(self, freqs, cluster):
+        return dancemoe_placement(freqs, cluster.capacity,
+                                  cluster.slots_cap,
+                                  fill_spare=self.fill_spare)
+
+
+@register_policy("uniform")
+@dataclasses.dataclass
+class UniformPolicy:
+    """Megatron-style expert parallelism: expert e on server e % N."""
+
+    def propose(self, freqs, cluster):
+        from repro.core.baselines import uniform_plan
+        L, N, E = freqs.shape
+        return uniform_plan(L, N, E, cluster.capacity, cluster.slots_cap)
+
+
+@register_policy("redundance")
+@dataclasses.dataclass
+class RedundancePolicy:
+    """Uniform coverage + random duplication up to capacity."""
+    seed: int = 0
+
+    def propose(self, freqs, cluster):
+        from repro.core.baselines import redundance_plan
+        L, N, E = freqs.shape
+        return redundance_plan(L, N, E, cluster.capacity, cluster.slots_cap,
+                               seed=self.seed)
+
+
+@register_policy("smartmoe")
+@dataclasses.dataclass
+class SmartMoEPolicy:
+    """SmartMoE [ATC'23]-style workload-balanced placement."""
+
+    def propose(self, freqs, cluster):
+        from repro.core.baselines import smartmoe_plan
+        return smartmoe_plan(freqs, cluster.capacity, cluster.slots_cap)
+
+
+@register_policy("eplb")
+@dataclasses.dataclass
+class EPLBPolicy:
+    """DeepSeek-V3 Expert Parallelism Load Balancer."""
+
+    def propose(self, freqs, cluster):
+        from repro.core.baselines import eplb_plan
+        return eplb_plan(freqs, cluster.capacity, cluster.slots_cap)
+
+
+@dataclasses.dataclass
+class FnPolicy:
+    """Adapter: a bare ``freqs -> PlacementPlan`` callable as a policy
+    (the legacy ``placement_fn`` convention)."""
+    fn: Callable[[np.ndarray], PlacementPlan]
+    name: str = "fn"
+
+    def propose(self, freqs, cluster):
+        return self.fn(freqs)
+
+
+def as_policy(policy) -> PlacementPolicy:
+    """Normalize: policy object | registered name | bare callable."""
+    if isinstance(policy, str):
+        return get_policy(policy)
+    if hasattr(policy, "propose"):
+        return policy
+    if callable(policy):
+        return FnPolicy(policy)
+    raise TypeError(f"not a placement policy: {policy!r}")
+
+
+# ---------------------------------------------------------------------------
+# The controller: observe -> place -> adopt (Eq. 4) -> record
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PlacementDecision:
+    plan: PlacementPlan
+    adopted: bool
+    diag: dict
+
+
+@dataclasses.dataclass
+class PlacementController:
+    """Single system-wide placement brain (paper Fig. 4, left).
+
+    ``review(now, freqs)`` runs at most once per ``interval`` of the
+    caller's clock: it asks the policy for a candidate plan and adopts it
+    iff Eq. (4) holds (``C(P') + T_mig < C(P)``). The first review always
+    adopts (there is no incumbent to defend) and records an
+    ``{"reason": "initial"}`` event — the one code path for what
+    ``GlobalScheduler`` and ``MigrationController`` previously each
+    implemented with different bookkeeping.
+
+    ``cost=None`` disables the Eq.-4 gate (every review adopts) — useful
+    for always-follow policies in ablations.
+    """
+    policy: PlacementPolicy | Callable | str
+    cost: "CostModel | None" = None          # repro.core.migration.CostModel
+    cluster: ClusterView | None = None
+    interval: float = 300.0
+    stats: ActivationStats | None = None
+    plan: PlacementPlan | None = None
+    last_review: float | None = None
+    events: list = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        self.policy = as_policy(self.policy)
+
+    # -- stats ingestion ---------------------------------------------------
+    def observe(self, layer_counts: np.ndarray) -> None:
+        """layer_counts: [L, N, E] activation counts (JAX engine path)."""
+        self._stats().update(np.asarray(layer_counts, np.float64))
+
+    def observe_server(self, server: int, layer_counts: np.ndarray) -> None:
+        """layer_counts: [L, E] counts for one server (simulator path)."""
+        self._stats().update_server(server, layer_counts)
+
+    def freqs(self) -> np.ndarray:
+        return self._stats().freqs()
+
+    def _stats(self) -> ActivationStats:
+        if self.stats is None:
+            raise ValueError(
+                "PlacementController has no ActivationStats attached; pass "
+                "stats= at construction or supply freqs= to review()")
+        return self.stats
+
+    # -- review ------------------------------------------------------------
+    def propose(self, freqs: np.ndarray) -> PlacementPlan:
+        return self.policy.propose(freqs, self.cluster)
+
+    def review_due(self, now: float) -> bool:
+        return (self.last_review is None
+                or now - self.last_review >= self.interval)
+
+    def review(self, now: float, freqs: np.ndarray | None = None, *,
+               force: bool = False) -> PlacementDecision:
+        """One control-loop tick. Returns the (possibly unchanged) active
+        plan; ``adopted`` says whether a migration happened at this tick."""
+        if not force and not self.review_due(now):
+            return PlacementDecision(self.plan, False, {"reason": "interval"})
+        if freqs is None:
+            freqs = self.freqs()
+        self.last_review = now
+        candidate = self.propose(freqs)
+        if self.plan is None:
+            adopt, diag = True, {"reason": "initial"}
+        elif self.cost is None:
+            adopt, diag = True, {"reason": "no-cost-model"}
+        else:
+            from repro.core.migration import should_migrate
+            adopt, diag = should_migrate(self.plan, candidate, freqs,
+                                         self.cost)
+        diag = dict(diag)
+        diag["time"] = now
+        diag["adopted"] = adopt
+        self.events.append(diag)
+        if adopt:
+            self.plan = candidate
+        return PlacementDecision(self.plan, adopt, diag)
+
+    @property
+    def migrations(self) -> list:
+        """Adopted non-initial reviews (actual placement changes)."""
+        return [e for e in self.events
+                if e["adopted"] and e.get("reason") != "initial"]

@@ -225,7 +225,7 @@ def _analyse(compiled) -> dict:
 def _lower_compile(cfg, shape, mesh, scan_layers=True, **kw):
     fn, kwargs = build_lowerable(cfg, shape, mesh, scan_layers=scan_layers,
                                  **kw)
-    with jax.set_mesh(mesh):
+    with mesh_lib.set_mesh(mesh):
         lowered = jax.jit(fn).lower(**kwargs)
         return lowered.compile()
 
@@ -303,7 +303,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     try:
         # 1) the deliverable: full model, scanned layers, lower + compile
         fn, kwargs = build_lowerable(cfg, shape, mesh, **build_kw)
-        with jax.set_mesh(mesh):
+        with mesh_lib.set_mesh(mesh):
             lowered = jax.jit(fn).lower(**kwargs)
             rec["lower_s"] = round(time.time() - t0, 1)
             t1 = time.time()

@@ -7,20 +7,40 @@ module constants — importing this module never touches jax device state.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit axis types on the mesh
+    from jax.sharding import AxisType
+    _AXIS_KW = True
+except ImportError:  # older jax: meshes are implicitly Auto
+    AxisType = None
+    _AXIS_KW = False
+
+
+def _make_mesh(shape, axes):
+    if _AXIS_KW:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def set_mesh(mesh):
+    """Version-compat default-mesh context: ``jax.set_mesh`` on jax >= 0.5;
+    on 0.4.x the ``Mesh`` object itself is the (resource-env) context
+    manager and all our sharding is explicit anyway."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (possibly fake) devices exist."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return _make_mesh((data, model), ("data", "model"))
 
 
 # v5e hardware constants used by the roofline analysis

@@ -59,7 +59,7 @@ def run_variant(arch: str, shape_name: str, variant: str,
         # full scanned compile: proof + memory analysis
         fn, kwargs = build_lowerable(cfg, shape, mesh, **kw)
         donate = ("cache",) if "cache" in kwargs else ()
-        with jax.set_mesh(mesh):
+        with mesh_lib.set_mesh(mesh):
             compiled = jax.jit(fn, donate_argnames=donate).lower(
                 **kwargs).compile()
         if donate:

@@ -1,8 +1,13 @@
-"""Production serving launcher: batched prefill + decode for a selected
+"""Production serving launcher: continuous-batching runtime for a selected
 architecture (reduced variant on CPU; full config on TPU slices), with the
-DanceMoE placement pipeline active for MoE architectures.
+unified placement control plane active for MoE architectures.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --steps 8
+
+Requests are submitted as a stream (staggered into the queue) and served by
+``ServingRuntime``: interleaved prefill/decode over a fixed KV-slot pool,
+with the ``--policy`` placement policy reviewed periodically by the
+``PlacementController`` (Eq.-4 adopt decision).
 """
 from __future__ import annotations
 
@@ -10,24 +15,30 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, list_configs
-from repro.core.placement import build_ep_placement, dancemoe_placement
+from repro.core.migration import CostModel
+from repro.core.policies import (ClusterView, PlacementController,
+                                 get_policy, list_policies)
 from repro.data.pipeline import TaskTokenSource
 from repro.launch.mesh import make_test_mesh
 from repro.models import moe as M
 from repro.models import transformer as tr
 from repro.serving.engine import ServingEngine
+from repro.serving.runtime import ServingRuntime
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list(list_configs()))
-    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt", type=int, default=32)
     ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="KV-cache pool rows (decode batch width)")
+    ap.add_argument("--policy", default="dancemoe", choices=list_policies())
+    ap.add_argument("--review-rounds", type=int, default=16,
+                    help="placement review period in decode rounds")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
 
@@ -35,6 +46,7 @@ def main():
     if not args.full:
         cfg = cfg.reduced()
     mesh = make_test_mesh(1, 1)
+    controller = None
     if cfg.is_moe:
         spec = M.EPSpec.build(mesh, cfg, ep_axes=("model",),
                               slots=cfg.num_experts, capacity=8192,
@@ -43,23 +55,44 @@ def main():
         pl = M.uniform_placement(spec.n_ep, spec.slots, cfg.num_experts)
         _, n_groups = cfg.layer_pattern()
         pls = tr.stack_placement(pl, n_groups)
+        cm = CostModel(expert_bytes=3 * cfg.d_model * cfg.d_ff * 2,
+                       activation_bytes=cfg.d_model * 2, bandwidth=62.5e6,
+                       tokens_per_horizon=1e5)
+        controller = PlacementController(
+            policy=get_policy(args.policy), cost=cm,
+            cluster=ClusterView.from_ep_spec(spec, n_groups),
+            interval=args.review_rounds)
+        # dense master copy: live migration re-gathers expert slots from it
+        rt_dense = tr.Runtime(cfg=cfg, mesh=mesh, moe_impl="dense")
+        params_dense = tr.init_params(rt_dense, jax.random.PRNGKey(0))
+        params = dict(params_dense)
+        params["groups"] = M.regather_ep_groups(params_dense["groups"], pls,
+                                                n_groups)
+        dense_master = params_dense["groups"]
     else:
         rt = tr.Runtime(cfg=cfg, mesh=mesh)
         pls = None
-    params = tr.init_params(rt, jax.random.PRNGKey(0))
+        params = tr.init_params(rt, jax.random.PRNGKey(0))
+        dense_master = None
     engine = ServingEngine(rt=rt, params=params, placement=pls,
+                           dense_master=dense_master,
                            max_len=args.prompt + args.steps + 8)
+    runtime = ServingRuntime(engine, max_slots=args.slots,
+                             controller=controller)
     src = TaskTokenSource("serve", cfg.vocab_size, seed=0)
-    t0 = time.time()
     if cfg.frontend != "none":
         print(f"{cfg.name}: modality frontend is stubbed; serving over "
               "token prompts against the decoder backbone")
-    gen, info = engine.generate(src.sample(args.batch, args.prompt),
-                                steps=args.steps)
+    t0 = time.time()
+    rids = [runtime.submit(src.sample(1, args.prompt)[0], args.steps)
+            for _ in range(args.requests)]
+    outs = runtime.run()
     dt = time.time() - t0
-    print(f"{cfg.name}: generated {gen.shape} tokens in {dt:.1f}s "
-          f"({args.batch * args.steps / dt:.1f} tok/s) "
-          f"local_ratio={info['local_frac']:.3f}")
+    n_tok = sum(len(outs[r]) for r in rids)
+    print(f"{cfg.name}: served {len(rids)} requests / {n_tok} tokens in "
+          f"{dt:.1f}s ({n_tok / dt:.1f} tok/s) "
+          f"peak_batch={runtime.max_concurrency} "
+          f"migrations={len(runtime.migrations)}")
 
 
 if __name__ == "__main__":

@@ -131,13 +131,16 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     """Single-token attention against a cache.
 
     q: [B, 1, H, hd]; caches: [B, S, KVH, hd]. `pos` is the current absolute
-    position (already written to the cache). With ``ring=True`` the cache is
-    a sliding-window ring buffer: every entry older than `pos - S` has been
-    overwritten, so validity is `entry_age < S` via the stored slot index.
+    position (already written to the cache) — a scalar shared by the batch,
+    or a [B] vector when rows sit at different positions (continuous
+    batching). With ``ring=True`` the cache is a sliding-window ring buffer:
+    every entry older than `pos - S` has been overwritten, so validity is
+    `entry_age < S` via the stored slot index.
     """
     B, S, kvh, hd = k_cache.shape
     H = q.shape[2]
     grp = H // kvh
+    pos = jnp.broadcast_to(jnp.asarray(pos), (B,))         # [B]
     kex = jnp.repeat(k_cache, grp, axis=2)                 # [B,S,H,hd] (fused)
     vex = jnp.repeat(v_cache, grp, axis=2)
     if mesh is not None:
@@ -157,11 +160,11 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     if ring:
         # slot i currently holds absolute position: the latest p <= pos with
         # p % S == i. All S slots are valid once pos >= S - 1.
-        slot_pos = pos - ((pos - idx) % S)
-        valid = slot_pos >= 0
+        slot_pos = pos[:, None] - ((pos[:, None] - idx[None, :]) % S)
+        valid = slot_pos >= 0                              # [B, S]
     else:
-        valid = idx <= pos
-    s = jnp.where(valid[None, None, None], s, NEG_INF)
+        valid = idx[None, :] <= pos[:, None]               # [B, S]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(q.dtype), vex,
                      preferred_element_type=jnp.float32)
@@ -185,7 +188,10 @@ def attn_apply(p, cfg, x, *, ep: int, mode: str, cache=None, pos=None,
     h = rms_norm(x, p["norm"], norm_eps)
     q, k, v = _project_qkv(p, h, cfg, ep)
     if mode == "decode":
-        positions = jnp.full((B, 1), pos)
+        # pos: scalar (whole batch at one position) or [B] vector
+        # (continuous batching: every row has its own position)
+        positions = jnp.broadcast_to(
+            jnp.asarray(pos).reshape(-1, 1), (B, 1))
     else:
         positions = jnp.broadcast_to(jnp.arange(T), (B, T))
     q = apply_rope(q, positions, cfg.rope_theta)
@@ -249,12 +255,23 @@ def attn_apply(p, cfg, x, *, ep: int, mode: str, cache=None, pos=None,
     elif mode == "decode":
         S = cache["k"].shape[1]
         ring = window > 0  # windowed cache is a ring buffer (S == window)
-        slot = (pos % S) if ring else pos
+        pos_arr = jnp.asarray(pos)
+        slot = (pos_arr % S) if ring else pos_arr
         entry = _store(k, v)
-        new_cache = {key: lax.dynamic_update_slice(
-            cache[key], val.astype(cache[key].dtype),
-            (0, slot) + (0,) * (cache[key].ndim - 2))
-            for key, val in entry.items()}
+        if pos_arr.ndim == 0:
+            new_cache = {key: lax.dynamic_update_slice(
+                cache[key], val.astype(cache[key].dtype),
+                (0, slot) + (0,) * (cache[key].ndim - 2))
+                for key, val in entry.items()}
+        else:
+            # per-row write slot (continuous batching): one-hot scatter
+            # along the cache sequence dim
+            hit = slot[:, None] == jnp.arange(S)[None, :]  # [B, S]
+            new_cache = {}
+            for key, val in entry.items():
+                mask = hit.reshape((B, S) + (1,) * (cache[key].ndim - 2))
+                new_cache[key] = jnp.where(
+                    mask, val.astype(cache[key].dtype), cache[key])
         if kv_quant:
             kc = dequantize_kv(new_cache["k"], new_cache["k_scale"], q.dtype)
             vc = dequantize_kv(new_cache["v"], new_cache["v_scale"], q.dtype)

@@ -39,6 +39,17 @@ from jax.sharding import PartitionSpec as P
 
 from repro.models.layers import dense_init, rms_norm
 
+if hasattr(jax, "shard_map"):             # jax >= 0.5
+    def _shard_map(f, *, mesh, in_specs, out_specs):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+else:                                     # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _esm
+
+    def _shard_map(f, *, mesh, in_specs, out_specs):
+        return _esm(f, mesh=mesh, in_specs=in_specs,
+                    out_specs=out_specs, check_rep=False)
+
 
 @dataclasses.dataclass(frozen=True)
 class EPSpec:
@@ -161,6 +172,24 @@ def dense_to_ep(dense_p: dict, placement: EPPlacement) -> dict:
     out = {k: dense_p[k] for k in ("norm", "router")}
     for k in ("w1", "w3", "w2"):
         out[k] = dense_p[k][s2e]        # [n_ep, S, ...]
+    return out
+
+
+def regather_ep_groups(dense_groups: dict, placement_stacked,
+                       n_groups: int) -> dict:
+    """Apply ``dense_to_ep`` per layer group: dense master group params
+    (stacked [G, E, ...]) + stacked placement tables -> EP-layout groups.
+    Non-MoE groups pass through unchanged."""
+    out = {}
+    for k, v in dense_groups.items():
+        if "router" in v:
+            per = [dense_to_ep(jax.tree.map(lambda a: a[g], v),
+                               jax.tree.map(lambda a: a[g],
+                                            placement_stacked))
+                   for g in range(n_groups)]
+            out[k] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+        else:
+            out[k] = v
     return out
 
 
@@ -300,16 +329,21 @@ def _ep_dispatch_local(h_loc, p, placement, cfg, spec: EPSpec,
     return out, counts[None], local, aux
 
 
-def _ep_gather_local(h_loc, p, placement, cfg, spec: EPSpec,
+def _ep_gather_local(h_loc, m_loc, p, placement, cfg, spec: EPSpec,
                      use_kernel: bool, gather_axes: tuple[str, ...]):
     """Per-device body — decode gather mode. h_loc: [R, D] rows sharded over
-    the batch axes only (replicated over `model`)."""
+    the batch axes only (replicated over `model`). m_loc: [R] float row
+    validity mask — vacant slots in a continuous-batching pool carry 0 and
+    are excluded from the activation statistics (their compute is discarded
+    by the caller anyway)."""
     R, D = h_loc.shape
     E, K = cfg.num_experts, cfg.top_k
     n_ep, S, C2 = spec.n_ep, spec.slots, spec.slot_capacity
     my = lax.axis_index(spec.axes)
     h_all = (lax.all_gather(h_loc, gather_axes, tiled=True)
              if gather_axes else h_loc)                        # [Btok, D]
+    m_all = (lax.all_gather(m_loc, gather_axes, tiled=True)
+             if gather_axes else m_loc)                        # [Btok]
     Btok = h_all.shape[0]
     probs, topv, topi = route(p["router"], h_all, K)
     # Source EP rank of each gathered token (requests "arrive at" the first
@@ -341,23 +375,30 @@ def _ep_gather_local(h_loc, p, placement, cfg, spec: EPSpec,
     else:
         out = out_all
 
-    my_tokens = (src_ep[flat_src] == my).astype(jnp.float32)
+    valid = m_all[flat_src].astype(jnp.float32)
+    my_tokens = (src_ep[flat_src] == my).astype(jnp.float32) * valid
     counts = (jax.nn.one_hot(flat_e, E, dtype=jnp.float32)
               * my_tokens[:, None]).sum(0)
     non_ep = tuple(a for a in spec.mesh_axes
                    if a not in spec.axes and a not in gather_axes)
     if non_ep:
         counts = lax.psum(counts, non_ep)
-    local = lax.pmean(jnp.mean((tgt == src_ep[flat_src]).astype(jnp.float32)),
-                      spec.mesh_axes)
+    local = lax.pmean(
+        jnp.sum((tgt == src_ep[flat_src]).astype(jnp.float32) * valid)
+        / jnp.maximum(jnp.sum(valid), 1.0), spec.mesh_axes)
     aux = lax.pmean(aux_load_balance_loss(probs, topi, E), spec.mesh_axes)
     return out, counts[None], local, aux
 
 
 def moe_apply_ep(p, cfg, x, *, mesh, spec: EPSpec, placement: EPPlacement,
                  mode: str, use_kernel: bool = False,
-                 norm_eps: float = 1e-5, seq_sharded_out: bool = False):
-    """Placement-aware EP MoE. x: [B, T, D]. Returns (out, stats)."""
+                 norm_eps: float = 1e-5, seq_sharded_out: bool = False,
+                 token_mask=None):
+    """Placement-aware EP MoE. x: [B, T, D]. Returns (out, stats).
+
+    token_mask (decode only): [B] float validity per batch row; rows with 0
+    (vacant continuous-batching slots) are excluded from the gating
+    statistics."""
     B, T, D = x.shape
     h = rms_norm(x, p["norm"], norm_eps)
     wspec = {
@@ -378,8 +419,8 @@ def moe_apply_ep(p, cfg, x, *, mesh, spec: EPSpec, placement: EPPlacement,
         rows_spec = P(batch_row_axes if batch_row_axes else None, None)
         gather_axes = tuple(a for a in spec.axes if a in batch_row_axes)
 
-        def body(h_loc, p_loc, pl_loc):
-            return _ep_gather_local(h_loc, p_loc, pl_loc, cfg, spec,
+        def body(h_loc, m_loc, p_loc, pl_loc):
+            return _ep_gather_local(h_loc, m_loc, p_loc, pl_loc, cfg, spec,
                                     use_kernel, gather_axes)
     elif seq_sharded_out and T % sizes.get("model", 1) == 0:
         # sequence-parallel residual: h is [B(batch axes), T(model), D].
@@ -396,11 +437,9 @@ def moe_apply_ep(p, cfg, x, *, mesh, spec: EPSpec, placement: EPPlacement,
                                             pl_loc, cfg, spec, use_kernel)
             return o.reshape(b_, t_, d_), c, l, a
 
-        fn = jax.shard_map(body3, mesh=mesh,
-                           in_specs=(rows_spec3, wspec, pl_spec),
-                           out_specs=(rows_spec3, P(spec.axes, None), P(),
-                                      P()),
-                           check_vma=False)
+        fn = _shard_map(body3, mesh=mesh,
+                        in_specs=(rows_spec3, wspec, pl_spec),
+                        out_specs=(rows_spec3, P(spec.axes, None), P(), P()))
         out, counts, local, aux = fn(h, p_in, placement)
         stats = {"counts": counts.sum(0), "counts_per_rank": counts,
                  "aux_loss": aux, "local_frac": local}
@@ -408,17 +447,26 @@ def moe_apply_ep(p, cfg, x, *, mesh, spec: EPSpec, placement: EPPlacement,
     else:
         rows_spec = P(spec.dispatch_row_axes, None)
 
-        def body(h_loc, p_loc, pl_loc):
+        def body(h_loc, m_loc, p_loc, pl_loc):
+            # dispatch mode has no vacant rows: mask unused
             return _ep_dispatch_local(h_loc, p_loc, pl_loc, cfg, spec,
                                       use_kernel)
 
     out_specs = (rows_spec, P(spec.axes, None), P(), P())
+    mask_spec = P(rows_spec[0])
     rows = h.reshape(B * T, D)
     rows = lax.with_sharding_constraint(rows, NamedSharding(mesh, rows_spec))
-    fn = jax.shard_map(body, mesh=mesh,
-                       in_specs=(rows_spec, wspec, pl_spec),
-                       out_specs=out_specs, check_vma=False)
-    out_rows, counts, local, aux = fn(rows, p_in, placement)
+    if token_mask is None:
+        mask_rows = jnp.ones((B * T,), jnp.float32)
+    else:
+        mask_rows = jnp.broadcast_to(
+            token_mask.astype(jnp.float32)[:, None], (B, T)).reshape(B * T)
+    mask_rows = lax.with_sharding_constraint(
+        mask_rows, NamedSharding(mesh, mask_spec))
+    fn = _shard_map(body, mesh=mesh,
+                    in_specs=(rows_spec, mask_spec, wspec, pl_spec),
+                    out_specs=out_specs)
+    out_rows, counts, local, aux = fn(rows, mask_rows, p_in, placement)
     out = out_rows.reshape(B, T, D)
     if batch_row_axes and B % n_batch == 0:
         out = lax.with_sharding_constraint(

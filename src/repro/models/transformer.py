@@ -129,7 +129,7 @@ def _sp_scatter(rt: Runtime, x):
 
 
 def _apply_block(rt: Runtime, kind: str, p, h, *, mode, cache, pos,
-                 placement):
+                 placement, token_mask=None):
     cfg = rt.cfg
     window = rt.window
     sp = _sp_active(rt, mode)
@@ -159,7 +159,8 @@ def _apply_block(rt: Runtime, kind: str, p, h, *, mode, cache, pos,
                 placement=placement, mode=mode, use_kernel=rt.use_kernel,
                 norm_eps=cfg.norm_eps,
                 seq_sharded_out=(rt.layout in ("sp", "cp", "fsdp")
-                                 and mode != "decode"))
+                                 and mode != "decode"),
+                token_mask=token_mask)
         else:
             out, stats = moe_mod.moe_apply_dense(p, cfg, h,
                                                  norm_eps=cfg.norm_eps)
@@ -175,7 +176,7 @@ def _apply_block(rt: Runtime, kind: str, p, h, *, mode, cache, pos,
 
 
 def _apply_group(rt: Runtime, pattern, gp, shared_p, h, *, mode, gcache,
-                 pos, placement):
+                 pos, placement, token_mask=None):
     """Apply one scan group. Returns (h, new_gcache, moe_stats)."""
     new_cache = {}
     moe_stats = None
@@ -183,7 +184,7 @@ def _apply_group(rt: Runtime, pattern, gp, shared_p, h, *, mode, gcache,
         p = shared_p if kind == SHARED_ATTN else gp[f"b{i}"]
         c = gcache.get(f"b{i}") if gcache is not None else None
         h, extra = _apply_block(rt, kind, p, h, mode=mode, cache=c, pos=pos,
-                                placement=placement)
+                                placement=placement, token_mask=token_mask)
         if kind == MOE:
             moe_stats = extra  # <=1 MoE sublayer per group in all configs
         elif extra is not None:
@@ -209,13 +210,15 @@ def stack_placement(placement, n_groups: int):
         lambda a: _jnp.broadcast_to(a, (n_groups,) + a.shape), placement)
 
 
-def _run_stack(rt: Runtime, params, h, *, mode, cache, pos, placement):
+def _run_stack(rt: Runtime, params, h, *, mode, cache, pos, placement,
+               token_mask=None):
     """Scan the layer groups. Returns (h, new_cache, stacked_moe_stats).
 
     ``placement`` (EP MoE only): EPPlacement pytree with a leading
     [n_groups] dim — each scan step consumes its own layer's tables, which
     is how Algorithm 1's layer-wise expert-count allocation reaches the
-    runtime."""
+    runtime. ``token_mask`` ([B], decode only) excludes vacant
+    continuous-batching rows from the gating statistics."""
     cfg = rt.cfg
     pattern, n_groups = cfg.layer_pattern()
     shared_p = params.get("shared_attn")
@@ -232,7 +235,7 @@ def _run_stack(rt: Runtime, params, h, *, mode, cache, pos, placement):
         gp, gcache, gpl = xs
         hh, new_gcache, mstats = _apply_group(
             rt, pattern, gp, shared_p, hh, mode=mode, gcache=gcache,
-            pos=pos, placement=gpl)
+            pos=pos, placement=gpl, token_mask=token_mask)
         if mstats is None:
             mstats = _zero_moe_stats(rt)
         return hh, (new_gcache, mstats)
@@ -371,13 +374,18 @@ def prefill(rt: Runtime, params, tokens=None, embeds=None, placement=None,
     return logits, new_cache, mstats
 
 
-def decode_step(rt: Runtime, params, cache, tokens, pos, placement=None):
-    """tokens: [B, 1] int32; pos: scalar int32 (current position).
+def decode_step(rt: Runtime, params, cache, tokens, pos, placement=None,
+                token_mask=None):
+    """tokens: [B, 1] int32; pos: scalar int32 (whole batch at one
+    position) or [B] int32 vector (continuous batching: per-row positions).
+    token_mask: optional [B] float validity — 0-rows (vacant pool slots)
+    are excluded from the MoE gating statistics.
     Returns (logits [B, V], new_cache, moe_stats)."""
     h = _embed(rt, params, tokens)
     h, new_cache, mstats = _run_stack(rt, params, h, mode="decode",
                                       cache=cache, pos=pos,
-                                      placement=placement)
+                                      placement=placement,
+                                      token_mask=token_mask)
     logits = _logits(rt, params, h[:, -1])
     logits, new_cache = _constrain_outputs(rt, logits, new_cache)
     return logits, new_cache, mstats

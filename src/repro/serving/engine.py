@@ -36,8 +36,9 @@ class ServingEngine:
             return tr.prefill(rt, params, tokens=tokens, placement=placement,
                               cache_len=self.max_len)
 
-        def _decode(params, cache, tokens, pos, placement):
-            return tr.decode_step(rt, params, cache, tokens, pos, placement)
+        def _decode(params, cache, tokens, pos, placement, token_mask=None):
+            return tr.decode_step(rt, params, cache, tokens, pos, placement,
+                                  token_mask=token_mask)
 
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode)
@@ -50,7 +51,9 @@ class ServingEngine:
         assert T + steps <= self.max_len
         logits, cache, mstats = self._prefill(self.params, jnp.asarray(tokens),
                                               self.placement)
-        self._ingest(mstats, weight=T)
+        # counts_per_rank are raw token counts: a T-token prefill already
+        # carries T x the mass of one decode step, so no extra weighting.
+        self._ingest(mstats)
         outs = []
         cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         local_fracs = []
@@ -58,7 +61,7 @@ class ServingEngine:
             outs.append(cur)
             logits, cache, mstats = self._decode(
                 self.params, cache, cur, jnp.int32(T + i), self.placement)
-            self._ingest(mstats, weight=1)
+            self._ingest(mstats)
             if mstats is not None:
                 local_fracs.append(float(mstats["local_frac"].mean()))
             cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
@@ -67,9 +70,13 @@ class ServingEngine:
             "local_frac": float(np.mean(local_fracs)) if local_fracs else 1.0}
 
     def _ingest(self, mstats, weight: float = 1.0):
+        """Feed gating statistics to the scheduler-side tracker. ``weight``
+        rescales this update's counts (e.g. to down-weight stats from a
+        batch containing padding-only rows); it was previously accepted but
+        silently ignored."""
         if mstats is None:
             return
-        counts = np.asarray(mstats["counts_per_rank"], np.float64)
+        counts = np.asarray(mstats["counts_per_rank"], np.float64) * weight
         self.stats.update(counts)
 
     # ------------------------------------------------------------------
@@ -80,18 +87,10 @@ class ServingEngine:
         self.placement = jax.tree.map(jnp.asarray, new_placement_stacked)
         if self.dense_master is None:
             return
-        groups = dict(self.params["groups"])
-        g_idx = 0
-        for k in sorted(groups):
-            if "router" not in groups[k]:
-                continue
-            dense = self.dense_master[k]          # stacked [G, E, ...]
-            per = []
-            for g in range(self.n_groups):
-                pl_g = jax.tree.map(lambda a: a[g], self.placement)
-                dp = jax.tree.map(lambda a: a[g], dense)
-                per.append(moe_mod.dense_to_ep(dp, pl_g))
-            groups[k] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+        regathered = moe_mod.regather_ep_groups(
+            self.dense_master, self.placement, self.n_groups)
+        moe_groups = {k: v for k, v in regathered.items()
+                      if "router" in self.dense_master[k]}
         params = dict(self.params)
-        params["groups"] = {**self.params["groups"], **groups}
+        params["groups"] = {**self.params["groups"], **moe_groups}
         self.params = params

@@ -1,0 +1,209 @@
+"""Continuous-batching serving runtime on top of the jitted ``ServingEngine``
+step functions.
+
+``ServingEngine.generate`` serves one synchronous batch: every request in it
+starts and finishes together. This runtime serves a *request stream*
+instead:
+
+* a request queue — ``submit()`` at any time, including mid-stream;
+* a slot-based KV-cache pool — a fixed pool of ``max_slots`` cache rows,
+  allocated once, so the decode step compiles exactly once;
+* interleaved prefill/decode — arriving requests are prefilled (batched by
+  prompt length) and their cache rows written into free pool slots, then
+  every active slot advances one token per decode round regardless of when
+  it arrived (per-row cache positions via the vector-``pos`` decode path).
+
+Outputs are token-identical to sequential ``generate()`` calls as long as
+the EP dispatch capacities are not saturated (rows are independent in
+attention; the MoE layer couples them only through capacity dropping).
+
+The runtime also hosts the serving side of the placement control plane: it
+feeds gating statistics to a ``PlacementController`` and applies adopted
+plans to the engine (re-gather + table swap, no recompile).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.placement import build_ep_placement
+from repro.core.policies import PlacementController
+from repro.models import transformer as tr
+from repro.serving.engine import ServingEngine
+
+
+@dataclasses.dataclass
+class GenRequest:
+    """One queued generation request."""
+    rid: int
+    prompt: np.ndarray            # [T] int32
+    max_new_tokens: int
+
+
+@dataclasses.dataclass
+class _Slot:
+    """State of one occupied KV-cache pool row."""
+    rid: int
+    pos: int                      # next cache write position
+    last: int                     # last emitted token (next decode input)
+    tokens: list                  # emitted tokens so far
+    need: int                     # total tokens to emit
+
+
+class ServingRuntime:
+    """Continuous batching over a fixed KV-slot pool.
+
+    engine:      a ``ServingEngine`` (its jitted prefill/decode are reused).
+    max_slots:   decode batch width == KV pool rows (one compile).
+    controller:  optional ``PlacementController``; its clock is decode
+                 rounds (set ``interval`` accordingly). Adopted plans are
+                 applied to the engine via ``engine.migrate``.
+    """
+
+    def __init__(self, engine: ServingEngine, max_slots: int = 4,
+                 controller: PlacementController | None = None):
+        self.engine = engine
+        self.max_slots = max_slots
+        self.controller = controller
+        if controller is not None:
+            if controller.stats is None:
+                controller.stats = engine.stats
+            if controller.last_review is None:
+                # start the review clock: the first (initial-adopt) review
+                # must also wait a full interval of observed traffic, not
+                # fire on decode round 1 with near-empty stats
+                controller.last_review = 0.0
+        self.pool = tr.init_cache(engine.rt, max_slots, engine.max_len)
+        self.slots: list[_Slot | None] = [None] * max_slots
+        self.queue: collections.deque[GenRequest] = collections.deque()
+        self.finished: dict[int, np.ndarray] = {}
+        self.rounds = 0               # decode rounds served (controller clock)
+        self.max_concurrency = 0      # peak active slots in one decode batch
+        self.migrations: list = []
+        self._next_rid = 0
+
+        def _write_rows(pool, new, idx):
+            return jax.tree.map(
+                lambda P, c: P.at[:, idx].set(c.astype(P.dtype)), pool, new)
+
+        self._write_rows = jax.jit(_write_rows)
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
+        """Enqueue one request; returns its id. ``prompt``: [T] int tokens."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if len(prompt) + max_new_tokens > self.engine.max_len:
+            raise ValueError(
+                f"prompt({len(prompt)}) + max_new_tokens({max_new_tokens}) "
+                f"exceeds the pool's max_len={self.engine.max_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(GenRequest(rid, prompt, max_new_tokens))
+        return rid
+
+    @property
+    def active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    # ------------------------------------------------------------------
+    def _free_slot_ids(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def _admit(self) -> int:
+        """Prefill waiting requests into free slots (batching same-length
+        prompts so each distinct length compiles once). Returns #admitted."""
+        admitted = 0
+        while self.queue and self._free_slot_ids():
+            free = self._free_slot_ids()
+            T = len(self.queue[0].prompt)
+            group: list[GenRequest] = []
+            rest: collections.deque = collections.deque()
+            while self.queue and len(group) < len(free):
+                r = self.queue.popleft()
+                (group if len(r.prompt) == T else rest).append(r)
+            self.queue = rest + self.queue
+            tokens = np.stack([r.prompt for r in group])           # [b, T]
+            logits, cache, mstats = self.engine._prefill(
+                self.engine.params, jnp.asarray(tokens),
+                self.engine.placement)
+            self.engine._ingest(mstats)
+            idx = jnp.asarray(free[:len(group)], jnp.int32)
+            self.pool = self._write_rows(self.pool, cache, idx)
+            first = np.asarray(jnp.argmax(logits, -1), np.int32)   # [b]
+            for j, r in enumerate(group):
+                slot = _Slot(rid=r.rid, pos=T, last=int(first[j]),
+                             tokens=[int(first[j])], need=r.max_new_tokens)
+                self.slots[free[j]] = slot
+                self._retire_if_done(free[j])
+            admitted += len(group)
+        return admitted
+
+    def _retire_if_done(self, i: int) -> bool:
+        slot = self.slots[i]
+        if slot is not None and len(slot.tokens) >= slot.need:
+            self.finished[slot.rid] = np.asarray(slot.tokens, np.int32)
+            self.slots[i] = None
+            return True
+        return False
+
+    # ------------------------------------------------------------------
+    def _decode_round(self) -> None:
+        """Advance every active slot one token in one shared decode batch."""
+        act = [i for i, s in enumerate(self.slots) if s is not None]
+        if not act:
+            return
+        self.max_concurrency = max(self.max_concurrency, len(act))
+        cur = np.zeros((self.max_slots, 1), np.int32)
+        pos = np.zeros((self.max_slots,), np.int32)
+        mask = np.zeros((self.max_slots,), np.float32)
+        for i in act:
+            cur[i, 0] = self.slots[i].last
+            pos[i] = self.slots[i].pos
+            mask[i] = 1.0
+        # vacant rows decode garbage tokens whose outputs are discarded;
+        # the token mask keeps them out of the gating statistics too
+        logits, self.pool, mstats = self.engine._decode(
+            self.engine.params, self.pool, jnp.asarray(cur),
+            jnp.asarray(pos), self.engine.placement, jnp.asarray(mask))
+        self.engine._ingest(mstats)
+        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)         # [B]
+        for i in act:
+            slot = self.slots[i]
+            slot.pos += 1
+            slot.last = int(nxt[i])
+            slot.tokens.append(int(nxt[i]))
+            self._retire_if_done(i)
+        self.rounds += 1
+        self._maybe_review()
+
+    def _maybe_review(self) -> None:
+        ctrl = self.controller
+        if ctrl is None or not ctrl.review_due(self.rounds):
+            return
+        dec = ctrl.review(self.rounds)
+        if dec.adopted and self.engine.rt.ep_spec is not None:
+            stacked = build_ep_placement(dec.plan,
+                                         self.engine.rt.ep_spec.slots)
+            self.engine.migrate(stacked)
+            self.migrations.append(dec.diag)
+
+    # ------------------------------------------------------------------
+    def step(self) -> bool:
+        """One scheduler tick: admit what fits, then one decode round.
+        Returns True while there is (or was) work."""
+        had_work = bool(self.queue) or self.active > 0
+        self._admit()
+        self._decode_round()
+        return had_work
+
+    def run(self) -> dict[int, np.ndarray]:
+        """Serve until queue and slots drain; returns {rid: tokens}."""
+        while self.queue or self.active:
+            self.step()
+        return dict(self.finished)

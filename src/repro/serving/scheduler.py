@@ -1,10 +1,13 @@
-"""Global scheduler (paper Fig. 4, left): maintains the system-wide view —
-activation statistics per EP rank, placement strategy, and the migration
-policy — and drives the serving engine.
+"""DEPRECATED shim — the global scheduler's review logic now lives in
+``repro.core.policies.PlacementController`` and the serving loop in
+``repro.serving.runtime.ServingRuntime``.
 
-The runtime reports gating statistics after every batch (``counts_per_rank``
-from the MoE layer); the scheduler periodically re-runs the placement
-pipeline and, when Eq. (4) favors it, instructs the engine to migrate."""
+``GlobalScheduler`` is kept for the legacy batch-clocked API
+(``after_batch() -> bool``): it counts served batches, asks the unified
+controller to review at the configured cadence, and applies adopted plans
+to the engine. New code should construct a ``PlacementController`` and a
+``ServingRuntime`` directly (see serving/README.md for the migration
+note)."""
 from __future__ import annotations
 
 import dataclasses
@@ -12,9 +15,9 @@ from typing import Callable
 
 import numpy as np
 
-from repro.core.migration import CostModel, should_migrate
-from repro.core.placement import PlacementPlan, build_ep_placement, \
-    dancemoe_placement
+from repro.core.migration import CostModel
+from repro.core.placement import PlacementPlan, build_ep_placement
+from repro.core.policies import ClusterView, PlacementController, get_policy
 from repro.serving.engine import ServingEngine
 
 
@@ -25,35 +28,33 @@ class GlobalScheduler:
     cost: CostModel
     interval_batches: int = 8             # review period (batches ~ minutes)
     placement_fn: Callable | None = None  # freqs -> PlacementPlan
-    current_plan: PlacementPlan | None = None
-    events: list = dataclasses.field(default_factory=list)
     _batches: int = 0
 
-    def _place(self, freqs):
-        if self.placement_fn is not None:
-            return self.placement_fn(freqs)
-        slots = np.full(len(self.capacity), self.engine.rt.ep_spec.slots)
-        return dancemoe_placement(freqs, self.capacity, slots)
+    def __post_init__(self):
+        spec = self.engine.rt.ep_spec
+        cluster = ClusterView(
+            capacity=np.asarray(self.capacity),
+            slots_cap=np.full(len(self.capacity), spec.slots))
+        self.ctrl = PlacementController(
+            policy=self.placement_fn if self.placement_fn is not None
+            else get_policy("dancemoe"),
+            cost=self.cost, cluster=cluster,
+            interval=self.interval_batches, stats=self.engine.stats)
+        self.events = self.ctrl.events
+
+    @property
+    def current_plan(self) -> PlacementPlan | None:
+        return self.ctrl.plan
 
     def after_batch(self) -> bool:
         """Call once per served batch; returns True if a migration ran."""
         self._batches += 1
         if self._batches % self.interval_batches:
             return False
-        freqs = self.engine.stats.freqs()
-        candidate = self._place(freqs)
-        if self.current_plan is None:
-            adopt, diag = True, {"reason": "initial"}
-        else:
-            adopt, diag = should_migrate(self.current_plan, candidate,
-                                         freqs, self.cost)
-        diag = dict(diag)
-        diag["batch"] = self._batches
-        diag["adopted"] = adopt
-        self.events.append(diag)
-        if adopt:
-            self.current_plan = candidate
-            stacked = build_ep_placement(candidate,
+        dec = self.ctrl.review(self._batches, force=True)
+        dec.diag["batch"] = self._batches
+        if dec.adopted:
+            stacked = build_ep_placement(dec.plan,
                                          self.engine.rt.ep_spec.slots)
             self.engine.migrate(stacked)
-        return adopt
+        return dec.adopted

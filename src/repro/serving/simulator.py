@@ -1,18 +1,28 @@
 """Event-driven multi-server MoE inference simulator (paper Sec. IV).
 
-Five components, as in the paper's simulator description:
-  1. Prompt sequence generator  — Poisson arrivals + token volumes
-     (``repro.data.traces``).
-  2. Prompt routing generator   — samples per-layer expert activations from
-     the request's task profile and routes them under a placement plan.
-  3. Comm/comp time estimator   — linear per-token-batch model from the
-     cluster spec (bandwidth, RTT, FLOP rates, IO speed).
-  4. Time-stamp calculator      — per-layer Eq.-1 semantics: a layer
-     completes when its slowest expert invocation returns
-     (max over experts of comm + comp), on top of the dense-path time.
-  5. System timeline scheduler  — per-server FIFO occupancy plus
-     asynchronous remote-compute load on target servers; optional periodic
-     migration (Eq. 4) with per-server weight-loading pauses (Eq. 3).
+Decomposed into the paper's five components, each a small class that can be
+reused or swapped independently:
+
+  1. ``ArrivalSource``      — prompt sequence generator (Poisson arrivals +
+     token volumes, from ``repro.data.traces``).
+  2. request routing        — per-layer expert activations sampled from the
+     request's task profile (``TimeModel.sample_layer_counts``) + server
+     selection (``Router``: home server or least-loaded redirect).
+  3. ``TimeModel``          — linear comm/comp estimator from the cluster
+     spec (bandwidth, RTT, FLOP rates, IO speed).
+  4. Eq.-1 time stamps      — a layer completes when its slowest expert
+     invocation returns (``TimeModel.collab_layer``), on top of the
+     dense-path time.
+  5. ``Timeline``           — per-server FIFO occupancy plus asynchronous
+     remote-compute load on target servers; migration adds per-server
+     weight-loading pauses (Eq. 3).
+
+Placement and migration run through the unified control plane
+(``repro.core.policies.PlacementController``): the simulator feeds it
+per-request activation counts and asks it to review periodically — exactly
+the calls the JAX serving runtime makes, so policy/controller behaviour is
+identical in both worlds. A static ``PlacementPlan`` or the legacy
+``MigrationController`` shim are still accepted.
 
 Also implements the paper's Table-I baselines: single-server memory
 offloading ("MoE-Infinity"-style), with and without request redirection.
@@ -25,10 +35,163 @@ import numpy as np
 
 from repro.core.migration import MigrationController
 from repro.core.placement import PlacementPlan
+from repro.core.policies import PlacementController
 from repro.core.stats import ActivationStats
-from repro.data.traces import Workload, sample_expert_counts
+from repro.data.traces import Request, Workload
 from repro.serving.cluster import ClusterSpec, MoEProfile
 
+
+# ---------------------------------------------------------------------------
+# Components
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ArrivalSource:
+    """Component 1: yields requests in arrival order."""
+    workload: Workload
+
+    def __iter__(self):
+        return iter(self.workload.requests)
+
+
+@dataclasses.dataclass
+class Timeline:
+    """Component 5: per-server occupancy. ``free[n]`` is the time server n
+    finishes its current FIFO backlog; remote expert calls add asynchronous
+    compute load to their target server."""
+    free: np.ndarray                        # [N]
+
+    @staticmethod
+    def create(n: int) -> "Timeline":
+        return Timeline(free=np.zeros(n))
+
+    def start_time(self, server: int, arrival: float) -> float:
+        return max(arrival, float(self.free[server]))
+
+    def occupy(self, server: int, until: float) -> None:
+        self.free[server] = until
+
+    def add_async(self, targets: np.ndarray, comp: np.ndarray) -> None:
+        np.add.at(self.free, targets, comp)
+
+    def pause(self, delays: np.ndarray) -> None:
+        """Stall every server (Eq.-3 weight loading)."""
+        self.free += delays
+
+
+@dataclasses.dataclass
+class Router:
+    """Server selection: the request's home server, or (``redirect``) the
+    server that can start it earliest."""
+    redirect: bool = False
+
+    def route(self, req: Request, timeline: Timeline) -> int:
+        if self.redirect:
+            return int(np.argmin(np.maximum(timeline.free, req.arrival)))
+        return req.server
+
+
+class TimeModel:
+    """Components 3 + 4: the linear per-token-batch comm/comp estimator and
+    the Eq.-1 per-layer completion semantics."""
+
+    def __init__(self, cluster: ClusterSpec, profile: MoEProfile):
+        self.cluster, self.profile = cluster, profile
+        self.speeds = np.array([s.compute_speed for s in cluster.servers])
+        self.io = np.array([s.io_speed for s in cluster.servers])
+
+    def sample_layer_counts(self, rng, probs, tokens: int) -> np.ndarray:
+        """Component 2: per-layer expert activations for one request."""
+        return rng.multinomial(tokens * self.profile.top_k, probs)  # [L, E]
+
+    def dense_time(self, tokens: int, server: int) -> float:
+        return tokens * self.profile.dense_flops_per_token \
+            / self.speeds[server]
+
+    def collab_layer(self, counts: np.ndarray, res_l: np.ndarray,
+                     server: int, timeline: Timeline
+                     ) -> tuple[float, float, float]:
+        """Eq. 1 for one layer under a placement residency ``res_l``
+        [N, E]: local experts compute at the home server; remote experts go
+        to the nearest-idle replica (comm + comp, async load on the
+        target). Returns (layer time, local hits, total activations)."""
+        pf = self.profile
+        active = counts > 0
+        local = active & (res_l[server] > 0)
+        remote = active & ~local
+        comp_b = counts * pf.expert_flops_per_token
+        worst = float((comp_b * local).max() / self.speeds[server]) \
+            if local.any() else 0.0
+        hits = float(counts[local].sum())
+        tot = float(counts[active].sum())
+        if remote.any():
+            free_m = np.where(res_l.T[remote] > 0, timeline.free[None],
+                              np.inf)                     # [R, N]
+            tgt = np.argmin(free_m, axis=-1)
+            comm = (2 * counts[remote] * pf.hidden_bytes_per_token
+                    / self.cluster.bandwidth + self.cluster.rtt)
+            comp = comp_b[remote] / self.speeds[tgt]
+            timeline.add_async(tgt, comp)                 # async load
+            worst = max(worst, float((comm + comp).max()))
+        return worst, hits, tot
+
+    def offload_service(self, layer_counts: np.ndarray, server: int,
+                        cache_mask_n: np.ndarray
+                        ) -> tuple[float, float, float]:
+        """Single-server offloading: cached experts compute locally, misses
+        load weights from host RAM (MoE-Infinity baseline)."""
+        pf = self.profile
+        L = pf.num_layers
+        comp = layer_counts * pf.expert_flops_per_token / self.speeds[server]
+        miss = (layer_counts > 0) & ~cache_mask_n
+        t_le = comp + miss * (pf.expert_bytes / self.io[server])
+        service = t_le.max(-1).sum()
+        hits = float((layer_counts * cache_mask_n).sum())
+        tot = float(layer_counts.sum())
+        return service, hits, tot
+
+    def migration_pause(self, old_res: np.ndarray, new_res: np.ndarray
+                        ) -> tuple[np.ndarray, np.ndarray]:
+        """Eq. 3: per-server stall for newly placed expert weights.
+        Returns (delays [N] seconds, experts added per server [N])."""
+        added = np.maximum(new_res - old_res, 0).sum(0).sum(-1)   # [N]
+        return added * self.profile.expert_bytes / self.io, added
+
+
+@dataclasses.dataclass
+class LocalRatioTracker:
+    """Bucketed local-compute-ratio time series."""
+    bucket: float
+    samples: list = dataclasses.field(default_factory=list)
+    hits: float = 0.0
+    tot: float = 0.0
+    next_bucket: float = dataclasses.field(init=False)
+
+    def __post_init__(self):
+        self.next_bucket = self.bucket
+
+    def add(self, hits: float, tot: float) -> None:
+        self.hits += hits
+        self.tot += tot
+
+    def roll(self, now: float) -> None:
+        while now >= self.next_bucket:
+            self.samples.append((self.next_bucket,
+                                 self.hits / max(self.tot, 1.0)))
+            self.hits = self.tot = 0.0
+            self.next_bucket += self.bucket
+
+    def flush(self) -> None:
+        """Emit the trailing partial bucket (previously dropped)."""
+        if self.tot > 0:
+            self.samples.append((self.next_bucket,
+                                 self.hits / max(self.tot, 1.0)))
+            self.hits = self.tot = 0.0
+
+
+# ---------------------------------------------------------------------------
+# Results
+# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class SimResult:
@@ -49,27 +212,45 @@ class SimResult:
         return float(self.latencies.mean())
 
 
+# ---------------------------------------------------------------------------
+# Simulator
+# ---------------------------------------------------------------------------
+
 class EdgeSimulator:
     def __init__(self, cluster: ClusterSpec, profile: MoEProfile,
                  workload: Workload, plan: PlacementPlan | None = None,
-                 controller: MigrationController | None = None,
-                 mode: str = "collab", redirect: bool = False,
-                 seed: int = 0, ratio_bucket: float = 60.0):
+                 controller=None, mode: str = "collab",
+                 redirect: bool = False, seed: int = 0,
+                 ratio_bucket: float = 60.0):
         """mode: 'collab' (distributed expert calls under `plan`) or
         'offload' (each server caches its own top experts; misses load
         weights from host RAM — the MoE-Infinity-style baseline).
+        controller: a ``PlacementController`` (or the deprecated
+        ``MigrationController`` shim).
         redirect: route each request to the least-loaded server first."""
         assert mode in ("collab", "offload")
         if mode == "collab" and plan is None and controller is None:
             raise ValueError("collab mode needs a plan or a controller")
         self.cluster, self.profile, self.workload = cluster, profile, workload
-        self.plan, self.controller = plan, controller
-        self.mode, self.redirect = mode, redirect
+        self.plan = plan
+        self.controller = self._unwrap(controller)
+        self.mode = mode
         self.rng = np.random.default_rng(seed)
+        self.source = ArrivalSource(workload)
+        self.router = Router(redirect=redirect)
+        self.time_model = TimeModel(cluster, profile)
         self.ratio_bucket = ratio_bucket
 
+    @staticmethod
+    def _unwrap(controller) -> PlacementController | None:
+        if controller is None:
+            return None
+        if isinstance(controller, MigrationController):
+            return controller.ctrl
+        return controller
+
     # ------------------------------------------------------------------
-    def _offload_caches(self) -> list[set]:
+    def _offload_caches(self) -> list[list[set]]:
         """Per-server per-layer cached expert sets for offload mode (each
         server keeps its own most-frequent experts, split evenly across
         layers)."""
@@ -88,100 +269,71 @@ class EdgeSimulator:
 
     # ------------------------------------------------------------------
     def run(self) -> SimResult:
-        cl, pf, wl = self.cluster, self.profile, self.workload
+        cl, pf = self.cluster, self.profile
         N, L, E = cl.n, pf.num_layers, pf.num_experts
-        speeds = np.array([s.compute_speed for s in cl.servers])
-        io = np.array([s.io_speed for s in cl.servers])
+        tm = self.time_model
+        timeline = Timeline.create(N)
+        ratio = LocalRatioTracker(self.ratio_bucket)
 
-        stats = ActivationStats(L, N, E)
+        ctrl = self.controller
+        if ctrl is not None and ctrl.stats is None:
+            ctrl.stats = ActivationStats(L, N, E)
+        stats = ctrl.stats if ctrl is not None else ActivationStats(L, N, E)
         plan = self.plan
-        if self.controller is not None:
-            plan, _ = self.controller.maybe_migrate(0.0, stats.freqs())
+        if ctrl is not None:
+            plan = ctrl.review(0.0).plan            # initial placement
         res = plan.residency() if plan is not None else None  # [L, N, E]
 
-        caches = self._offload_caches() if self.mode == "offload" else None
-        free = np.zeros(N)              # server occupancy timeline
-        latencies, servers, finishes = [], [], []
-        migrations = []
-        loc_hits = loc_tot = 0.0
-        ratio_samples = []
-        next_bucket = self.ratio_bucket
-
         if self.mode == "offload":
+            caches = self._offload_caches()
             cache_mask = np.zeros((N, L, E), bool)
             for n in range(N):
                 for l in range(L):
                     cache_mask[n, l, list(caches[n][l])] = True
 
-        for r in wl.requests:
-            n = r.server
-            if self.redirect:
-                n = int(np.argmin(np.maximum(free, r.arrival)))
-            start = max(r.arrival, free[n])
+        latencies, servers, finishes = [], [], []
+        migrations = []
+
+        for r in self.source:
+            n = self.router.route(r, timeline)
+            start = timeline.start_time(n, r.arrival)
             tokens = r.prompt_tokens + r.decode_tokens
-            probs = wl.tasks[r.task].probs
-            # component 2: per-layer expert activations for this request
-            layer_counts = self.rng.multinomial(
-                tokens * pf.top_k, probs)                   # [L, E]
-            dense_t = tokens * pf.dense_flops_per_token / speeds[n]
-            service = 0.0
+            probs = self.workload.tasks[r.task].probs
+            layer_counts = tm.sample_layer_counts(self.rng, probs, tokens)
+            dense_t = tm.dense_time(tokens, n)
             if self.mode == "offload":
-                comp = layer_counts * pf.expert_flops_per_token / speeds[n]
-                miss = (layer_counts > 0) & ~cache_mask[n]
-                t_le = comp + miss * (pf.expert_bytes / io[n])
-                service = L * dense_t + t_le.max(-1).sum()
-                loc_hits += (layer_counts * cache_mask[n]).sum()
-                loc_tot += layer_counts.sum()
+                service, hits, tot = tm.offload_service(layer_counts, n,
+                                                        cache_mask[n])
+                service += L * dense_t
+                ratio.add(hits, tot)
             else:
+                service = 0.0
                 for l in range(L):
-                    counts = layer_counts[l]
-                    active = counts > 0
-                    local = active & (res[l, n] > 0)
-                    remote = active & ~local
-                    comp_b = counts * pf.expert_flops_per_token
-                    worst = float((comp_b * local).max() / speeds[n]) \
-                        if local.any() else 0.0
-                    loc_hits += counts[local].sum()
-                    loc_tot += counts[active].sum()
-                    if remote.any():
-                        # nearest-idle replica per remote expert (Eq. 1)
-                        free_m = np.where(res[l].T[remote] > 0, free[None],
-                                          np.inf)            # [R, N]
-                        tgt = np.argmin(free_m, axis=-1)
-                        comm = (2 * counts[remote]
-                                * pf.hidden_bytes_per_token / cl.bandwidth
-                                + cl.rtt)
-                        comp = comp_b[remote] / speeds[tgt]
-                        np.add.at(free, tgt, comp)            # async load
-                        worst = max(worst, float((comm + comp).max()))
+                    worst, hits, tot = tm.collab_layer(layer_counts[l],
+                                                       res[l], n, timeline)
+                    ratio.add(hits, tot)
                     service += dense_t + worst
-            free[n] = start + service
             done = start + service
+            timeline.occupy(n, done)
             latencies.append(done - r.arrival)
             servers.append(r.server)
             finishes.append(done)
             stats.update_server(r.server, layer_counts)
+            ratio.roll(done)
 
-            while done >= next_bucket:
-                ratio_samples.append((next_bucket,
-                                      loc_hits / max(loc_tot, 1.0)))
-                loc_hits = loc_tot = 0.0
-                next_bucket += self.ratio_bucket
-
-            if self.controller is not None:
-                plan2, adopted = self.controller.maybe_migrate(
-                    done, stats.freqs())
-                if adopted:
-                    # per-server weight-loading pause (Eq. 3)
-                    old_res, new_res = res, plan2.residency()
-                    added = np.maximum(new_res - old_res, 0).sum(0).sum(-1)
-                    free += added * pf.expert_bytes / io
+            if ctrl is not None:
+                dec = ctrl.review(done)
+                if dec.adopted:
+                    new_res = dec.plan.residency()
+                    delays, added = tm.migration_pause(res, new_res)  # Eq. 3
+                    timeline.pause(delays)
                     migrations.append({"time": done,
                                        "added_per_server": added.tolist()})
-                    plan, res = plan2, new_res
+                    plan, res = dec.plan, new_res
 
+        ratio.flush()
         return SimResult(latencies=np.array(latencies),
                          servers=np.array(servers),
                          finish_times=np.array(finishes),
-                         local_ratio_t=ratio_samples,
+                         local_ratio_t=ratio.samples,
                          migrations=migrations, stats=stats)

@@ -1,0 +1,87 @@
+"""Minimal deterministic stand-in for ``hypothesis`` (used only when the
+real package is not installed — see conftest.py).
+
+Implements just the surface this repo's property tests use: ``given``,
+``settings(max_examples=, deadline=)``, ``strategies.integers /
+sampled_from / composite``. Examples are drawn from a fixed-seed PRNG so
+runs are reproducible; there is no shrinking — a failing example is
+reported as-is by pytest.
+"""
+from __future__ import annotations
+
+import functools
+import random
+
+
+class _Strategy:
+    def example(self, rng: random.Random):
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, min_value, max_value):
+        self.lo, self.hi = min_value, max_value
+
+    def example(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, options):
+        self.options = list(options)
+
+    def example(self, rng):
+        return rng.choice(self.options)
+
+
+class _Composite(_Strategy):
+    def __init__(self, fn, args, kwargs):
+        self.fn, self.args, self.kwargs = fn, args, kwargs
+
+    def example(self, rng):
+        return self.fn(lambda s: s.example(rng), *self.args, **self.kwargs)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def sampled_from(options):
+        return _SampledFrom(options)
+
+    @staticmethod
+    def composite(fn):
+        def builder(*args, **kwargs):
+            return _Composite(fn, args, kwargs)
+        return builder
+
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        # zero-arg wrapper WITHOUT functools.wraps: pytest must not see the
+        # wrapped function's parameters (it would resolve them as fixtures)
+        def wrapper():
+            n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for _ in range(n):
+                drawn = tuple(s.example(rng) for s in strats)
+                fn(*drawn)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__dict__.update(fn.__dict__)
+        return wrapper
+    return deco

@@ -5,6 +5,14 @@ import sys
 # CPU device. Multi-device SPMD tests run in subprocesses (test_multidevice).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+try:  # property tests prefer real hypothesis; fall back to the local
+    # deterministic mini-implementation when it isn't installed
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_fallback
+    sys.modules["hypothesis"] = _hypothesis_fallback
+
 import jax
 
 jax.config.update("jax_enable_x64", False)

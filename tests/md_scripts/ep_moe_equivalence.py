@@ -7,8 +7,8 @@ from repro.configs import get_config
 from repro.models import moe as M
 
 cfg = get_config("mixtral-8x7b").reduced()
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_test_mesh, set_mesh
+mesh = make_test_mesh(2, 4)
 key = jax.random.PRNGKey(0)
 dense_p = M.moe_params_dense(key, cfg)
 x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, cfg.d_model))
@@ -23,7 +23,7 @@ for ep_axes in [("model",), ("data", "model")]:
         ("uniform", M.uniform_placement(n_ep, spec.slots, cfg.num_experts)),
     ]:
         ep_p = M.dense_to_ep(dense_p, pl)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             for mode in ["prefill", "decode"]:
                 xx = x if mode != "decode" else x[:, :1]
                 rr = ref if mode != "decode" else \

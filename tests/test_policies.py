@@ -1,0 +1,161 @@
+"""Unified placement control plane: policy registry + PlacementController
+(the single owner of the Eq.-4 adopt decision)."""
+import numpy as np
+import pytest
+
+from repro.core.migration import CostModel, MigrationController, \
+    should_migrate
+from repro.core.policies import (ClusterView, PlacementController,
+                                 as_policy, get_policy, list_policies)
+from repro.serving.cluster import DEEPSEEK_V2_LITE_PROFILE, paper_testbed
+from tests.test_placement import skewed_freqs
+
+
+def _cost_model(io=1e9):
+    return CostModel(expert_bytes=50e6, activation_bytes=8192,
+                     bandwidth=62.5e6, io_speed=io,
+                     tokens_per_horizon=1e4)
+
+
+def _cluster(L=4, N=3):
+    cap = np.array([14, 16, 20])
+    slots = np.minimum(cap // L + 2, 8)
+    return ClusterView(capacity=cap, slots_cap=slots)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def test_registry_covers_all_strategies():
+    assert set(list_policies()) >= {"dancemoe", "uniform", "redundance",
+                                    "smartmoe", "eplb"}
+
+
+@pytest.mark.parametrize("name", ["dancemoe", "uniform", "redundance",
+                                  "smartmoe", "eplb"])
+def test_every_policy_produces_valid_coverage(name):
+    L, N, E = 4, 3, 8
+    freqs = skewed_freqs(L, N, E, seed=2)
+    plan = get_policy(name).propose(freqs, _cluster(L, N))
+    assert plan.num_experts == E
+    # full expert coverage per layer
+    assert (plan.residency().sum(1) > 0).all()
+
+
+def test_cluster_view_constructors():
+    pf = DEEPSEEK_V2_LITE_PROFILE
+    cl = paper_testbed(0.3)
+    cv = ClusterView.from_cluster(cl, pf)
+    assert cv.n == cl.n
+    np.testing.assert_array_equal(cv.capacity,
+                                  cl.expert_capacity(pf.expert_bytes))
+    assert (cv.slots_cap >= 1).all()
+    assert (cv.slots_cap <= pf.num_experts).all()
+
+
+def test_as_policy_accepts_name_callable_and_policy():
+    L, N, E = 2, 3, 8
+    freqs = skewed_freqs(L, N, E, seed=0)
+    by_name = as_policy("uniform").propose(freqs, _cluster(2, 3))
+    by_obj = as_policy(get_policy("uniform")).propose(freqs, _cluster(2, 3))
+    from repro.core.baselines import uniform_plan
+    by_fn = as_policy(lambda f: uniform_plan(*f.shape)).propose(
+        freqs, _cluster(2, 3))
+    assert by_name.assign == by_obj.assign == by_fn.assign
+
+
+# ---------------------------------------------------------------------------
+# Controller: adopt exactly when should_migrate says so
+# ---------------------------------------------------------------------------
+
+def test_initial_review_always_adopts_and_is_recorded():
+    ctrl = PlacementController(policy="dancemoe", cost=_cost_model(),
+                               cluster=_cluster(), interval=300.0)
+    f = skewed_freqs(4, 3, 8, seed=1)
+    dec = ctrl.review(0.0, f)
+    assert dec.adopted and dec.plan is ctrl.plan
+    assert ctrl.events[-1]["reason"] == "initial"
+    # the legacy MigrationController shim adopted the initial plan but never
+    # recorded it; GlobalScheduler recorded it — the unified controller
+    # records it, and the shim filters it out for API compatibility
+    shim = MigrationController(
+        placement_fn=lambda fr: get_policy("dancemoe").propose(
+            fr, _cluster()),
+        cost=_cost_model(), interval=300.0)
+    plan0, adopted0 = shim.maybe_migrate(0.0, f)
+    assert adopted0 and shim.history == []
+    assert shim.ctrl.events[-1]["reason"] == "initial"
+
+
+def test_controller_matches_should_migrate_verbatim():
+    """The controller's adopt/reject sequence must equal a hand-rolled
+    should_migrate over the same candidate sequence."""
+    L, N, E = 4, 3, 8
+    cm = _cost_model()
+    cluster = _cluster()
+    policy = get_policy("dancemoe")
+    freq_seq = [skewed_freqs(L, N, E, seed=s) for s in (1, 9, 9, 3)]
+
+    ctrl = PlacementController(policy=policy, cost=cm, cluster=cluster,
+                               interval=1.0)
+    got = []
+    plan = None
+    expected = []
+    for i, f in enumerate(freq_seq):
+        dec = ctrl.review(float(i), f)
+        got.append(dec.adopted)
+        cand = policy.propose(f, cluster)
+        if plan is None:
+            exp = True
+        else:
+            exp, _ = should_migrate(plan, cand, f, cm)
+        expected.append(exp)
+        if exp:
+            plan = cand
+    assert got == expected
+    # and every non-interval review appended exactly one event
+    assert len(ctrl.events) == len(freq_seq)
+
+
+def test_interval_gating_and_force():
+    ctrl = PlacementController(policy="dancemoe", cost=_cost_model(),
+                               cluster=_cluster(), interval=300.0)
+    f1 = skewed_freqs(4, 3, 8, seed=1)
+    f2 = skewed_freqs(4, 3, 8, seed=9)
+    assert ctrl.review(0.0, f1).adopted
+    within = ctrl.review(100.0, f2)
+    assert not within.adopted and within.diag["reason"] == "interval"
+    assert len(ctrl.events) == 1           # interval skips are not events
+    forced = ctrl.review(100.0, f2, force=True)
+    assert forced.diag.get("reason") != "interval"
+    assert "C_old" in forced.diag                  # a real Eq.-4 review ran
+    due = ctrl.review(500.0, f2)
+    assert due.diag.get("reason") != "interval"
+
+
+def test_no_cost_model_always_follows_policy():
+    ctrl = PlacementController(policy="dancemoe", cost=None,
+                               cluster=_cluster(), interval=1.0)
+    f1 = skewed_freqs(4, 3, 8, seed=1)
+    f2 = skewed_freqs(4, 3, 8, seed=9)
+    assert ctrl.review(0.0, f1).adopted
+    dec = ctrl.review(10.0, f2)
+    assert dec.adopted and dec.diag["reason"] == "no-cost-model"
+
+
+def test_controller_owns_stats_ingestion():
+    from repro.core.stats import ActivationStats
+    L, N, E = 2, 3, 8
+    ctrl = PlacementController(policy="uniform", cluster=_cluster(L, N),
+                               stats=ActivationStats(L, N, E))
+    counts = np.zeros((L, N, E))
+    counts[:, 1, 3] = 5.0
+    ctrl.observe(counts)
+    ctrl.observe_server(0, np.ones((L, E)))
+    f = ctrl.freqs()
+    assert f.shape == (L, N, E)
+    assert np.allclose(f.sum(-1), 1.0)
+    assert f[0, 1, 3] > f[0, 1, 0]
+    dec = ctrl.review(0.0)                 # freqs pulled from owned stats
+    assert dec.adopted
