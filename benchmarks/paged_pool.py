@@ -1,0 +1,124 @@
+"""Paged KV pool vs legacy dense slot pool at *equal KV memory*:
+admitted-concurrency (occupancy) and a latency-vs-blocks sweep.
+
+The dense pool provisions every slot at ``max_len`` positions, so its
+concurrency is ``memory / max_len`` no matter how short the requests are.
+The paged pool holds the same bytes as ``n_blocks x block_size`` shared
+positions and admits on *free blocks*, so a heterogeneous stream of
+short-ish requests packs several times more concurrent work into the same
+memory — the occupancy premise behind the paper's batch-size/latency
+reproduction (Fig. 6/7) at scale.
+
+  PYTHONPATH=src python -m benchmarks.paged_pool [--csv]
+
+Prints ``paged_pool,<case>,<value>`` CSV lines. The CPU test config
+(mixtral-8x7b reduced) is used so the script runs anywhere tier-1 runs.
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import TaskTokenSource
+from repro.launch.mesh import make_test_mesh
+from repro.models import moe as M
+from repro.models import transformer as tr
+from repro.serving.engine import ServingEngine
+from repro.serving.runtime import ServingRuntime
+
+MAX_LEN = 64          # dense row length
+DENSE_SLOTS = 4       # dense pool rows -> KV memory = 4 x 64 positions
+BLOCK_SIZE = 8
+PROMPT, STEPS = 12, 4  # short-ish requests: the heterogeneous-stream case
+N_REQUESTS = 16
+
+
+def build_engine():
+    cfg = get_config("mixtral-8x7b").reduced()
+    mesh = make_test_mesh(1, 1)
+    spec = M.EPSpec.build(mesh, cfg, ep_axes=("model",),
+                          slots=cfg.num_experts, capacity=4096,
+                          slot_capacity=8192)
+    _, n_groups = cfg.layer_pattern()
+    rt = tr.Runtime(cfg=cfg, mesh=mesh, moe_impl="ep", ep_spec=spec)
+    rt_dense = tr.Runtime(cfg=cfg, mesh=mesh, moe_impl="dense")
+    params_dense = tr.init_params(rt_dense, jax.random.PRNGKey(0))
+    pl = M.uniform_placement(spec.n_ep, spec.slots, cfg.num_experts)
+    pls = tr.stack_placement(pl, n_groups)
+    params = dict(params_dense)
+    params["groups"] = M.regather_ep_groups(params_dense["groups"], pls,
+                                            n_groups)
+    return ServingEngine(rt=rt, params=params, placement=pls,
+                         max_len=MAX_LEN)
+
+
+def serve(rtm, prompts, steps):
+    rids = [rtm.submit(p, steps) for p in prompts]
+    rtm.run()
+    lat = [rtm.finished_at[r] for r in rids]      # completion tick per req
+    return {"peak_admitted": rtm.max_admitted,
+            "peak_decode_batch": rtm.max_concurrency,
+            "mean_latency_ticks": float(np.mean(lat)),
+            "p95_latency_ticks": float(np.percentile(lat, 95)),
+            "deferrals": rtm.deferrals}
+
+
+def main(csv: bool = False):
+    eng = build_engine()
+    src = TaskTokenSource("occupancy", eng.rt.cfg.vocab_size, seed=0)
+    prompts = [src.sample(1, PROMPT)[0] for _ in range(N_REQUESTS)]
+    mem_positions = DENSE_SLOTS * MAX_LEN         # the shared KV budget
+
+    dense = serve(ServingRuntime(eng, max_slots=DENSE_SLOTS, paged=False),
+                  prompts, STEPS)
+    # equal memory: n_blocks * block_size == dense positions (+ null block);
+    # slot rows are decode batch width only, so give the paged pool enough
+    equal_blocks = mem_positions // BLOCK_SIZE + 1
+    paged = serve(ServingRuntime(eng, max_slots=N_REQUESTS,
+                                 block_size=BLOCK_SIZE,
+                                 n_blocks=equal_blocks),
+                  prompts, STEPS)
+
+    ratio = paged["peak_admitted"] / max(dense["peak_admitted"], 1)
+    print(f"# occupancy at equal KV memory ({mem_positions} positions)")
+    print(f"dense pool  ({DENSE_SLOTS}x{MAX_LEN}): "
+          f"peak_admitted={dense['peak_admitted']} "
+          f"mean_latency={dense['mean_latency_ticks']:.1f} ticks")
+    print(f"paged pool ({equal_blocks - 1}x{BLOCK_SIZE}): "
+          f"peak_admitted={paged['peak_admitted']} "
+          f"mean_latency={paged['mean_latency_ticks']:.1f} ticks "
+          f"deferrals={paged['deferrals']}")
+    print(f"admitted-concurrency ratio: {ratio:.1f}x "
+          f"({'>= 2x OK' if ratio >= 2 else 'BELOW TARGET'})")
+    if csv:
+        print(f"paged_pool,dense_peak_admitted,{dense['peak_admitted']}")
+        print(f"paged_pool,paged_peak_admitted,{paged['peak_admitted']}")
+        print(f"paged_pool,admitted_ratio,{ratio:.2f}")
+
+    # latency-vs-blocks sweep: shrink the pool below the dense budget and
+    # watch deferrals trade memory for queueing latency
+    print("\n# latency vs pool size (paged, same request stream)")
+    print("n_blocks,capacity_pos,peak_admitted,mean_latency_ticks,"
+          "p95_latency_ticks,deferrals")
+    for n_blocks in (5, 9, 17, equal_blocks, 2 * equal_blocks - 1):
+        r = serve(ServingRuntime(eng, max_slots=N_REQUESTS,
+                                 block_size=BLOCK_SIZE, n_blocks=n_blocks),
+                  prompts, STEPS)
+        cap = (n_blocks - 1) * BLOCK_SIZE
+        line = (f"{n_blocks},{cap},{r['peak_admitted']},"
+                f"{r['mean_latency_ticks']:.1f},"
+                f"{r['p95_latency_ticks']:.1f},{r['deferrals']}")
+        print(line)
+        if csv:
+            print(f"paged_pool,latency_blocks_{n_blocks},"
+                  f"{r['mean_latency_ticks']:.2f}")
+    assert ratio >= 2.0, (
+        f"paged pool admitted only {ratio:.1f}x the dense pool's "
+        "concurrency at equal KV memory")
+
+
+if __name__ == "__main__":
+    main(csv="--csv" in sys.argv)

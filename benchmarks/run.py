@@ -13,6 +13,7 @@ def main() -> None:
     import benchmarks.fig6 as fig6
     import benchmarks.fig7 as fig7
     import benchmarks.fig8 as fig8
+    import benchmarks.paged_pool as paged_pool
     import benchmarks.roofline_table as roofline_table
 
     csv = "--csv" in sys.argv
@@ -24,6 +25,7 @@ def main() -> None:
         ("Fig. 7   (migration under workload shift)", fig7.main),
         ("Fig. 8   (scalability + bandwidth)", fig8.main),
         ("Roofline (single-pod dry-run)", roofline_table.main),
+        ("Paged KV pool (occupancy + latency-vs-blocks)", paged_pool.main),
     ]:
         t0 = time.time()
         print(f"\n##### {name}")

@@ -78,6 +78,11 @@ class MigrationController:
 
     def __init__(self, placement_fn, cost: CostModel,
                  interval: float = 300.0):
+        import warnings
+        warnings.warn(
+            "MigrationController is deprecated: use "
+            "core.policies.PlacementController (review(now, freqs)) instead",
+            DeprecationWarning, stacklevel=2)
         self.ctrl = _placement_controller()(
             policy=placement_fn, cost=cost, interval=interval)
 

@@ -5,9 +5,11 @@ unified placement control plane active for MoE architectures.
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --steps 8
 
 Requests are submitted as a stream (staggered into the queue) and served by
-``ServingRuntime``: interleaved prefill/decode over a fixed KV-slot pool,
-with the ``--policy`` placement policy reviewed periodically by the
-``PlacementController`` (Eq.-4 adopt decision).
+``ServingRuntime``: chunked prefill interleaved with decode rounds over a
+paged KV block pool (``--block-size`` / ``--blocks``; ``--dense-pool``
+restores the legacy fixed-row pool), with the ``--policy`` placement policy
+reviewed periodically by the ``PlacementController`` (Eq.-4 adopt
+decision).
 """
 from __future__ import annotations
 
@@ -35,7 +37,15 @@ def main():
     ap.add_argument("--prompt", type=int, default=32)
     ap.add_argument("--steps", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4,
-                    help="KV-cache pool rows (decode batch width)")
+                    help="decode batch width (dense mode: also the KV rows)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged KV pool: positions per physical block")
+    ap.add_argument("--blocks", type=int, default=None,
+                    help="paged KV pool: physical blocks incl. the null "
+                    "block (default: match the dense pool's KV memory)")
+    ap.add_argument("--dense-pool", action="store_true",
+                    help="legacy dense per-slot KV pool (no paging / "
+                    "chunked prefill)")
     ap.add_argument("--policy", default="dancemoe", choices=list_policies())
     ap.add_argument("--review-rounds", type=int, default=16,
                     help="placement review period in decode rounds")
@@ -78,7 +88,10 @@ def main():
                            dense_master=dense_master,
                            max_len=args.prompt + args.steps + 8)
     runtime = ServingRuntime(engine, max_slots=args.slots,
-                             controller=controller)
+                             controller=controller,
+                             paged=False if args.dense_pool else None,
+                             block_size=args.block_size,
+                             n_blocks=args.blocks)
     src = TaskTokenSource("serve", cfg.vocab_size, seed=0)
     if cfg.frontend != "none":
         print(f"{cfg.name}: modality frontend is stubbed; serving over "
@@ -89,9 +102,13 @@ def main():
     outs = runtime.run()
     dt = time.time() - t0
     n_tok = sum(len(outs[r]) for r in rids)
+    pool = (f"paged[{runtime.allocator.n_blocks}x{runtime.block_size}]"
+            if runtime.paged else f"dense[{args.slots}x{engine.max_len}]")
     print(f"{cfg.name}: served {len(rids)} requests / {n_tok} tokens in "
-          f"{dt:.1f}s ({n_tok / dt:.1f} tok/s) "
+          f"{dt:.1f}s ({n_tok / dt:.1f} tok/s) pool={pool} "
           f"peak_batch={runtime.max_concurrency} "
+          f"peak_admitted={runtime.max_admitted} "
+          f"deferrals={runtime.deferrals} "
           f"migrations={len(runtime.migrations)}")
 
 

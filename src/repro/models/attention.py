@@ -125,6 +125,32 @@ def dequantize_kv(q8: jax.Array, scale: jax.Array, dtype) -> jax.Array:
     return (q8.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
 
 
+def paged_gather(cache: dict, page_table: jax.Array, dtype) -> tuple:
+    """Gather a slot-contiguous KV view out of a paged block pool.
+
+    cache: k/v pools ``[n_blocks, block_size, KVH, hd]`` (plus
+    ``k_scale``/``v_scale`` ``[n_blocks, block_size, KVH, 1]`` for the int8
+    layout). ``page_table``: [B, P] physical block ids in *logical order*
+    (entry ``j`` holds positions ``j*block_size .. (j+1)*block_size-1``),
+    padded with the null block 0. The flattened gather index therefore
+    equals the absolute cache position, so the standard ``decode_attention``
+    validity mask (``idx <= pos``) applies unchanged.
+
+    Returns (k, v) as ``[B, P*block_size, KVH, hd]`` in ``dtype``
+    (dequantized when the pool is int8).
+    """
+    B, Pn = page_table.shape
+
+    def flat(name):
+        g = cache[name][page_table]                # [B, P, bs, KVH, *]
+        return g.reshape((B, Pn * g.shape[2]) + g.shape[3:])
+
+    if "k_scale" in cache:
+        return (dequantize_kv(flat("k"), flat("k_scale"), dtype),
+                dequantize_kv(flat("v"), flat("v_scale"), dtype))
+    return flat("k").astype(dtype), flat("v").astype(dtype)
+
+
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      pos: jax.Array, *, ring: bool = False,
                      mesh=None, seq_sharded: bool = False) -> jax.Array:
@@ -178,11 +204,19 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 def attn_apply(p, cfg, x, *, ep: int, mode: str, cache=None, pos=None,
                window: int = 0, norm_eps: float = 1e-5,
                use_kernel: bool = False, mesh=None, cache_seq_sharded=False,
-               residual: bool = True, gather_kv: bool = False):
-    """Returns (out, new_cache). Cache layout: dict(k, v) [B, S, KVH, hd].
+               residual: bool = True, gather_kv: bool = False, paged=None,
+               quant_consistent: bool = False):
+    """Returns (out, new_cache). Cache layout: dict(k, v) [B, S, KVH, hd],
+    or a paged block pool [n_blocks, block_size, KVH, hd] when ``paged`` is
+    given (dict with ``page_table`` [B, P] and, for chunk mode,
+    ``write_blocks`` [W]).
 
-    mode: 'train' | 'prefill' | 'decode'. For prefill the cache to fill is
-    passed pre-allocated (zeros) in `cache`; for train cache is None.
+    mode: 'train' | 'prefill' | 'decode' | 'chunk'. For prefill the cache to
+    fill is passed pre-allocated (zeros) in `cache`; for train cache is
+    None. 'chunk' is paged chunked prefill: x holds ``T`` block-aligned
+    prompt tokens starting at absolute position ``pos`` (scalar); their k/v
+    are written into ``write_blocks`` whole blocks and attention runs
+    against the gathered pages (earlier chunks + self, causal).
     """
     B, T = x.shape[:2]
     h = rms_norm(x, p["norm"], norm_eps)
@@ -192,6 +226,8 @@ def attn_apply(p, cfg, x, *, ep: int, mode: str, cache=None, pos=None,
         # (continuous batching: every row has its own position)
         positions = jnp.broadcast_to(
             jnp.asarray(pos).reshape(-1, 1), (B, 1))
+    elif mode == "chunk":
+        positions = jnp.broadcast_to(jnp.arange(T) + jnp.asarray(pos), (B, T))
     else:
         positions = jnp.broadcast_to(jnp.arange(T), (B, T))
     q = apply_rope(q, positions, cfg.rope_theta)
@@ -241,8 +277,34 @@ def attn_apply(p, cfg, x, *, ep: int, mode: str, cache=None, pos=None,
 
     if mode == "train":
         out = _attn(q, k, v)
+    elif mode == "chunk":
+        # paged chunked prefill: write the chunk's whole blocks into the
+        # pool, then attend over the gathered pages. Flattened gather index
+        # == absolute position, and masked (future / stale) entries
+        # contribute exact zeros, so the result is bit-identical to the
+        # full-prompt prefill path.
+        bs = cache["k"].shape[1]
+        wb = paged["write_blocks"]                         # [W] block ids
+        W = wb.shape[0]
+        entry = _store(k, v)
+        new_cache = {key: cache[key].at[wb].set(
+            val[0].reshape((W, bs) + val.shape[2:]).astype(cache[key].dtype))
+            for key, val in entry.items()}
+        kc, vc = paged_gather(new_cache, paged["page_table"], q.dtype)
+        out = chunked_attention(q, kc, vc, causal=True, q_offset=pos)
     elif mode == "prefill":
-        out = _attn(q, k.astype(q.dtype), v.astype(q.dtype))
+        if kv_quant and quant_consistent:
+            # serve-consistent fake-quant (opted into by ServingEngine):
+            # prefill attends to the same dequantized values every later
+            # decode step (and the paged chunked-prefill path) reads back
+            # from the int8 cache — full and chunked prefill stay
+            # token-identical under quantization
+            k8, ks_ = quantize_kv(k)
+            v8, vs_ = quantize_kv(v)
+            out = _attn(q, dequantize_kv(k8, ks_, q.dtype),
+                        dequantize_kv(v8, vs_, q.dtype))
+        else:
+            out = _attn(q, k.astype(q.dtype), v.astype(q.dtype))
         S = cache["k"].shape[1]
         if S < T:   # ring cache: keep only the last S, rotated to p % S
             shift = (T - S) % S
@@ -252,6 +314,22 @@ def attn_apply(p, cfg, x, *, ep: int, mode: str, cache=None, pos=None,
         new_cache = {key: lax.dynamic_update_slice(
             cache[key], val.astype(cache[key].dtype),
             (0,) * cache[key].ndim) for key, val in entry.items()}
+    elif mode == "decode" and paged is not None:
+        # paged decode: scatter each row's k/v into (its current block,
+        # in-block offset), then attend over the gathered pages. Vacant
+        # rows carry an all-null page table, so their garbage lands in the
+        # reserved null block 0.
+        bs = cache["k"].shape[1]
+        tbl = paged["page_table"]                          # [B, P]
+        pos_arr = jnp.broadcast_to(jnp.asarray(pos), (B,))
+        blocks = jnp.take_along_axis(
+            tbl, (pos_arr // bs)[:, None], axis=1)[:, 0]   # [B]
+        offs = pos_arr % bs
+        entry = _store(k, v)
+        new_cache = {key: cache[key].at[blocks, offs].set(
+            val[:, 0].astype(cache[key].dtype)) for key, val in entry.items()}
+        kc, vc = paged_gather(new_cache, tbl, q.dtype)
+        out = decode_attention(q, kc, vc, pos, ring=False)
     elif mode == "decode":
         S = cache["k"].shape[1]
         ring = window > 0  # windowed cache is a ring buffer (S == window)
@@ -284,6 +362,22 @@ def attn_apply(p, cfg, x, *, ep: int, mode: str, cache=None, pos=None,
     hp, hd = cfg.padded_heads(ep), cfg.hd
     out = out.reshape(B, T, hp * hd) @ p["wo"]
     return (x + out if residual else out), new_cache
+
+
+def init_paged_kv(cfg, n_blocks: int, block_size: int, *,
+                  dtype=jnp.bfloat16, quantized: bool = False) -> dict:
+    """Paged block pool for one attention sublayer: ``n_blocks`` physical
+    blocks of ``block_size`` positions shared by every serving slot (block 0
+    is reserved as the null block — see ``serving.runtime.BlockAllocator``).
+    """
+    kvh, hd = cfg.num_kv_heads, cfg.hd
+    shape = (n_blocks, block_size, kvh, hd)
+    if quantized:
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:-1] + (1,), jnp.bfloat16),
+                "v_scale": jnp.zeros(shape[:-1] + (1,), jnp.bfloat16)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
 def init_attn_cache(cfg, batch: int, seq_len: int, *, window: int = 0,

@@ -268,9 +268,10 @@ def _local_slots(p):
 
 
 def _ep_dispatch_local(h_loc, p, placement, cfg, spec: EPSpec,
-                       use_kernel: bool):
+                       use_kernel: bool, m_loc=None):
     """Per-device body (inside shard_map) — a2a dispatch mode.
-    h_loc: [R, D] this rank's rows."""
+    h_loc: [R, D] this rank's rows. m_loc: optional [R] float validity —
+    0-rows (chunked-prefill padding) are excluded from the gating counts."""
     R, D = h_loc.shape
     E, K = cfg.num_experts, cfg.top_k
     n_ep, S, C, C2 = spec.n_ep, spec.slots, spec.capacity, spec.slot_capacity
@@ -319,7 +320,10 @@ def _ep_dispatch_local(h_loc, p, placement, cfg, spec: EPSpec,
     out = jnp.zeros((R, D), h_loc.dtype).at[flat_src[order]].add(contrib)
 
     # --- stats: f_n(e) per EP rank; scalars pmean'd over the whole mesh ---
-    counts = jax.nn.one_hot(topi, E, dtype=jnp.float32).sum((0, 1))
+    hot = jax.nn.one_hot(topi, E, dtype=jnp.float32)
+    if m_loc is not None:
+        hot = hot * m_loc[:, None, None]
+    counts = hot.sum((0, 1))
     non_ep = tuple(a for a in spec.mesh_axes if a not in spec.axes)
     if non_ep:
         counts = lax.psum(counts, non_ep)
@@ -396,9 +400,9 @@ def moe_apply_ep(p, cfg, x, *, mesh, spec: EPSpec, placement: EPPlacement,
                  token_mask=None):
     """Placement-aware EP MoE. x: [B, T, D]. Returns (out, stats).
 
-    token_mask (decode only): [B] float validity per batch row; rows with 0
-    (vacant continuous-batching slots) are excluded from the gating
-    statistics."""
+    token_mask: [B] float validity per batch row (decode: vacant
+    continuous-batching slots) or [B, T] per token (chunked prefill:
+    prompt padding); 0-entries are excluded from the gating statistics."""
     B, T, D = x.shape
     h = rms_norm(x, p["norm"], norm_eps)
     wspec = {
@@ -448,9 +452,9 @@ def moe_apply_ep(p, cfg, x, *, mesh, spec: EPSpec, placement: EPPlacement,
         rows_spec = P(spec.dispatch_row_axes, None)
 
         def body(h_loc, m_loc, p_loc, pl_loc):
-            # dispatch mode has no vacant rows: mask unused
+            # mask excludes chunked-prefill padding from the gating counts
             return _ep_dispatch_local(h_loc, p_loc, pl_loc, cfg, spec,
-                                      use_kernel)
+                                      use_kernel, m_loc=m_loc)
 
     out_specs = (rows_spec, P(spec.axes, None), P(), P())
     mask_spec = P(rows_spec[0])
@@ -459,8 +463,9 @@ def moe_apply_ep(p, cfg, x, *, mesh, spec: EPSpec, placement: EPPlacement,
     if token_mask is None:
         mask_rows = jnp.ones((B * T,), jnp.float32)
     else:
-        mask_rows = jnp.broadcast_to(
-            token_mask.astype(jnp.float32)[:, None], (B, T)).reshape(B * T)
+        tm = token_mask.astype(jnp.float32)
+        mask_rows = (tm if tm.ndim == 2 else
+                     jnp.broadcast_to(tm[:, None], (B, T))).reshape(B * T)
     mask_rows = lax.with_sharding_constraint(
         mask_rows, NamedSharding(mesh, mask_spec))
     fn = _shard_map(body, mesh=mesh,

@@ -45,6 +45,9 @@ class Runtime:
                                       # cp (replicated weights, ctx-parallel)
     remat_policy: str = "none"        # none | dots (save matmul/psum outputs)
     kv_quant: bool = False            # int8 KV cache (beyond-paper)
+    kv_quant_consistent: bool = False  # prefill attends to dequantized k/v
+                                      # (serve-consistent: full and paged
+                                      # chunked prefill agree bit-wise)
 
     @property
     def ep(self) -> int:
@@ -112,8 +115,10 @@ def _sp_active(rt: Runtime, mode: str) -> bool:
     blocks stay sharded over the model axis on the sequence dim; each
     TP sublayer all-gathers its input once and reduce-scatters its output —
     half the bytes of the baseline per-sublayer all-reduce, and the EP MoE
-    dispatch layout becomes a free reshape."""
-    return rt.layout == "sp" and rt.mesh is not None and mode != "decode"
+    dispatch layout becomes a free reshape. Serving steps (decode, paged
+    chunk prefill) keep the replicated residual path."""
+    return rt.layout == "sp" and rt.mesh is not None \
+        and mode not in ("decode", "chunk")
 
 
 def _sp_gather(rt: Runtime, x):
@@ -129,7 +134,7 @@ def _sp_scatter(rt: Runtime, x):
 
 
 def _apply_block(rt: Runtime, kind: str, p, h, *, mode, cache, pos,
-                 placement, token_mask=None):
+                 placement, token_mask=None, paged=None):
     cfg = rt.cfg
     window = rt.window
     sp = _sp_active(rt, mode)
@@ -138,9 +143,11 @@ def _apply_block(rt: Runtime, kind: str, p, h, *, mode, cache, pos,
         out, c = attn.attn_apply(
             p, cfg, h_in, ep=rt.ep, mode=mode, cache=cache, pos=pos,
             window=window, norm_eps=cfg.norm_eps,
-            use_kernel=rt.use_kernel and mode != "decode", mesh=rt.mesh,
+            use_kernel=rt.use_kernel and mode not in ("decode", "chunk"),
+            mesh=rt.mesh,
             cache_seq_sharded=rt.cache_seq_sharded, residual=not sp,
-            gather_kv=rt.layout in ("cp", "fsdp"))
+            gather_kv=rt.layout in ("cp", "fsdp"), paged=paged,
+            quant_consistent=rt.kv_quant_consistent)
         if sp:
             out = h + _sp_scatter(rt, out)          # reduce-scatter the delta
         return out, c
@@ -158,8 +165,10 @@ def _apply_block(rt: Runtime, kind: str, p, h, *, mode, cache, pos,
                 p, cfg, h, mesh=rt.mesh, spec=rt.ep_spec,
                 placement=placement, mode=mode, use_kernel=rt.use_kernel,
                 norm_eps=cfg.norm_eps,
+                # serving steps (decode/chunk) use the masked dispatch
+                # branch — the seq-sharded fast path ignores token_mask
                 seq_sharded_out=(rt.layout in ("sp", "cp", "fsdp")
-                                 and mode != "decode"),
+                                 and mode not in ("decode", "chunk")),
                 token_mask=token_mask)
         else:
             out, stats = moe_mod.moe_apply_dense(p, cfg, h,
@@ -176,7 +185,7 @@ def _apply_block(rt: Runtime, kind: str, p, h, *, mode, cache, pos,
 
 
 def _apply_group(rt: Runtime, pattern, gp, shared_p, h, *, mode, gcache,
-                 pos, placement, token_mask=None):
+                 pos, placement, token_mask=None, paged=None):
     """Apply one scan group. Returns (h, new_gcache, moe_stats)."""
     new_cache = {}
     moe_stats = None
@@ -184,7 +193,8 @@ def _apply_group(rt: Runtime, pattern, gp, shared_p, h, *, mode, gcache,
         p = shared_p if kind == SHARED_ATTN else gp[f"b{i}"]
         c = gcache.get(f"b{i}") if gcache is not None else None
         h, extra = _apply_block(rt, kind, p, h, mode=mode, cache=c, pos=pos,
-                                placement=placement, token_mask=token_mask)
+                                placement=placement, token_mask=token_mask,
+                                paged=paged)
         if kind == MOE:
             moe_stats = extra  # <=1 MoE sublayer per group in all configs
         elif extra is not None:
@@ -211,14 +221,17 @@ def stack_placement(placement, n_groups: int):
 
 
 def _run_stack(rt: Runtime, params, h, *, mode, cache, pos, placement,
-               token_mask=None):
+               token_mask=None, paged=None):
     """Scan the layer groups. Returns (h, new_cache, stacked_moe_stats).
 
     ``placement`` (EP MoE only): EPPlacement pytree with a leading
     [n_groups] dim — each scan step consumes its own layer's tables, which
     is how Algorithm 1's layer-wise expert-count allocation reaches the
-    runtime. ``token_mask`` ([B], decode only) excludes vacant
-    continuous-batching rows from the gating statistics."""
+    runtime. ``token_mask`` ([B] in decode, [B, T] in chunk mode) excludes
+    vacant continuous-batching rows / prompt padding from the gating
+    statistics. ``paged`` (decode/chunk): the page-table info shared by all
+    layers — every layer indexes the same physical block ids into its own
+    pool."""
     cfg = rt.cfg
     pattern, n_groups = cfg.layer_pattern()
     shared_p = params.get("shared_attn")
@@ -227,7 +240,7 @@ def _run_stack(rt: Runtime, params, h, *, mode, cache, pos, placement,
     if use_pl and placement is None:
         raise ValueError("EP MoE requires a placement")
     if rt.layout in ("sp", "cp", "fsdp") and rt.mesh is not None \
-            and mode != "decode":
+            and mode not in ("decode", "chunk"):
         h = _sp_scatter(rt, h)          # residual stream: seq over model
 
     def body(carry, xs):
@@ -235,7 +248,7 @@ def _run_stack(rt: Runtime, params, h, *, mode, cache, pos, placement,
         gp, gcache, gpl = xs
         hh, new_gcache, mstats = _apply_group(
             rt, pattern, gp, shared_p, hh, mode=mode, gcache=gcache,
-            pos=pos, placement=gpl, token_mask=token_mask)
+            pos=pos, placement=gpl, token_mask=token_mask, paged=paged)
         if mstats is None:
             mstats = _zero_moe_stats(rt)
         return hh, (new_gcache, mstats)
@@ -375,20 +388,94 @@ def prefill(rt: Runtime, params, tokens=None, embeds=None, placement=None,
 
 
 def decode_step(rt: Runtime, params, cache, tokens, pos, placement=None,
-                token_mask=None):
+                token_mask=None, page_table=None):
     """tokens: [B, 1] int32; pos: scalar int32 (whole batch at one
     position) or [B] int32 vector (continuous batching: per-row positions).
     token_mask: optional [B] float validity — 0-rows (vacant pool slots)
     are excluded from the MoE gating statistics.
+    page_table: optional [B, P] int32 — ``cache`` is then a paged block
+    pool (``init_paged_cache``) and each row reads/writes through its pages.
     Returns (logits [B, V], new_cache, moe_stats)."""
     h = _embed(rt, params, tokens)
+    paged = {"page_table": page_table} if page_table is not None else None
     h, new_cache, mstats = _run_stack(rt, params, h, mode="decode",
                                       cache=cache, pos=pos,
                                       placement=placement,
-                                      token_mask=token_mask)
+                                      token_mask=token_mask, paged=paged)
     logits = _logits(rt, params, h[:, -1])
+    if page_table is not None:
+        # paged pools have block-major shapes the dense cache pspecs don't
+        # describe; serving runs single-host, so constrain logits only
+        logits, _ = _constrain_outputs(rt, logits, None)
+        return logits, new_cache, mstats
     logits, new_cache = _constrain_outputs(rt, logits, new_cache)
     return logits, new_cache, mstats
+
+
+def prefill_chunk(rt: Runtime, params, cache, tokens, page_table,
+                  write_blocks, offset, last_idx, placement=None,
+                  token_mask=None):
+    """Paged chunked prefill: consume one block-aligned chunk of a single
+    prompt into a paged pool.
+
+    tokens: [1, C] int32 (C a multiple of the pool's block size; the tail
+    beyond the true prompt is padding — mask it via ``token_mask``).
+    page_table: [1, P] — the slot's full page table (logical order).
+    write_blocks: [W] int32 (W = C // block_size) — physical blocks that
+    receive this chunk's k/v.
+    offset: scalar int32 — absolute position of ``tokens[:, 0]``.
+    last_idx: scalar int32 — in-chunk index whose logits to return (the
+    final prompt token on the last chunk; ignored otherwise).
+    token_mask: optional [1, C] float — 0 for padding tokens (excluded from
+    the MoE gating statistics).
+    Returns (logits [1, V], new_cache, moe_stats)."""
+    h = _embed(rt, params, tokens)
+    paged = {"page_table": page_table, "write_blocks": write_blocks}
+    h, new_cache, mstats = _run_stack(rt, params, h, mode="chunk",
+                                      cache=cache, pos=offset,
+                                      placement=placement,
+                                      token_mask=token_mask, paged=paged)
+    h_last = lax.dynamic_slice_in_dim(h, last_idx, 1, axis=1)
+    logits = _logits(rt, params, h_last[:, 0])
+    logits, _ = _constrain_outputs(rt, logits, None)
+    return logits, new_cache, mstats
+
+
+def supports_paging(rt: Runtime) -> bool:
+    """Whether this runtime's caches can live in a paged block pool:
+    attention-only state (no SSM recurrence), no sliding-window ring, and
+    no sequence-sharded cache (the paged paths don't constrain block-pool
+    shardings — a seq-sharded pool would silently reshard every step).
+    Pure metadata — no allocation."""
+    pattern, _ = rt.cfg.layer_pattern()
+    return (not rt.window and not rt.cache_seq_sharded
+            and not any(k in (MAMBA1, MAMBA2) for k in pattern))
+
+
+def init_paged_cache(rt: Runtime, n_blocks: int, block_size: int,
+                     dtype=None) -> dict:
+    """Paged KV block pool: per attention group, ``[n_groups, n_blocks,
+    block_size, KVH, hd]`` shared by all serving slots (block 0 reserved as
+    the null block). Raises for architectures whose caches cannot be paged
+    (see ``supports_paging``)."""
+    if dtype is None:
+        dtype = rt.dtype
+    cfg = rt.cfg
+    if not supports_paging(rt):
+        raise ValueError(
+            "paged KV pool requires attention-only caches without a "
+            f"sliding window; {cfg.name} (window={rt.window}) does not "
+            "qualify — use the dense slot pool")
+    pattern, n_groups = cfg.layer_pattern()
+    out = {}
+    for i, kind in enumerate(pattern):
+        if kind not in (ATTN, SHARED_ATTN):
+            continue
+        c = attn.init_paged_kv(cfg, n_blocks, block_size, dtype=dtype,
+                               quantized=rt.kv_quant)
+        out[f"b{i}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape), c)
+    return out
 
 
 def init_cache(rt: Runtime, batch: int, seq_len: int,

@@ -26,6 +26,11 @@ class ServingEngine:
     max_len: int = 256
 
     def __post_init__(self):
+        if self.rt.kv_quant and not self.rt.kv_quant_consistent:
+            # serving semantics: prefill attends to the dequantized k/v it
+            # stores, so sequential generate(), the dense-pool runtime and
+            # paged chunked prefill are all token-identical under int8
+            self.rt = dataclasses.replace(self.rt, kv_quant_consistent=True)
         rt = self.rt
         cfg = rt.cfg
         _, self.n_groups = cfg.layer_pattern()
@@ -42,6 +47,31 @@ class ServingEngine:
 
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode)
+        self._paged_fns: dict = {}
+
+    # ------------------------------------------------------------------
+    def paged_step_fns(self, block_size: int, max_pages: int):
+        """Jitted (prefill_chunk, decode) pair for a paged KV pool. The
+        functions specialize on array shapes; the (block_size, max_pages)
+        key only keeps one cached pair per pool geometry."""
+        key = (block_size, max_pages)
+        if key not in self._paged_fns:
+            rt = self.rt
+
+            def _chunk(params, pool, tokens, page_table, write_blocks,
+                       offset, last_idx, placement, token_mask):
+                return tr.prefill_chunk(rt, params, pool, tokens, page_table,
+                                        write_blocks, offset, last_idx,
+                                        placement, token_mask=token_mask)
+
+            def _dec(params, pool, tokens, pos, page_table, placement,
+                     token_mask=None):
+                return tr.decode_step(rt, params, pool, tokens, pos,
+                                      placement, token_mask=token_mask,
+                                      page_table=page_table)
+
+            self._paged_fns[key] = (jax.jit(_chunk), jax.jit(_dec))
+        return self._paged_fns[key]
 
     # ------------------------------------------------------------------
     def generate(self, tokens: np.ndarray, steps: int = 16,

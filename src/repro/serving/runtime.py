@@ -6,16 +6,28 @@ starts and finishes together. This runtime serves a *request stream*
 instead:
 
 * a request queue — ``submit()`` at any time, including mid-stream;
-* a slot-based KV-cache pool — a fixed pool of ``max_slots`` cache rows,
-  allocated once, so the decode step compiles exactly once;
-* interleaved prefill/decode — arriving requests are prefilled (batched by
-  prompt length) and their cache rows written into free pool slots, then
-  every active slot advances one token per decode round regardless of when
-  it arrived (per-row cache positions via the vector-``pos`` decode path).
+* a **paged KV-cache pool** (default) — a shared block table of
+  ``n_blocks × block_size`` positions per layer plus a per-slot page list
+  managed by a free-list ``BlockAllocator``; admission is governed by free
+  *blocks*, not free ``max_len`` rows, so heterogeneous request streams
+  pack the same KV memory far denser than the legacy dense pool;
+* **chunked prefill** — admitted prompts are consumed in
+  ``block_size``-aligned chunks (one jitted ``prefill_chunk`` per chunk)
+  interleaved with decode rounds, so a long prompt no longer stalls the
+  whole pool;
+* interleaved prefill/decode — every decoding slot advances one token per
+  decode round regardless of arrival time (per-row cache positions via the
+  vector-``pos`` decode path).
 
-Outputs are token-identical to sequential ``generate()`` calls as long as
-the EP dispatch capacities are not saturated (rows are independent in
-attention; the MoE layer couples them only through capacity dropping).
+The legacy dense slot pool (``paged=False``) allocates ``max_slots`` rows
+of ``max_len`` positions and prefills whole prompts in one call; it remains
+for architectures whose caches cannot be paged (SSM state, sliding-window
+rings) and as the reference implementation for the equivalence suite.
+
+Outputs are token-identical to sequential ``generate()`` calls in both
+modes as long as the EP dispatch capacities are not saturated (rows are
+independent in attention; the MoE layer couples them only through capacity
+dropping).
 
 The runtime also hosts the serving side of the placement control plane: it
 feeds gating statistics to a ``PlacementController`` and applies adopted
@@ -52,20 +64,104 @@ class _Slot:
     last: int                     # last emitted token (next decode input)
     tokens: list                  # emitted tokens so far
     need: int                     # total tokens to emit
+    # paged-mode state
+    pages: list = dataclasses.field(default_factory=list)
+    prompt: np.ndarray | None = None   # full prompt (chunked prefill)
+    filled: int = 0                    # prompt tokens already prefilled
+
+    @property
+    def prefilling(self) -> bool:
+        return self.prompt is not None and self.filled < len(self.prompt)
+
+
+class BlockAllocator:
+    """Free-list allocator over the physical blocks of a paged KV pool.
+
+    Block 0 is reserved as the *null block*: vacant decode rows point their
+    page tables at it and park their garbage writes there, so it is never
+    handed out. Allocation is all-or-nothing per request and every block is
+    tagged with its owner so cross-slot aliasing and foreign frees are
+    structural errors, not silent corruption.
+    """
+
+    def __init__(self, n_blocks: int):
+        if n_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is the null block)")
+        self.n_blocks = n_blocks
+        self._free = list(range(n_blocks - 1, 0, -1))   # LIFO: hot reuse
+        self._owner: dict[int, int] = {}
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def capacity_blocks(self) -> int:
+        """Allocatable blocks (the null block is excluded)."""
+        return self.n_blocks - 1
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int, owner: int) -> list[int]:
+        """Pop ``n`` blocks for ``owner``; raises when exhausted (callers
+        check ``can_alloc`` first and defer admission instead)."""
+        if not self.can_alloc(n):
+            raise RuntimeError(
+                f"paged pool exhausted: requested {n} blocks, "
+                f"{len(self._free)} free")
+        blocks = [self._free.pop() for _ in range(n)]
+        for b in blocks:
+            self._owner[b] = owner
+        return blocks
+
+    def release(self, blocks: list[int], owner: int) -> None:
+        """Return ``blocks`` to the free list; every block must belong to
+        ``owner`` (double frees and foreign frees raise)."""
+        for b in blocks:
+            if self._owner.get(b) != owner:
+                raise RuntimeError(
+                    f"block {b} is not owned by request {owner} "
+                    f"(owner: {self._owner.get(b)})")
+            del self._owner[b]
+            self._free.append(b)
+
+    def owners(self) -> dict[int, int]:
+        """Live block -> owner rid (for invariant checks and tests)."""
+        return dict(self._owner)
 
 
 class ServingRuntime:
-    """Continuous batching over a fixed KV-slot pool.
+    """Continuous batching over a shared KV pool.
 
-    engine:      a ``ServingEngine`` (its jitted prefill/decode are reused).
-    max_slots:   decode batch width == KV pool rows (one compile).
+    engine:      a ``ServingEngine`` (its jitted step functions are reused).
+    max_slots:   decode batch width (one compile). In paged mode this is
+                 *only* the batch width — KV memory is the block pool.
     controller:  optional ``PlacementController``; its clock is decode
                  rounds (set ``interval`` accordingly). Adopted plans are
                  applied to the engine via ``engine.migrate``.
+    paged:       True = paged block pool + chunked prefill; False = legacy
+                 dense per-slot rows; None (default) = paged when the
+                 architecture supports it (attention caches, no sliding
+                 window), dense otherwise.
+    block_size:  positions per physical KV block (paged mode).
+    n_blocks:    physical blocks incl. the null block. Default sizes the
+                 pool to the dense pool's KV memory
+                 (``max_slots * max_len`` positions) plus the null block.
+    max_pages:   page-table width (max blocks one request may hold); the
+                 per-step attention gather is ``max_pages * block_size``
+                 positions per row, so this is the cost/length-cap knob.
+                 Default: ``2 * ceil(max_len / block_size)``, clamped to
+                 the pool.
+    chunks_per_tick: prefill chunks consumed per prefilling slot per
+                 ``step()`` (interleaving knob).
     """
 
     def __init__(self, engine: ServingEngine, max_slots: int = 4,
-                 controller: PlacementController | None = None):
+                 controller: PlacementController | None = None, *,
+                 paged: bool | None = None, block_size: int = 16,
+                 n_blocks: int | None = None, max_pages: int | None = None,
+                 chunks_per_tick: int = 1):
         self.engine = engine
         self.max_slots = max_slots
         self.controller = controller
@@ -77,12 +173,39 @@ class ServingRuntime:
                 # must also wait a full interval of observed traffic, not
                 # fire on decode round 1 with near-empty stats
                 controller.last_review = 0.0
-        self.pool = tr.init_cache(engine.rt, max_slots, engine.max_len)
+        if paged is None:
+            paged = tr.supports_paging(engine.rt)
+        self.paged = paged
+        if paged:
+            self.block_size = block_size
+            if n_blocks is None:
+                n_blocks = 1 + max_slots * (-(-engine.max_len // block_size))
+            self.allocator = BlockAllocator(n_blocks)
+            if max_pages is None:
+                # per-request length cap: attention gathers max_pages*bs
+                # positions per batch row every step, so don't default to
+                # the whole pool — 2x the legacy row length keeps long
+                # requests admissible at bounded gather cost (pass
+                # max_pages=allocator.capacity_blocks for unbounded)
+                max_pages = min(self.allocator.capacity_blocks,
+                                2 * (-(-engine.max_len // block_size)))
+            self.max_pages = max_pages
+            self.chunks_per_tick = chunks_per_tick
+            self.pool = tr.init_paged_cache(engine.rt, n_blocks, block_size)
+            self.page_table = np.zeros((max_slots, self.max_pages), np.int32)
+            self._chunk_fn, self._decode_fn = engine.paged_step_fns(
+                block_size, self.max_pages)
+        else:
+            self.pool = tr.init_cache(engine.rt, max_slots, engine.max_len)
         self.slots: list[_Slot | None] = [None] * max_slots
         self.queue: collections.deque[GenRequest] = collections.deque()
         self.finished: dict[int, np.ndarray] = {}
         self.rounds = 0               # decode rounds served (controller clock)
+        self.ticks = 0                # scheduler ticks (step() calls)
         self.max_concurrency = 0      # peak active slots in one decode batch
+        self.max_admitted = 0         # peak concurrently admitted requests
+        self.finished_at: dict[int, int] = {}   # rid -> tick of completion
+        self.deferrals = 0            # admissions deferred on free blocks
         self.migrations: list = []
         self._next_rid = 0
 
@@ -93,12 +216,41 @@ class ServingRuntime:
         self._write_rows = jax.jit(_write_rows)
 
     # ------------------------------------------------------------------
+    def _pages_needed(self, prompt_len: int, max_new_tokens: int) -> int:
+        """Blocks a request holds for its lifetime: prompt positions
+        0..T-1 (whole blocks — chunked prefill writes block-aligned) plus
+        decode writes at T..T+need-2."""
+        bs = self.block_size
+        return max(-(-prompt_len // bs),
+                   -(-(prompt_len + max_new_tokens - 1) // bs))
+
+    @property
+    def capacity_tokens(self) -> int:
+        """Total KV positions this runtime can hold for live requests."""
+        if self.paged:
+            return self.allocator.capacity_blocks * self.block_size
+        return self.max_slots * self.engine.max_len
+
     def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
-        """Enqueue one request; returns its id. ``prompt``: [T] int tokens."""
+        """Enqueue one request; returns its id. ``prompt``: [T] int tokens.
+
+        Paged mode validates against the *total pool capacity* (a request
+        merely larger than the legacy ``max_len`` is admissible — it just
+        holds more pages); dense mode keeps the per-row ``max_len`` bound.
+        """
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
-        if len(prompt) + max_new_tokens > self.engine.max_len:
+        if self.paged:
+            npages = self._pages_needed(len(prompt), max_new_tokens)
+            if npages > min(self.allocator.capacity_blocks, self.max_pages):
+                raise ValueError(
+                    f"prompt({len(prompt)}) + max_new_tokens"
+                    f"({max_new_tokens}) needs {npages} blocks; the paged "
+                    f"pool caps a request at "
+                    f"{min(self.allocator.capacity_blocks, self.max_pages)} "
+                    f"blocks ({self.capacity_tokens} positions total)")
+        elif len(prompt) + max_new_tokens > self.engine.max_len:
             raise ValueError(
                 f"prompt({len(prompt)}) + max_new_tokens({max_new_tokens}) "
                 f"exceeds the pool's max_len={self.engine.max_len}")
@@ -116,6 +268,36 @@ class ServingRuntime:
         return [i for i, s in enumerate(self.slots) if s is None]
 
     def _admit(self) -> int:
+        if self.paged:
+            n = self._admit_paged()
+        else:
+            n = self._admit_dense()
+        self.max_admitted = max(self.max_admitted, self.active)
+        return n
+
+    def _admit_paged(self) -> int:
+        """Admit FIFO-head requests while a slot row and enough free blocks
+        exist. A head that does not fit *defers* (stays queued, no crash,
+        no overtaking) until retirements return blocks."""
+        admitted = 0
+        while self.queue and self._free_slot_ids():
+            r = self.queue[0]
+            npages = self._pages_needed(len(r.prompt), r.max_new_tokens)
+            if not self.allocator.can_alloc(npages):
+                self.deferrals += 1
+                break
+            self.queue.popleft()
+            i = self._free_slot_ids()[0]
+            pages = self.allocator.alloc(npages, r.rid)
+            self.page_table[i] = 0
+            self.page_table[i, :npages] = pages
+            self.slots[i] = _Slot(rid=r.rid, pos=0, last=-1, tokens=[],
+                                  need=r.max_new_tokens, pages=pages,
+                                  prompt=r.prompt, filled=0)
+            admitted += 1
+        return admitted
+
+    def _admit_dense(self) -> int:
         """Prefill waiting requests into free slots (batching same-length
         prompts so each distinct length compiles once). Returns #admitted."""
         admitted = 0
@@ -148,14 +330,58 @@ class ServingRuntime:
         slot = self.slots[i]
         if slot is not None and len(slot.tokens) >= slot.need:
             self.finished[slot.rid] = np.asarray(slot.tokens, np.int32)
+            self.finished_at[slot.rid] = self.ticks
+            if self.paged and slot.pages:
+                self.allocator.release(slot.pages, slot.rid)
+                self.page_table[i] = 0
             self.slots[i] = None
             return True
         return False
 
     # ------------------------------------------------------------------
+    def _prefill_round(self) -> None:
+        """Advance every prefilling slot by up to ``chunks_per_tick``
+        block-aligned chunks (one B=1 jitted call per chunk). When a slot's
+        final chunk lands, its first token is sampled and it joins the
+        decode batch from the next round on."""
+        bs = self.block_size
+        for i, slot in enumerate(self.slots):
+            if slot is None or not slot.prefilling:
+                continue
+            for _ in range(self.chunks_per_tick):
+                if not slot.prefilling:
+                    break
+                T = len(slot.prompt)
+                c0 = slot.filled
+                valid = min(bs, T - c0)
+                chunk = np.zeros((1, bs), np.int32)
+                chunk[0, :valid] = slot.prompt[c0:c0 + valid]
+                mask = np.zeros((1, bs), np.float32)
+                mask[0, :valid] = 1.0
+                write_blocks = np.asarray([slot.pages[c0 // bs]], np.int32)
+                final = c0 + valid >= T
+                last_idx = (T - 1 - c0) if final else bs - 1
+                logits, self.pool, mstats = self._chunk_fn(
+                    self.engine.params, self.pool, jnp.asarray(chunk),
+                    jnp.asarray(self.page_table[i:i + 1]),
+                    jnp.asarray(write_blocks), jnp.int32(c0),
+                    jnp.int32(last_idx), self.engine.placement,
+                    jnp.asarray(mask))
+                self.engine._ingest(mstats)
+                slot.filled += valid
+                if final:
+                    first = int(np.asarray(jnp.argmax(logits, -1))[0])
+                    slot.pos = T
+                    slot.last = first
+                    slot.tokens = [first]
+                    self._retire_if_done(i)
+                    break
+
     def _decode_round(self) -> None:
-        """Advance every active slot one token in one shared decode batch."""
-        act = [i for i, s in enumerate(self.slots) if s is not None]
+        """Advance every decoding slot one token in one shared decode
+        batch."""
+        act = [i for i, s in enumerate(self.slots)
+               if s is not None and not s.prefilling]
         if not act:
             return
         self.max_concurrency = max(self.max_concurrency, len(act))
@@ -168,9 +394,20 @@ class ServingRuntime:
             mask[i] = 1.0
         # vacant rows decode garbage tokens whose outputs are discarded;
         # the token mask keeps them out of the gating statistics too
-        logits, self.pool, mstats = self.engine._decode(
-            self.engine.params, self.pool, jnp.asarray(cur),
-            jnp.asarray(pos), self.engine.placement, jnp.asarray(mask))
+        if self.paged:
+            # non-decoding rows (vacant OR still prefilling) get an
+            # all-null page table so their garbage write lands in the
+            # reserved null block instead of a live page
+            tbl = np.where(np.asarray(mask, bool)[:, None],
+                           self.page_table, 0).astype(np.int32)
+            logits, self.pool, mstats = self._decode_fn(
+                self.engine.params, self.pool, jnp.asarray(cur),
+                jnp.asarray(pos), jnp.asarray(tbl), self.engine.placement,
+                jnp.asarray(mask))
+        else:
+            logits, self.pool, mstats = self.engine._decode(
+                self.engine.params, self.pool, jnp.asarray(cur),
+                jnp.asarray(pos), self.engine.placement, jnp.asarray(mask))
         self.engine._ingest(mstats)
         nxt = np.asarray(jnp.argmax(logits, -1), np.int32)         # [B]
         for i in act:
@@ -194,11 +431,34 @@ class ServingRuntime:
             self.migrations.append(dec.diag)
 
     # ------------------------------------------------------------------
+    def check_invariants(self) -> None:
+        """Paged-pool structural invariants (used by the test suite):
+        no block referenced by two live slots, page tables consistent with
+        the allocator's ownership map, null block never owned."""
+        if not self.paged:
+            return
+        owners = self.allocator.owners()
+        assert 0 not in owners, "null block was allocated"
+        seen: dict[int, int] = {}
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            for b in s.pages:
+                assert b not in seen, \
+                    f"block {b} held by slots of rids {seen[b]} and {s.rid}"
+                seen[b] = s.rid
+                assert owners.get(b) == s.rid
+        assert len(owners) == len(seen), \
+            "allocator tracks blocks owned by no live slot"
+
     def step(self) -> bool:
-        """One scheduler tick: admit what fits, then one decode round.
-        Returns True while there is (or was) work."""
+        """One scheduler tick: admit what fits, advance chunked prefills,
+        then one decode round. Returns True while there is (or was) work."""
         had_work = bool(self.queue) or self.active > 0
+        self.ticks += 1
         self._admit()
+        if self.paged:
+            self._prefill_round()
         self._decode_round()
         return had_work
 

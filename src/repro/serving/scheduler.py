@@ -11,6 +11,7 @@ note)."""
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable
 
 import numpy as np
@@ -31,7 +32,12 @@ class GlobalScheduler:
     _batches: int = 0
 
     def __post_init__(self):
-        spec = self.engine.rt.ep_spec
+        warnings.warn(
+            "GlobalScheduler is deprecated: construct a "
+            "core.policies.PlacementController plus a "
+            "serving.runtime.ServingRuntime instead (see serving/README.md)",
+            DeprecationWarning, stacklevel=3)  # 3: through the generated
+        spec = self.engine.rt.ep_spec          # dataclass __init__
         cluster = ClusterView(
             capacity=np.asarray(self.capacity),
             slots_cap=np.full(len(self.capacity), spec.slots))

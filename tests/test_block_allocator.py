@@ -1,0 +1,71 @@
+"""Unit tests for the paged KV pool's free-list ``BlockAllocator``
+(pure Python — no JAX, no engine)."""
+import pytest
+
+from repro.serving.runtime import BlockAllocator
+
+
+def test_null_block_reserved_and_capacity():
+    a = BlockAllocator(9)
+    assert a.capacity_blocks == 8
+    got = a.alloc(8, owner=0)
+    assert 0 not in got                       # block 0 never handed out
+    assert sorted(got) == list(range(1, 9))
+    assert a.n_free == 0
+
+
+def test_exhaustion_is_a_clean_refusal():
+    """``can_alloc`` lets callers defer; a forced over-allocation raises
+    without corrupting state."""
+    a = BlockAllocator(5)
+    a.alloc(3, owner=0)
+    assert not a.can_alloc(2)
+    with pytest.raises(RuntimeError):
+        a.alloc(2, owner=1)
+    assert a.n_free == 1                      # nothing leaked by the refusal
+    assert set(a.owners().values()) == {0}
+    got = a.alloc(1, owner=1)                 # what fits still allocates
+    assert len(got) == 1
+
+
+def test_freed_blocks_are_reused():
+    a = BlockAllocator(4)
+    first = a.alloc(3, owner=0)
+    a.release(first, owner=0)
+    second = a.alloc(3, owner=1)
+    assert set(second) == set(first)          # free-list reuse, no growth
+    assert all(o == 1 for o in a.owners().values())
+
+
+def test_no_block_owned_by_two_requests():
+    a = BlockAllocator(6)
+    x = a.alloc(2, owner=0)
+    y = a.alloc(2, owner=1)
+    assert not set(x) & set(y)
+    owners = a.owners()
+    assert {owners[b] for b in x} == {0}
+    assert {owners[b] for b in y} == {1}
+
+
+def test_release_returns_all_pages():
+    a = BlockAllocator(6)
+    x = a.alloc(4, owner=7)
+    a.release(x, owner=7)
+    assert a.n_free == a.capacity_blocks
+    assert a.owners() == {}
+
+
+def test_foreign_and_double_free_raise():
+    a = BlockAllocator(6)
+    x = a.alloc(2, owner=0)
+    with pytest.raises(RuntimeError):
+        a.release(x, owner=1)                 # foreign free
+    a.release(x, owner=0)
+    with pytest.raises(RuntimeError):
+        a.release(x, owner=0)                 # double free
+    assert a.n_free == a.capacity_blocks
+
+
+def test_min_size_validated():
+    with pytest.raises(ValueError):
+        BlockAllocator(1)

@@ -1,0 +1,98 @@
+"""Regression tests for the deprecated control-plane shims: both emit
+``DeprecationWarning`` on construction and delegate to the unified
+``PlacementController`` with identical adopt decisions."""
+import numpy as np
+import pytest
+
+from repro.core.migration import CostModel, MigrationController
+from repro.core.policies import (ClusterView, PlacementController,
+                                 get_policy)
+from repro.serving.scheduler import GlobalScheduler
+
+from test_paged_equivalence import _ep_engine
+
+
+def _cost():
+    return CostModel(expert_bytes=1e6, activation_bytes=1e3,
+                     bandwidth=62.5e6, tokens_per_horizon=1e5)
+
+
+def _freq_stream(n_steps, L=2, N=2, E=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.dirichlet(np.full(E, 0.5), size=(L, N))
+            for _ in range(n_steps)]
+
+
+def test_migration_controller_warns_and_matches_unified():
+    policy = get_policy("dancemoe")
+    cluster = ClusterView(capacity=np.array([16, 16]),
+                          slots_cap=np.array([8, 8]))
+    with pytest.warns(DeprecationWarning):
+        shim = MigrationController(policy, _cost(), interval=10.0)
+    shim.ctrl.cluster = cluster
+    ref = PlacementController(policy=policy, cost=_cost(), cluster=cluster,
+                              interval=10.0)
+    for i, freqs in enumerate(_freq_stream(8)):
+        now = 10.0 * (i + 1)
+        plan_s, adopted_s = shim.maybe_migrate(now, freqs)
+        dec_r = ref.review(now, freqs)
+        assert adopted_s == dec_r.adopted
+        np.testing.assert_array_equal(plan_s.residency(),
+                                      dec_r.plan.residency())
+    # legacy history semantics: the initial adoption is excluded
+    assert all(e.get("reason") != "initial" for e in shim.history)
+    assert len(shim.ctrl.events) == len(ref.events)
+
+
+def test_global_scheduler_warns_and_matches_unified():
+    eng, src, _ = _ep_engine(False)
+    spec = eng.rt.ep_spec
+    cap = np.full(spec.n_ep, 64)
+    eng.stats.reset()
+    placement0, params0 = eng.placement, eng.params   # shim adoptions
+    try:                                              # mutate the engine
+        with pytest.warns(DeprecationWarning):
+            sched = GlobalScheduler(engine=eng, capacity=cap, cost=_cost(),
+                                    interval_batches=2)
+        ref = PlacementController(
+            policy=get_policy("dancemoe"), cost=_cost(),
+            cluster=ClusterView(capacity=cap,
+                                slots_cap=np.full(spec.n_ep, spec.slots)),
+            interval=2, stats=eng.stats)
+        adopts_shim, adopts_ref = [], []
+        for b in range(1, 7):
+            eng.generate(src.sample(1, 8), steps=2)   # feed shared stats
+            adopts_shim.append(sched.after_batch())
+            # mirror the shim clock: a forced review every 2nd batch
+            if b % 2 == 0:
+                adopts_ref.append(ref.review(b, force=True).adopted)
+        # off-cadence batches never review; on-cadence decisions match the
+        # unified controller's exactly (same stats, same incumbent chain)
+        assert all(not a for i, a in enumerate(adopts_shim) if (i + 1) % 2)
+        assert [a for i, a in enumerate(adopts_shim)
+                if (i + 1) % 2 == 0] == adopts_ref
+        assert adopts_shim[1]                     # first review adopts
+        np.testing.assert_array_equal(sched.current_plan.residency(),
+                                      ref.plan.residency())
+    finally:
+        eng.placement, eng.params = placement0, params0
+        eng.stats.reset()
+
+
+def test_shim_decisions_follow_eq4_gate():
+    """The shims' adopt decision is exactly the unified Eq.-4 gate: an
+    absurdly expensive migration is rejected by both."""
+    policy = get_policy("dancemoe")
+    cluster = ClusterView(capacity=np.array([16, 16]),
+                          slots_cap=np.array([8, 8]))
+    pricey = CostModel(expert_bytes=1e18, activation_bytes=1e3,
+                       bandwidth=62.5e6, io_speed=1.0,
+                       tokens_per_horizon=1e5)
+    with pytest.warns(DeprecationWarning):
+        shim = MigrationController(policy, pricey, interval=1.0)
+    shim.ctrl.cluster = cluster
+    freqs = _freq_stream(2, seed=5)
+    _, first = shim.maybe_migrate(1.0, freqs[0])
+    assert first                                   # initial always adopts
+    _, second = shim.maybe_migrate(2.0, freqs[1])
+    assert not second                              # Eq. 4 rejects the move

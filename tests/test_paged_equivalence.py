@@ -1,0 +1,279 @@
+"""Property-based token-identity suite for the paged serving runtime.
+
+Randomized request streams (arrival ticks, prompt lengths, max_new_tokens,
+pool geometry) must produce outputs identical to sequential
+``ServingEngine.generate()`` *and* to the legacy dense-pool runtime —
+for the fp32 KV layout and the int8 KV-quant layout. Runs under real
+``hypothesis`` when installed, else the deterministic fallback in
+``tests/_hypothesis_fallback.py`` (see conftest.py).
+
+The randomized bulk (>= 25 cases per leg) drives a dense-MoE-impl engine
+— identical attention/KV-paging code paths without the ~0.7 s/call CPU
+overhead of the shard_map EP dispatch — while deterministic three-way
+tests cover the full EP-dispatch engine for both KV layouts.
+
+Also exercises the runtime-level allocator behavior: admission deferral on
+block exhaustion, page reuse, and the no-aliasing invariants.
+"""
+import jax
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.data.pipeline import TaskTokenSource
+from repro.launch.mesh import make_test_mesh
+from repro.models import moe as M
+from repro.models import transformer as tr
+from repro.serving.engine import ServingEngine
+from repro.serving.runtime import ServingRuntime
+
+MAX_LEN = 64
+# small menus keep the jit-compile universe tiny: each distinct prompt
+# length compiles the reference prefill once per engine (module-cached)
+PROMPT_LENS = (4, 8, 12, 17, 24)
+BLOCK_SIZE = 8
+
+_ENGINES: dict = {}
+
+
+def _engine(kv_quant: bool):
+    """Fast engine for the randomized bulk: mixtral with the dense MoE
+    impl — identical attention/paging code paths, no shard_map dispatch
+    overhead per jitted call. Module-level lazy singleton (the hypothesis
+    fallback's ``given`` wrapper takes no pytest fixtures)."""
+    key = ("dense", kv_quant)
+    if key not in _ENGINES:
+        cfg = get_config("mixtral-8x7b").reduced()
+        mesh = make_test_mesh(1, 1)
+        rt = tr.Runtime(cfg=cfg, mesh=mesh, moe_impl="dense",
+                        kv_quant=kv_quant)
+        params = tr.init_params(
+            tr.Runtime(cfg=cfg, mesh=mesh, moe_impl="dense"),
+            jax.random.PRNGKey(0))
+        eng = ServingEngine(rt=rt, params=params, placement=None,
+                            max_len=MAX_LEN)
+        src = TaskTokenSource("arith", cfg.vocab_size, seed=3)
+        refs: dict = {}
+        _ENGINES[key] = (eng, src, refs)
+    return _ENGINES[key]
+
+
+def _ep_engine(kv_quant: bool):
+    """Full EP-dispatch engine (uniform placement) — the production path;
+    used by the deterministic three-way tests and the shim regression
+    suite (shard_map calls are ~0.7 s each on CPU, so the randomized bulk
+    runs on ``_engine`` instead)."""
+    key = ("ep", kv_quant)
+    if key not in _ENGINES:
+        cfg = get_config("mixtral-8x7b").reduced()
+        mesh = make_test_mesh(1, 1)
+        spec = M.EPSpec.build(mesh, cfg, ep_axes=("model",),
+                              slots=cfg.num_experts, capacity=4096,
+                              slot_capacity=8192)
+        _, n_groups = cfg.layer_pattern()
+        rt = tr.Runtime(cfg=cfg, mesh=mesh, moe_impl="ep", ep_spec=spec,
+                        kv_quant=kv_quant)
+        rt_dense = tr.Runtime(cfg=cfg, mesh=mesh, moe_impl="dense")
+        params_dense = tr.init_params(rt_dense, jax.random.PRNGKey(0))
+        pl = M.uniform_placement(spec.n_ep, spec.slots, cfg.num_experts)
+        pls = tr.stack_placement(pl, n_groups)
+        params = dict(params_dense)
+        params["groups"] = M.regather_ep_groups(params_dense["groups"], pls,
+                                                n_groups)
+        eng = ServingEngine(rt=rt, params=params, placement=pls,
+                            max_len=MAX_LEN)
+        src = TaskTokenSource("arith", cfg.vocab_size, seed=3)
+        refs: dict = {}
+        _ENGINES[key] = (eng, src, refs)
+    return _ENGINES[key]
+
+
+def _reference(eng, refs, prompt, steps):
+    key = (prompt.tobytes(), steps)
+    if key not in refs:
+        refs[key] = eng.generate(prompt[None], steps=steps)[0][0]
+    return refs[key]
+
+
+@st.composite
+def request_stream(draw):
+    """A randomized request stream plus a paged-pool geometry."""
+    n = draw(st.integers(1, 4))
+    reqs = []
+    for _ in range(n):
+        reqs.append(dict(
+            plen=draw(st.sampled_from(PROMPT_LENS)),
+            pseed=draw(st.integers(0, 3)),
+            steps=draw(st.integers(1, 6)),
+            arrival=draw(st.integers(0, 5)),
+        ))
+    # two geometries: roomy, and tight enough to force deferrals
+    n_blocks = draw(st.sampled_from([7, 33]))
+    return reqs, n_blocks
+
+
+def _drive(rtm, jobs):
+    """Submit per arrival tick, step to drain; returns {rid: tokens}."""
+    pending = sorted(jobs, key=lambda j: j["arrival"])
+    t = 0
+    rids = {}
+    while pending or rtm.queue or rtm.active:
+        while pending and pending[0]["arrival"] <= t:
+            j = pending.pop(0)
+            rids[id(j)] = rtm.submit(j["prompt"], j["steps"])
+        rtm.step()
+        rtm.check_invariants()
+        t += 1
+    return {id(j): rtm.finished[rids[id(j)]] for j in jobs}
+
+
+def _run_equivalence(kv_quant: bool, scenario):
+    eng, src, refs = _engine(kv_quant)
+    reqs, n_blocks = scenario
+    jobs = []
+    for r in reqs:
+        prompt = TaskTokenSource("arith", eng.rt.cfg.vocab_size,
+                                 seed=r["pseed"]).sample(1, r["plen"])[0]
+        jobs.append(dict(prompt=prompt, steps=r["steps"],
+                         arrival=r["arrival"]))
+    # skip streams no pool of this size can ever serve
+    cap_blocks = n_blocks - 1
+    need = [-(-(len(j["prompt"]) + j["steps"] - 1) // BLOCK_SIZE)
+            for j in jobs]
+    jobs = [j for j, np_ in zip(jobs, need) if np_ <= cap_blocks]
+    if not jobs:
+        return
+
+    paged = ServingRuntime(eng, max_slots=3, block_size=BLOCK_SIZE,
+                           n_blocks=n_blocks)
+    assert paged.paged
+    out_p = _drive(paged, jobs)
+    assert paged.allocator.n_free == paged.allocator.capacity_blocks
+    assert not paged.allocator.owners()          # all pages returned
+
+    dense = ServingRuntime(eng, max_slots=3, paged=False)
+    out_d = _drive(dense, jobs)
+
+    for j in jobs:
+        ref = _reference(eng, refs, j["prompt"], j["steps"])
+        np.testing.assert_array_equal(out_p[id(j)], ref)
+        np.testing.assert_array_equal(out_d[id(j)], ref)
+
+
+@settings(max_examples=25, deadline=None)
+@given(request_stream())
+def test_paged_matches_sequential_and_dense_fp(scenario):
+    """fp32 KV leg: paged == dense == sequential, >= 25 random streams."""
+    _run_equivalence(False, scenario)
+
+
+@settings(max_examples=25, deadline=None)
+@given(request_stream())
+def test_paged_matches_sequential_and_dense_int8(scenario):
+    """int8 KV-quant leg: paged == dense == sequential (the engine's
+    serve-consistent fake-quant prefill makes all three bit-identical)."""
+    _run_equivalence(True, scenario)
+
+
+# ---------------------------------------------------------------------------
+# EP-dispatch engine: deterministic three-way checks on the production path
+# ---------------------------------------------------------------------------
+
+def _ep_three_way(kv_quant: bool):
+    eng, src, refs = _ep_engine(kv_quant)
+    jobs = [dict(prompt=src.sample(1, 16)[0], steps=5, arrival=0),
+            dict(prompt=src.sample(1, 12)[0], steps=3, arrival=1),
+            dict(prompt=src.sample(1, 20)[0], steps=4, arrival=2)]
+    paged = ServingRuntime(eng, max_slots=3, block_size=BLOCK_SIZE,
+                           n_blocks=25)
+    assert paged.paged
+    out_p = _drive(paged, jobs)
+    dense = ServingRuntime(eng, max_slots=3, paged=False)
+    out_d = _drive(dense, jobs)
+    for j in jobs:
+        ref = _reference(eng, refs, j["prompt"], j["steps"])
+        np.testing.assert_array_equal(out_p[id(j)], ref)
+        np.testing.assert_array_equal(out_d[id(j)], ref)
+    assert paged.max_concurrency >= 2          # streams truly shared a batch
+
+
+def test_ep_paged_three_way_fp():
+    """EP dispatch + paged pool: paged == dense == sequential (fp32 KV)."""
+    _ep_three_way(False)
+
+
+def test_ep_paged_three_way_int8():
+    """EP dispatch + paged pool, int8 KV-quant layout: all three paths
+    bit-identical (serve-consistent fake-quant prefill)."""
+    _ep_three_way(True)
+
+
+# ---------------------------------------------------------------------------
+# Runtime-level allocator behavior (deterministic)
+# ---------------------------------------------------------------------------
+
+def test_exhaustion_defers_admission_then_serves():
+    """A pool too small for the whole stream defers admissions (no crash,
+    no drop) and serves every request as retirements free blocks."""
+    eng, src, refs = _engine(False)
+    prompt = src.sample(1, 12)[0]
+    ref = _reference(eng, refs, prompt, 4)
+    rtm = ServingRuntime(eng, max_slots=4, block_size=BLOCK_SIZE, n_blocks=5)
+    rids = [rtm.submit(prompt, 4) for _ in range(4)]
+    out = rtm.run()
+    assert rtm.deferrals > 0                      # pool pressure was real
+    assert len(out) == 4
+    for rid in rids:
+        np.testing.assert_array_equal(out[rid], ref)
+
+
+def test_freed_pages_are_reused():
+    eng, src, refs = _engine(False)
+    prompt = src.sample(1, 12)[0]
+    rtm = ServingRuntime(eng, max_slots=1, block_size=BLOCK_SIZE, n_blocks=5)
+    pages_by_rid: dict = {}
+    rtm.submit(prompt, 2)
+    rtm.submit(prompt, 2)
+    while rtm.queue or rtm.active:
+        rtm.step()
+        for b, rid in rtm.allocator.owners().items():
+            pages_by_rid.setdefault(rid, set()).add(b)
+    # with a 1-slot runtime the requests run strictly in sequence; the
+    # second's pages must come out of the first's freed set
+    assert set(rtm.finished) == {0, 1}
+    assert pages_by_rid[1] <= pages_by_rid[0]
+    assert rtm.allocator.n_free == rtm.allocator.capacity_blocks
+
+
+def test_no_page_aliasing_and_full_return_under_churn():
+    """Across a churning stream, no block is ever referenced by two live
+    slots and every retirement returns all its pages."""
+    eng, src, refs = _engine(False)
+    rtm = ServingRuntime(eng, max_slots=3, block_size=BLOCK_SIZE,
+                         n_blocks=9)
+    rng = np.random.default_rng(0)
+    for k in range(6):
+        rtm.submit(src.sample(1, int(rng.choice([4, 8, 12])))[0],
+                   int(rng.integers(1, 5)))
+    while rtm.queue or rtm.active:
+        rtm.step()
+        rtm.check_invariants()                   # asserts no aliasing
+    assert not rtm.allocator.owners()
+    assert rtm.allocator.n_free == rtm.allocator.capacity_blocks
+
+
+def test_submit_validates_against_pool_capacity():
+    """Satellite fix: paged admission control is total-capacity based.
+    A request longer than the legacy ``max_len`` is admissible when the
+    pool can hold it; one exceeding the pool is rejected up front."""
+    eng, src, refs = _engine(False)
+    # capacity: 16 blocks x 8 = 128 positions > max_len = 64
+    rtm = ServingRuntime(eng, max_slots=2, block_size=BLOCK_SIZE,
+                         n_blocks=17)
+    long_prompt = src.sample(1, 70)[0]            # > max_len, fits pool
+    rid = rtm.submit(long_prompt, 4)
+    out = rtm.run()
+    assert len(out[rid]) == 4
+    import pytest
+    with pytest.raises(ValueError):
+        rtm.submit(src.sample(1, 126)[0], 8)      # 133 > 128 positions

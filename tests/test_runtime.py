@@ -125,10 +125,22 @@ def test_runtime_applies_adopted_plans_and_preserves_function(engine_setup):
 
 
 def test_submit_rejects_overlong_request(engine_setup):
+    """Admission validation (satellite fix): the dense pool keeps the
+    legacy per-row ``max_len`` bound; the paged pool validates against the
+    *total pool capacity* instead, so a request longer than ``max_len`` is
+    admissible whenever its pages fit."""
     cfg, spec, n_groups, eng, src = engine_setup
-    rtm = ServingRuntime(eng, max_slots=2)
+    rtm = ServingRuntime(eng, max_slots=2, paged=False)
     with pytest.raises(ValueError):
-        rtm.submit(src.sample(1, 60)[0], 10)
+        rtm.submit(src.sample(1, 60)[0], 10)      # 70 > max_len=64
+    with pytest.raises(ValueError):
+        rtm.submit(src.sample(1, 8)[0], 0)
+    # paged: 2 slots x 64 positions -> 8 blocks of 16 = 128 total
+    rtm = ServingRuntime(eng, max_slots=2, block_size=16)
+    assert rtm.paged
+    rtm.submit(src.sample(1, 60)[0], 10)          # 70 <= 128: admissible
+    with pytest.raises(ValueError):
+        rtm.submit(src.sample(1, 120)[0], 10)     # 130 > 128: rejected
     with pytest.raises(ValueError):
         rtm.submit(src.sample(1, 8)[0], 0)
 
