@@ -8,7 +8,6 @@ the paper's reported range (units: seconds, Table II), and evaluate the
 """
 from __future__ import annotations
 
-import dataclasses
 
 import numpy as np
 

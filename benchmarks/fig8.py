@@ -6,7 +6,6 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.placement import dancemoe_placement
-from repro.data.traces import poisson_workload
 from repro.serving.cluster import (ClusterSpec, DEEPSEEK_V2_LITE_PROFILE,
                                    ServerSpec)
 from repro.serving.simulator import EdgeSimulator

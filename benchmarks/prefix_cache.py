@@ -1,0 +1,210 @@
+"""Radix prefix cache payoff on an 80%-shared-prefix workload at *equal KV
+memory*: prefill compute (chunks executed) and admitted concurrency, cache
+on vs off.
+
+Edge request streams are dominated by shared system prompts / few-shot
+templates; with the cache on, the shared block-aligned prefix is prefilled
+once and every later family member acquires the cached pages (refcount)
+instead of recomputing and re-storing them — less prefill compute *and*
+less KV memory per request, which turns directly into admitted concurrency
+on a tight pool.
+
+  PYTHONPATH=src python -m benchmarks.prefix_cache [--csv]
+
+Prints ``prefix_cache,<case>,<value>`` CSV lines and asserts the >= 2x
+prefill-compute reduction target. ``smoke()`` returns the same measurement
+on a smaller stream as the ``BENCH_serving.json`` document for the CI
+``bench-smoke`` job (see ``benchmarks/schema.py`` for the contract). The
+CPU test config (mixtral-8x7b reduced, dense MoE impl — identical
+attention/paging code paths, no shard_map overhead) runs anywhere tier-1
+runs.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import TaskTokenSource
+from repro.launch.mesh import make_test_mesh
+from repro.models import transformer as tr
+from repro.serving.engine import ServingEngine
+from repro.serving.runtime import ServingRuntime
+
+MAX_LEN = 64
+BLOCK_SIZE = 8
+SHARED, TAIL, STEPS = 40, 8, 4     # 40-token shared system prompt + tail
+SHARED_FRAC = 0.8                  # 80% of the stream is one prompt family
+ARRIVALS_PER_TICK = 2              # staggered stream (edge arrival process)
+
+
+def build_engine():
+    cfg = get_config("mixtral-8x7b").reduced()
+    mesh = make_test_mesh(1, 1)
+    rt = tr.Runtime(cfg=cfg, mesh=mesh, moe_impl="dense")
+    params = tr.init_params(rt, jax.random.PRNGKey(0))
+    return ServingEngine(rt=rt, params=params, placement=None,
+                         max_len=MAX_LEN)
+
+
+def build_stream(vocab: int, n_requests: int):
+    """80% shared-prefix family members (unique tails), 20% disjoint."""
+    src = TaskTokenSource("prefix", vocab, seed=0)
+    shared = src.sample(1, SHARED)[0]
+    prompts = []
+    for k in range(n_requests):
+        if k < SHARED_FRAC * n_requests:
+            tail = TaskTokenSource("prefix", vocab,
+                                   seed=100 + k).sample(1, TAIL)[0]
+            prompts.append(np.concatenate([shared, tail]))
+        else:
+            p = TaskTokenSource("prefix", vocab,
+                                seed=500 + k).sample(1, SHARED + TAIL)[0]
+            p[0] = (k + 1) % vocab          # disjoint first block
+            prompts.append(p)
+    return prompts
+
+
+def serve(rtm: ServingRuntime, prompts, steps: int) -> dict:
+    """Staggered submission; per-tick wall latency doubles as the decode
+    round latency (one shared decode round per tick)."""
+    submitted, tick_s = {}, []
+    queue = list(prompts)
+    tick = 0
+    while queue or rtm.queue or rtm.active:
+        for p in queue[:ARRIVALS_PER_TICK]:
+            submitted[rtm.submit(p, steps)] = tick
+        queue = queue[ARRIVALS_PER_TICK:]
+        t0 = time.perf_counter()
+        rtm.step()
+        tick_s.append(time.perf_counter() - t0)
+        tick += 1
+    lat = [rtm.finished_at[r] - t0_tick for r, t0_tick in submitted.items()]
+    return {
+        "peak_admitted": rtm.max_admitted,
+        "peak_decode_batch": rtm.max_concurrency,
+        "chunks_executed": rtm.chunks_executed,
+        "prefill_calls": rtm.prefill_calls,
+        "prefix_hits": rtm.prefix_hits,
+        "prefix_tokens_skipped": rtm.prefix_tokens_skipped,
+        "cow_copies": rtm.cow_copies,
+        "deferrals": rtm.deferrals,
+        "mean_latency_ticks": float(np.mean(lat)),
+        "p95_latency_ticks": float(np.percentile(lat, 95)),
+        "decode_round_s_mean": float(np.mean(tick_s)),
+        "decode_round_s_p95": float(np.percentile(tick_s, 95)),
+    }
+
+
+def measure(eng, n_requests: int, n_blocks: int, max_slots: int):
+    prompts = build_stream(eng.rt.cfg.vocab_size, n_requests)
+    out = {}
+    for label, cache_on in (("nocache", False), ("cache", True)):
+        rtm = ServingRuntime(eng, max_slots=max_slots,
+                             block_size=BLOCK_SIZE, n_blocks=n_blocks,
+                             prefix_cache=cache_on)
+        out[label] = serve(rtm, prompts, STEPS)
+    return out
+
+
+def to_bench_doc(r: dict, *, mode: str, n_requests: int,
+                 n_blocks: int) -> dict:
+    """Shape the measurement as the ``BENCH_serving.json`` document (see
+    ``benchmarks.schema`` for the required fields)."""
+    chunk_ratio = r["nocache"]["chunks_executed"] / max(
+        r["cache"]["chunks_executed"], 1)
+    return {
+        "schema": "bench-serving/v1",
+        "mode": mode,
+        "config": {
+            "arch": "mixtral-8x7b(reduced)",
+            "requests": n_requests,
+            "shared_frac": SHARED_FRAC,
+            "block_size": BLOCK_SIZE,
+            "n_blocks": n_blocks,
+            "prompt_tokens": SHARED + TAIL,
+            "decode_steps": STEPS,
+        },
+        "metrics": {
+            "admitted_concurrency": {
+                "cache": r["cache"]["peak_admitted"],
+                "nocache": r["nocache"]["peak_admitted"],
+            },
+            "prefill_chunks_executed": {
+                "cache": r["cache"]["chunks_executed"],
+                "nocache": r["nocache"]["chunks_executed"],
+            },
+            "prefill_chunk_reduction": chunk_ratio,
+            "prefix_hits": r["cache"]["prefix_hits"],
+            "prefill_tokens_skipped": r["cache"]["prefix_tokens_skipped"],
+            "cow_copies": r["cache"]["cow_copies"],
+            "deferrals": {
+                "cache": r["cache"]["deferrals"],
+                "nocache": r["nocache"]["deferrals"],
+            },
+            "decode_round_latency_s": {
+                "mean": r["cache"]["decode_round_s_mean"],
+                "p95": r["cache"]["decode_round_s_p95"],
+            },
+            "mean_latency_ticks": {
+                "cache": r["cache"]["mean_latency_ticks"],
+                "nocache": r["nocache"]["mean_latency_ticks"],
+            },
+        },
+    }
+
+
+def smoke() -> dict:
+    """Tiny CI-gate measurement (<5 min on a CPU runner): returns the
+    ``BENCH_serving.json`` document."""
+    eng = build_engine()
+    n_requests, n_blocks, max_slots = 10, 15, 8
+    r = measure(eng, n_requests, n_blocks, max_slots)
+    return to_bench_doc(r, mode="smoke", n_requests=n_requests,
+                        n_blocks=n_blocks)
+
+
+def main(csv: bool = False):
+    eng = build_engine()
+    n_requests, n_blocks, max_slots = 20, 15, 8
+    r = measure(eng, n_requests, n_blocks, max_slots)
+    doc = to_bench_doc(r, mode="full", n_requests=n_requests,
+                       n_blocks=n_blocks)
+    m = doc["metrics"]
+    ratio = m["prefill_chunk_reduction"]
+    print(f"# {int(SHARED_FRAC * 100)}%-shared-prefix stream, "
+          f"{n_requests} requests, pool {n_blocks - 1}x{BLOCK_SIZE} "
+          f"(equal KV memory)")
+    for label in ("nocache", "cache"):
+        s = r[label]
+        print(f"{label:8s}: chunks={s['chunks_executed']} "
+              f"calls={s['prefill_calls']} "
+              f"peak_admitted={s['peak_admitted']} "
+              f"mean_latency={s['mean_latency_ticks']:.1f} ticks "
+              f"deferrals={s['deferrals']}")
+    print(f"prefill-compute reduction: {ratio:.1f}x "
+          f"({'>= 2x OK' if ratio >= 2 else 'BELOW TARGET'}); "
+          f"admitted concurrency {m['admitted_concurrency']['nocache']} -> "
+          f"{m['admitted_concurrency']['cache']}; "
+          f"{m['prefill_tokens_skipped']} prompt tokens skipped via "
+          f"{m['prefix_hits']} hits ({m['cow_copies']} CoW clones)")
+    if csv:
+        print(f"prefix_cache,chunk_reduction,{ratio:.2f}")
+        print(f"prefix_cache,cache_peak_admitted,"
+              f"{m['admitted_concurrency']['cache']}")
+        print(f"prefix_cache,nocache_peak_admitted,"
+              f"{m['admitted_concurrency']['nocache']}")
+        print(f"prefix_cache,tokens_skipped,{m['prefill_tokens_skipped']}")
+    assert ratio >= 2.0, (
+        f"prefix cache cut prefill chunks only {ratio:.2f}x on the "
+        f"{int(SHARED_FRAC * 100)}%-shared stream (target: 2x)")
+    assert (m["admitted_concurrency"]["cache"]
+            >= m["admitted_concurrency"]["nocache"]), \
+        "prefix sharing should never lower admitted concurrency"
+
+
+if __name__ == "__main__":
+    main(csv="--csv" in sys.argv)

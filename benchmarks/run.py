@@ -1,12 +1,54 @@
-"""Benchmark driver: one function per paper table/figure.
-Prints ``name,case,value`` CSV lines (plus human-readable sections)."""
+"""Benchmark driver.
+
+Default mode runs one function per paper table/figure and prints
+``name,case,value`` CSV lines (plus human-readable sections).
+
+``--smoke`` is the CI gate (``bench-smoke`` job): a tiny CPU serving
+benchmark (<5 min) whose results are written — schema-validated — to
+``BENCH_serving.json`` (``--out`` overrides the path). The process exits
+non-zero when the document is schema-invalid or empty, so perf numbers
+land in every CI run or the gate fails loudly.
+
+  PYTHONPATH=src python -m benchmarks.run [--csv]
+  PYTHONPATH=src python -m benchmarks.run --smoke [--out BENCH_serving.json]
+"""
 from __future__ import annotations
 
+import json
 import sys
 import time
 
 
+def smoke(out_path: str) -> None:
+    import benchmarks.prefix_cache as prefix_cache
+    from benchmarks.schema import validate_bench_serving
+
+    t0 = time.time()
+    doc = prefix_cache.smoke()
+    doc["elapsed_s"] = round(time.time() - t0, 2)
+    validate_bench_serving(doc)          # raises (non-zero exit) on breakage
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    m = doc["metrics"]
+    print(f"wrote {out_path} in {doc['elapsed_s']}s: "
+          f"chunk_reduction={m['prefill_chunk_reduction']:.2f}x "
+          f"admitted {m['admitted_concurrency']['nocache']} -> "
+          f"{m['admitted_concurrency']['cache']} "
+          f"decode_round={m['decode_round_latency_s']['mean'] * 1e3:.1f}ms")
+
+
 def main() -> None:
+    if "--smoke" in sys.argv:
+        out = "BENCH_serving.json"
+        if "--out" in sys.argv:
+            i = sys.argv.index("--out")
+            if i + 1 >= len(sys.argv):
+                sys.exit("usage: benchmarks.run --smoke [--out PATH]")
+            out = sys.argv[i + 1]
+        smoke(out)
+        return
+
     import benchmarks.table1 as table1
     import benchmarks.table2 as table2
     import benchmarks.fig5 as fig5
@@ -14,6 +56,7 @@ def main() -> None:
     import benchmarks.fig7 as fig7
     import benchmarks.fig8 as fig8
     import benchmarks.paged_pool as paged_pool
+    import benchmarks.prefix_cache as prefix_cache
     import benchmarks.roofline_table as roofline_table
 
     csv = "--csv" in sys.argv
@@ -26,6 +69,7 @@ def main() -> None:
         ("Fig. 8   (scalability + bandwidth)", fig8.main),
         ("Roofline (single-pod dry-run)", roofline_table.main),
         ("Paged KV pool (occupancy + latency-vs-blocks)", paged_pool.main),
+        ("Prefix cache (chunk reduction + concurrency)", prefix_cache.main),
     ]:
         t0 = time.time()
         print(f"\n##### {name}")

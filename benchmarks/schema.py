@@ -1,0 +1,71 @@
+"""Schema contract for the serving benchmark trajectory
+(``BENCH_serving.json``, produced by ``benchmarks/run.py --smoke`` and
+gated by the CI ``bench-smoke`` job).
+
+The document is intentionally small and versioned: every CI run uploads
+one, so schema breaks show up as a failed gate — not as a silently empty
+perf history. Validation is dependency-free (no jsonschema install on the
+runner)."""
+from __future__ import annotations
+
+SCHEMA_NAME = "bench-serving/v1"
+
+# metric key -> ("scalar" | "pair" | "stats") shape requirement
+_REQUIRED_METRICS = {
+    "admitted_concurrency": "pair",        # {"cache": n, "nocache": n}
+    "prefill_chunks_executed": "pair",
+    "prefill_chunk_reduction": "scalar",
+    "prefix_hits": "scalar",
+    "prefill_tokens_skipped": "scalar",
+    "cow_copies": "scalar",
+    "deferrals": "pair",
+    "decode_round_latency_s": "stats",     # {"mean": s, "p95": s}
+    "mean_latency_ticks": "pair",
+}
+
+
+class BenchSchemaError(ValueError):
+    """Raised when a BENCH_serving.json document violates the contract."""
+
+
+def _num(doc: dict, path: str, key: str) -> float:
+    v = doc.get(key)
+    if not isinstance(v, (int, float)) or isinstance(v, bool):
+        raise BenchSchemaError(f"{path}.{key}: expected a number, got {v!r}")
+    if v < 0:
+        raise BenchSchemaError(f"{path}.{key}: negative value {v!r}")
+    return v
+
+
+def validate_bench_serving(doc) -> dict:
+    """Validate a BENCH_serving.json document; returns it on success,
+    raises ``BenchSchemaError`` on a missing/mis-typed/empty field."""
+    if not isinstance(doc, dict) or not doc:
+        raise BenchSchemaError("document must be a non-empty JSON object")
+    if doc.get("schema") != SCHEMA_NAME:
+        raise BenchSchemaError(
+            f"schema: expected {SCHEMA_NAME!r}, got {doc.get('schema')!r}")
+    if doc.get("mode") not in ("smoke", "full"):
+        raise BenchSchemaError(f"mode: invalid {doc.get('mode')!r}")
+    metrics = doc.get("metrics")
+    if not isinstance(metrics, dict) or not metrics:
+        raise BenchSchemaError("metrics: missing or empty")
+    for key, kind in _REQUIRED_METRICS.items():
+        if key not in metrics:
+            raise BenchSchemaError(f"metrics.{key}: missing")
+        if kind == "scalar":
+            _num(metrics, "metrics", key)
+            continue
+        sub = metrics[key]
+        if not isinstance(sub, dict):
+            raise BenchSchemaError(f"metrics.{key}: expected an object")
+        fields = ("cache", "nocache") if kind == "pair" else ("mean", "p95")
+        for f in fields:
+            if f not in sub:
+                raise BenchSchemaError(f"metrics.{key}.{f}: missing")
+            _num(sub, f"metrics.{key}", f)
+    # an all-zero serving run means the benchmark didn't actually serve
+    if metrics["admitted_concurrency"]["cache"] < 1 \
+            or metrics["prefill_chunks_executed"]["nocache"] < 1:
+        raise BenchSchemaError("metrics: empty run (nothing was served)")
+    return doc

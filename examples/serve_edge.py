@@ -20,7 +20,6 @@ import os
 # (standalone script — safe to set before jax initialises)
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import numpy as np
 import jax
 
 from repro.configs import get_config

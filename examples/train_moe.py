@@ -8,7 +8,6 @@ Defaults train a ~25M-param model for 200 steps on CPU (about 15 min);
 Run:  PYTHONPATH=src python examples/train_moe.py --steps 200
 """
 import argparse
-import dataclasses
 import time
 
 import jax

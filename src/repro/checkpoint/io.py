@@ -2,8 +2,6 @@
 (step, config, placement tables). No orbax dependency — works offline."""
 from __future__ import annotations
 
-import dataclasses
-import json
 from pathlib import Path
 from typing import Any
 

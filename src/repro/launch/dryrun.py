@@ -27,7 +27,7 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
-from repro.configs import get_config, list_configs
+from repro.configs import get_config
 from repro.core.placement import build_ep_placement, dancemoe_placement
 from repro.launch import mesh as mesh_lib
 from repro.launch.roofline import collective_bytes_from_hlo, roofline_report

@@ -15,13 +15,12 @@ import time
 from pathlib import Path
 
 import jax
-import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import INPUT_SHAPES
 from repro.launch import mesh as mesh_lib
 from repro.launch.dryrun import (_analyse, _lower_compile, build_lowerable,
-                                 depth_diff_analysis, depth_variant)
+                                 depth_variant)
 from repro.launch.roofline import roofline_report
 
 VARIANTS = {

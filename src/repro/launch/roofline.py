@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import re
 
-import numpy as np
 
 from repro.launch import mesh as mesh_lib
 

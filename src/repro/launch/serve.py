@@ -17,6 +17,7 @@ import argparse
 import time
 
 import jax
+import numpy as np
 
 from repro.configs import get_config, list_configs
 from repro.core.migration import CostModel
@@ -46,11 +47,23 @@ def main():
     ap.add_argument("--dense-pool", action="store_true",
                     help="legacy dense per-slot KV pool (no paging / "
                     "chunked prefill)")
+    ap.add_argument("--prefix-cache", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="radix prefix cache: reuse KV pages across "
+                    "requests sharing a prompt prefix (paged pool only; "
+                    "--no-prefix-cache disables)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="tokens of system prompt shared by all requests "
+                    "(demonstrates prefix-cache hits; 0 = disjoint prompts)")
     ap.add_argument("--policy", default="dancemoe", choices=list_policies())
     ap.add_argument("--review-rounds", type=int, default=16,
                     help="placement review period in decode rounds")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
+    if args.shared_prefix and args.shared_prefix >= args.prompt:
+        ap.error(f"--shared-prefix ({args.shared_prefix}) must be smaller "
+                 f"than --prompt ({args.prompt}): the shared system prompt "
+                 "is part of the per-request prompt budget")
 
     cfg = get_config(args.arch)
     if not args.full:
@@ -91,24 +104,35 @@ def main():
                              controller=controller,
                              paged=False if args.dense_pool else None,
                              block_size=args.block_size,
-                             n_blocks=args.blocks)
+                             n_blocks=args.blocks,
+                             prefix_cache=args.prefix_cache)
     src = TaskTokenSource("serve", cfg.vocab_size, seed=0)
     if cfg.frontend != "none":
         print(f"{cfg.name}: modality frontend is stubbed; serving over "
               "token prompts against the decoder backbone")
+    shared = (src.sample(1, args.shared_prefix)[0]
+              if args.shared_prefix else None)
     t0 = time.time()
-    rids = [runtime.submit(src.sample(1, args.prompt)[0], args.steps)
-            for _ in range(args.requests)]
+    rids = []
+    for _ in range(args.requests):
+        tail = src.sample(1, max(args.prompt - args.shared_prefix, 1))[0]
+        prompt = tail if shared is None else np.concatenate([shared, tail])
+        rids.append(runtime.submit(prompt, args.steps))
     outs = runtime.run()
     dt = time.time() - t0
     n_tok = sum(len(outs[r]) for r in rids)
     pool = (f"paged[{runtime.allocator.n_blocks}x{runtime.block_size}]"
             if runtime.paged else f"dense[{args.slots}x{engine.max_len}]")
+    cache = ("off" if runtime.prefix_cache is None else
+             f"hit_rate={runtime.prefix_hit_rate:.2f} "
+             f"tokens_skipped={runtime.prefix_tokens_skipped} "
+             f"cow={runtime.cow_copies}")
     print(f"{cfg.name}: served {len(rids)} requests / {n_tok} tokens in "
           f"{dt:.1f}s ({n_tok / dt:.1f} tok/s) pool={pool} "
           f"peak_batch={runtime.max_concurrency} "
           f"peak_admitted={runtime.max_admitted} "
           f"deferrals={runtime.deferrals} "
+          f"prefix_cache[{cache}] "
           f"migrations={len(runtime.migrations)}")
 
 

@@ -8,7 +8,6 @@ neither HBM bytes nor collective bytes grow.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -61,7 +60,10 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     q: [B, Tq, H, hd]; k,v: [B, Tk, KVH, hd] with H % KVH == 0.
     ``window`` > 0 restricts to a sliding window (q attends to keys within
-    the last `window` positions, inclusive of self).
+    the last `window` positions, inclusive of self). ``q_offset`` is the
+    absolute position of q's first token — a scalar shared by the batch or
+    a [B] vector when rows sit at different offsets (batched chunked
+    prefill of different serving slots).
     """
     B, Tq, H, hd = q.shape
     Tk, kvh = k.shape[1], k.shape[2]
@@ -75,7 +77,8 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     vc = v.reshape(B, nchunks, chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
     scale = hd ** -0.5
     q32 = (q * scale).astype(q.dtype)
-    qpos = jnp.arange(Tq) + q_offset                       # [Tq]
+    offs = jnp.broadcast_to(jnp.asarray(q_offset), (B,))   # [B]
+    qpos = jnp.arange(Tq)[None, :] + offs[:, None]         # [B, Tq]
 
     def body(carry, xs):
         m, l, acc = carry
@@ -84,12 +87,13 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         kex = jnp.repeat(kci, grp, axis=2)                 # [B, c, H, hd]
         s = jnp.einsum("bqhd,bkhd->bhqk", q32, kex,
                        preferred_element_type=jnp.float32)  # [B,H,Tq,c]
-        mask = kpos[None, :] < Tk                           # pad mask
+        mask = jnp.broadcast_to(kpos[None, None, :] < Tk,
+                                (B, Tq, chunk))             # pad mask
         if causal:
-            mask &= kpos[None, :] <= qpos[:, None]
+            mask &= kpos[None, None, :] <= qpos[:, :, None]
         if window:
-            mask &= kpos[None, :] > qpos[:, None] - window
-        s = jnp.where(mask[None, None], s, NEG_INF)
+            mask &= kpos[None, None, :] > qpos[:, :, None] - window
+        s = jnp.where(mask[:, None], s, NEG_INF)
         m_new = jnp.maximum(m, s.max(-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
@@ -209,14 +213,24 @@ def attn_apply(p, cfg, x, *, ep: int, mode: str, cache=None, pos=None,
     """Returns (out, new_cache). Cache layout: dict(k, v) [B, S, KVH, hd],
     or a paged block pool [n_blocks, block_size, KVH, hd] when ``paged`` is
     given (dict with ``page_table`` [B, P] and, for chunk mode,
-    ``write_blocks`` [W]).
+    ``write_blocks`` [B]).
 
     mode: 'train' | 'prefill' | 'decode' | 'chunk'. For prefill the cache to
     fill is passed pre-allocated (zeros) in `cache`; for train cache is
-    None. 'chunk' is paged chunked prefill: x holds ``T`` block-aligned
-    prompt tokens starting at absolute position ``pos`` (scalar); their k/v
-    are written into ``write_blocks`` whole blocks and attention runs
-    against the gathered pages (earlier chunks + self, causal).
+    None. 'chunk' is batched paged chunked prefill: row ``b`` of x holds
+    one ``block_size``-token block-aligned chunk of slot ``b``'s prompt
+    starting at absolute position ``pos[b]``; its k/v are written into the
+    whole block ``write_blocks[b]`` and attention runs against the gathered
+    pages (earlier chunks + self, causal). Idle rows target the reserved
+    null block 0.
+
+    CoW contract (paged writes): the runtime guarantees every block named
+    by a paged write — ``write_blocks`` in chunk mode, the
+    ``(table[row][pos // bs])`` scatter target in decode mode — has
+    refcount 1 (exclusively owned by the writing slot). Blocks shared via
+    the radix prefix cache are only ever *gathered*; a sharer that must
+    write a partially-filled shared tail block receives a
+    ``copy_pool_block`` clone first.
     """
     B, T = x.shape[:2]
     h = rms_norm(x, p["norm"], norm_eps)
@@ -227,7 +241,10 @@ def attn_apply(p, cfg, x, *, ep: int, mode: str, cache=None, pos=None,
         positions = jnp.broadcast_to(
             jnp.asarray(pos).reshape(-1, 1), (B, 1))
     elif mode == "chunk":
-        positions = jnp.broadcast_to(jnp.arange(T) + jnp.asarray(pos), (B, T))
+        # pos: scalar (single-slot chunk) or [B] vector (batched chunks of
+        # different slots, each at its own prompt offset)
+        offs = jnp.broadcast_to(jnp.asarray(pos), (B,))
+        positions = jnp.arange(T)[None, :] + offs[:, None]
     else:
         positions = jnp.broadcast_to(jnp.arange(T), (B, T))
     q = apply_rope(q, positions, cfg.rope_theta)
@@ -278,18 +295,16 @@ def attn_apply(p, cfg, x, *, ep: int, mode: str, cache=None, pos=None,
     if mode == "train":
         out = _attn(q, k, v)
     elif mode == "chunk":
-        # paged chunked prefill: write the chunk's whole blocks into the
-        # pool, then attend over the gathered pages. Flattened gather index
-        # == absolute position, and masked (future / stale) entries
-        # contribute exact zeros, so the result is bit-identical to the
-        # full-prompt prefill path.
-        bs = cache["k"].shape[1]
-        wb = paged["write_blocks"]                         # [W] block ids
-        W = wb.shape[0]
-        entry = _store(k, v)
+        # batched paged chunked prefill: every row writes its whole chunk
+        # block into the pool, then attends over its own gathered pages.
+        # Flattened gather index == absolute position, and masked (future /
+        # stale) entries contribute exact zeros, so the result is
+        # bit-identical to the full-prompt prefill path. Rows of idle
+        # slots all target the null block 0 (garbage, never read valid).
+        wb = paged["write_blocks"]                         # [B] block ids
+        entry = _store(k, v)                               # [B, bs, KVH, *]
         new_cache = {key: cache[key].at[wb].set(
-            val[0].reshape((W, bs) + val.shape[2:]).astype(cache[key].dtype))
-            for key, val in entry.items()}
+            val.astype(cache[key].dtype)) for key, val in entry.items()}
         kc, vc = paged_gather(new_cache, paged["page_table"], q.dtype)
         out = chunked_attention(q, kc, vc, causal=True, q_offset=pos)
     elif mode == "prefill":
@@ -362,6 +377,25 @@ def attn_apply(p, cfg, x, *, ep: int, mode: str, cache=None, pos=None,
     hp, hd = cfg.padded_heads(ep), cfg.hd
     out = out.reshape(B, T, hp * hd) @ p["wo"]
     return (x + out if residual else out), new_cache
+
+
+def copy_pool_block(cache: dict, src, dst, block_axis: int = 0) -> dict:
+    """Copy one physical block of a paged KV pool (all layouts: k/v plus
+    int8 scales) — the copy-on-write primitive behind prefix sharing. A
+    slot that must write into a block whose refcount is > 1 (a shared,
+    partially-filled tail from the radix cache) writes into the ``dst``
+    clone instead; the shared ``src`` stays immutable.
+
+    ``block_axis`` selects the blocks dimension: 0 for a single-layer pool
+    ``[n_blocks, bs, KVH, *]``, 1 for the grouped stacks
+    ``[n_groups, n_blocks, bs, KVH, *]``.
+    """
+    pre = (slice(None),) * block_axis
+
+    def cp(a):
+        return a.at[pre + (dst,)].set(a[pre + (src,)])
+
+    return jax.tree.map(cp, cache)
 
 
 def init_paged_kv(cfg, n_blocks: int, block_size: int, *,

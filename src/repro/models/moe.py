@@ -268,10 +268,14 @@ def _local_slots(p):
 
 
 def _ep_dispatch_local(h_loc, p, placement, cfg, spec: EPSpec,
-                       use_kernel: bool, m_loc=None):
+                       use_kernel: bool, m_loc=None, o_loc=None):
     """Per-device body (inside shard_map) — a2a dispatch mode.
     h_loc: [R, D] this rank's rows. m_loc: optional [R] float validity —
-    0-rows (chunked-prefill padding) are excluded from the gating counts."""
+    0-rows (chunked-prefill padding) are excluded from the gating counts.
+    o_loc: optional [R] int32 — the EP rank each row's *request* originated
+    at. Gating counts are attributed to it; without it they fall back to
+    the physical row-sharding rank (which mis-credits mixed-origin batches
+    — the serving runtime always passes the true origin)."""
     R, D = h_loc.shape
     E, K = cfg.num_experts, cfg.top_k
     n_ep, S, C, C2 = spec.n_ep, spec.slots, spec.capacity, spec.slot_capacity
@@ -319,27 +323,35 @@ def _ep_dispatch_local(h_loc, p, placement, cfg, spec: EPSpec,
     contrib = contrib * flat_w[order][:, None].astype(h_loc.dtype)
     out = jnp.zeros((R, D), h_loc.dtype).at[flat_src[order]].add(contrib)
 
-    # --- stats: f_n(e) per EP rank; scalars pmean'd over the whole mesh ---
+    # --- stats: f_n(e) per *originating* server. Every row scatter-adds
+    # its expert choices into its origin's row of an [n_ep, E] matrix; the
+    # full-mesh psum (rows are sharded over every axis) then yields the
+    # replicated global attribution — identical totals to the old
+    # stacked-per-physical-rank output, but credited correctly under
+    # mixed-origin batches. Scalars are pmean'd over the whole mesh. ---
     hot = jax.nn.one_hot(topi, E, dtype=jnp.float32)
     if m_loc is not None:
         hot = hot * m_loc[:, None, None]
-    counts = hot.sum((0, 1))
-    non_ep = tuple(a for a in spec.mesh_axes if a not in spec.axes)
-    if non_ep:
-        counts = lax.psum(counts, non_ep)
+    org = o_loc if o_loc is not None else jnp.full((R,), my, jnp.int32)
+    counts = jnp.zeros((n_ep, E), jnp.float32).at[org].add(
+        hot.sum(1), mode="drop")
+    counts = lax.psum(counts, spec.mesh_axes)
     local = lax.pmean(jnp.mean((tgt == my).astype(jnp.float32)),
                       spec.mesh_axes)
     aux = lax.pmean(aux_load_balance_loss(probs, topi, E), spec.mesh_axes)
-    return out, counts[None], local, aux
+    return out, counts, local, aux
 
 
 def _ep_gather_local(h_loc, m_loc, p, placement, cfg, spec: EPSpec,
-                     use_kernel: bool, gather_axes: tuple[str, ...]):
+                     use_kernel: bool, gather_axes: tuple[str, ...],
+                     o_loc=None):
     """Per-device body — decode gather mode. h_loc: [R, D] rows sharded over
     the batch axes only (replicated over `model`). m_loc: [R] float row
     validity mask — vacant slots in a continuous-batching pool carry 0 and
     are excluded from the activation statistics (their compute is discarded
-    by the caller anyway)."""
+    by the caller anyway). o_loc: optional [R] int32 originating EP rank
+    per row — stats and the local ratio are attributed to it; without it
+    requests "arrive at" the first EP rank of their batch shard."""
     R, D = h_loc.shape
     E, K = cfg.num_experts, cfg.top_k
     n_ep, S, C2 = spec.n_ep, spec.slots, spec.slot_capacity
@@ -350,11 +362,16 @@ def _ep_gather_local(h_loc, m_loc, p, placement, cfg, spec: EPSpec,
              if gather_axes else m_loc)                        # [Btok]
     Btok = h_all.shape[0]
     probs, topv, topi = route(p["router"], h_all, K)
-    # Source EP rank of each gathered token (requests "arrive at" the first
-    # EP rank of their batch shard — the paper's server identity).
-    n_gather = max(Btok // R, 1)
-    span = max(n_ep // n_gather, 1)
-    src_ep = (jnp.arange(Btok) // R) * span                    # [Btok]
+    if o_loc is not None:
+        # explicit origin: the edge server each request arrived at
+        src_ep = (lax.all_gather(o_loc, gather_axes, tiled=True)
+                  if gather_axes else o_loc)                   # [Btok]
+    else:
+        # positional fallback: requests "arrive at" the first EP rank of
+        # their batch shard (the paper's server identity)
+        n_gather = max(Btok // R, 1)
+        span = max(n_ep // n_gather, 1)
+        src_ep = (jnp.arange(Btok) // R) * span                # [Btok]
     flat_e = topi.reshape(-1)
     flat_src = jnp.repeat(jnp.arange(Btok), K)
     tgt = placement.expert_to_target[src_ep[flat_src], flat_e]
@@ -379,10 +396,14 @@ def _ep_gather_local(h_loc, m_loc, p, placement, cfg, spec: EPSpec,
     else:
         out = out_all
 
+    # stats: every EP rank sees the same gathered tokens, so the per-origin
+    # [n_ep, E] matrix is computed identically everywhere (replicated over
+    # the EP axes); only batch axes outside the gather still shard tokens
+    # and need a psum
     valid = m_all[flat_src].astype(jnp.float32)
-    my_tokens = (src_ep[flat_src] == my).astype(jnp.float32) * valid
-    counts = (jax.nn.one_hot(flat_e, E, dtype=jnp.float32)
-              * my_tokens[:, None]).sum(0)
+    counts = jnp.zeros((n_ep, E), jnp.float32).at[src_ep[flat_src]].add(
+        jax.nn.one_hot(flat_e, E, dtype=jnp.float32) * valid[:, None],
+        mode="drop")
     non_ep = tuple(a for a in spec.mesh_axes
                    if a not in spec.axes and a not in gather_axes)
     if non_ep:
@@ -391,18 +412,24 @@ def _ep_gather_local(h_loc, m_loc, p, placement, cfg, spec: EPSpec,
         jnp.sum((tgt == src_ep[flat_src]).astype(jnp.float32) * valid)
         / jnp.maximum(jnp.sum(valid), 1.0), spec.mesh_axes)
     aux = lax.pmean(aux_load_balance_loss(probs, topi, E), spec.mesh_axes)
-    return out, counts[None], local, aux
+    return out, counts, local, aux
 
 
 def moe_apply_ep(p, cfg, x, *, mesh, spec: EPSpec, placement: EPPlacement,
                  mode: str, use_kernel: bool = False,
                  norm_eps: float = 1e-5, seq_sharded_out: bool = False,
-                 token_mask=None):
+                 token_mask=None, origin=None):
     """Placement-aware EP MoE. x: [B, T, D]. Returns (out, stats).
 
     token_mask: [B] float validity per batch row (decode: vacant
     continuous-batching slots) or [B, T] per token (chunked prefill:
-    prompt padding); 0-entries are excluded from the gating statistics."""
+    prompt padding); 0-entries are excluded from the gating statistics.
+    origin: [B] or [B, T] int32 — the EP rank each token's *request*
+    originated at. ``counts_per_rank[r]`` then holds the gating counts of
+    traffic that arrived at server ``r`` regardless of how the rows were
+    sharded for compute; without it attribution falls back to the physical
+    rank (row-sharding rank in dispatch mode, batch-shard position in
+    decode mode), which mis-credits mixed-origin batches."""
     B, T, D = x.shape
     h = rms_norm(x, p["norm"], norm_eps)
     wspec = {
@@ -418,14 +445,16 @@ def moe_apply_ep(p, cfg, x, *, mesh, spec: EPSpec, placement: EPPlacement,
         if spec.batch_axes else 1
     rows_shardable = (B * T) % max(n_batch, 1) == 0 and B * T >= n_batch
     batch_row_axes = spec.batch_axes if rows_shardable else ()
+    use_origin = origin is not None
 
     if mode == "decode":
         rows_spec = P(batch_row_axes if batch_row_axes else None, None)
         gather_axes = tuple(a for a in spec.axes if a in batch_row_axes)
 
-        def body(h_loc, m_loc, p_loc, pl_loc):
+        def body(h_loc, m_loc, o_loc, p_loc, pl_loc):
             return _ep_gather_local(h_loc, m_loc, p_loc, pl_loc, cfg, spec,
-                                    use_kernel, gather_axes)
+                                    use_kernel, gather_axes,
+                                    o_loc=o_loc if use_origin else None)
     elif seq_sharded_out and T % sizes.get("model", 1) == 0:
         # sequence-parallel residual: h is [B(batch axes), T(model), D].
         # NOTE: flattening two sharded dims globally is NOT a free reshape
@@ -443,7 +472,7 @@ def moe_apply_ep(p, cfg, x, *, mesh, spec: EPSpec, placement: EPPlacement,
 
         fn = _shard_map(body3, mesh=mesh,
                         in_specs=(rows_spec3, wspec, pl_spec),
-                        out_specs=(rows_spec3, P(spec.axes, None), P(), P()))
+                        out_specs=(rows_spec3, P(), P(), P()))
         out, counts, local, aux = fn(h, p_in, placement)
         stats = {"counts": counts.sum(0), "counts_per_rank": counts,
                  "aux_loss": aux, "local_frac": local}
@@ -451,27 +480,35 @@ def moe_apply_ep(p, cfg, x, *, mesh, spec: EPSpec, placement: EPPlacement,
     else:
         rows_spec = P(spec.dispatch_row_axes, None)
 
-        def body(h_loc, m_loc, p_loc, pl_loc):
+        def body(h_loc, m_loc, o_loc, p_loc, pl_loc):
             # mask excludes chunked-prefill padding from the gating counts
             return _ep_dispatch_local(h_loc, p_loc, pl_loc, cfg, spec,
-                                      use_kernel, m_loc=m_loc)
+                                      use_kernel, m_loc=m_loc,
+                                      o_loc=o_loc if use_origin else None)
 
-    out_specs = (rows_spec, P(spec.axes, None), P(), P())
+    # counts leave both bodies as a replicated [n_ep, E] per-origin matrix
+    out_specs = (rows_spec, P(), P(), P())
     mask_spec = P(rows_spec[0])
     rows = h.reshape(B * T, D)
     rows = lax.with_sharding_constraint(rows, NamedSharding(mesh, rows_spec))
-    if token_mask is None:
-        mask_rows = jnp.ones((B * T,), jnp.float32)
-    else:
-        tm = token_mask.astype(jnp.float32)
-        mask_rows = (tm if tm.ndim == 2 else
-                     jnp.broadcast_to(tm[:, None], (B, T))).reshape(B * T)
-    mask_rows = lax.with_sharding_constraint(
-        mask_rows, NamedSharding(mesh, mask_spec))
+
+    def to_rows(v, dtype):
+        vv = v.astype(dtype)
+        vv = (vv if vv.ndim == 2 else
+              jnp.broadcast_to(vv[:, None], (B, T)))
+        return lax.with_sharding_constraint(
+            vv.reshape(B * T), NamedSharding(mesh, mask_spec))
+
+    mask_rows = to_rows(token_mask if token_mask is not None
+                        else jnp.ones((B, T)), jnp.float32)
+    origin_rows = to_rows(origin if use_origin
+                          else jnp.zeros((B, T), jnp.int32), jnp.int32)
     fn = _shard_map(body, mesh=mesh,
-                    in_specs=(rows_spec, mask_spec, wspec, pl_spec),
+                    in_specs=(rows_spec, mask_spec, mask_spec, wspec,
+                              pl_spec),
                     out_specs=out_specs)
-    out_rows, counts, local, aux = fn(rows, mask_rows, p_in, placement)
+    out_rows, counts, local, aux = fn(rows, mask_rows, origin_rows, p_in,
+                                      placement)
     out = out_rows.reshape(B, T, D)
     if batch_row_axes and B % n_batch == 0:
         out = lax.with_sharding_constraint(

@@ -11,7 +11,6 @@ Entry points (all pure functions of a ``Runtime``):
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -134,7 +133,7 @@ def _sp_scatter(rt: Runtime, x):
 
 
 def _apply_block(rt: Runtime, kind: str, p, h, *, mode, cache, pos,
-                 placement, token_mask=None, paged=None):
+                 placement, token_mask=None, paged=None, origin=None):
     cfg = rt.cfg
     window = rt.window
     sp = _sp_active(rt, mode)
@@ -169,7 +168,7 @@ def _apply_block(rt: Runtime, kind: str, p, h, *, mode, cache, pos,
                 # branch — the seq-sharded fast path ignores token_mask
                 seq_sharded_out=(rt.layout in ("sp", "cp", "fsdp")
                                  and mode not in ("decode", "chunk")),
-                token_mask=token_mask)
+                token_mask=token_mask, origin=origin)
         else:
             out, stats = moe_mod.moe_apply_dense(p, cfg, h,
                                                  norm_eps=cfg.norm_eps)
@@ -185,7 +184,7 @@ def _apply_block(rt: Runtime, kind: str, p, h, *, mode, cache, pos,
 
 
 def _apply_group(rt: Runtime, pattern, gp, shared_p, h, *, mode, gcache,
-                 pos, placement, token_mask=None, paged=None):
+                 pos, placement, token_mask=None, paged=None, origin=None):
     """Apply one scan group. Returns (h, new_gcache, moe_stats)."""
     new_cache = {}
     moe_stats = None
@@ -194,7 +193,7 @@ def _apply_group(rt: Runtime, pattern, gp, shared_p, h, *, mode, gcache,
         c = gcache.get(f"b{i}") if gcache is not None else None
         h, extra = _apply_block(rt, kind, p, h, mode=mode, cache=c, pos=pos,
                                 placement=placement, token_mask=token_mask,
-                                paged=paged)
+                                paged=paged, origin=origin)
         if kind == MOE:
             moe_stats = extra  # <=1 MoE sublayer per group in all configs
         elif extra is not None:
@@ -221,7 +220,7 @@ def stack_placement(placement, n_groups: int):
 
 
 def _run_stack(rt: Runtime, params, h, *, mode, cache, pos, placement,
-               token_mask=None, paged=None):
+               token_mask=None, paged=None, origin=None):
     """Scan the layer groups. Returns (h, new_cache, stacked_moe_stats).
 
     ``placement`` (EP MoE only): EPPlacement pytree with a leading
@@ -229,9 +228,11 @@ def _run_stack(rt: Runtime, params, h, *, mode, cache, pos, placement,
     is how Algorithm 1's layer-wise expert-count allocation reaches the
     runtime. ``token_mask`` ([B] in decode, [B, T] in chunk mode) excludes
     vacant continuous-batching rows / prompt padding from the gating
-    statistics. ``paged`` (decode/chunk): the page-table info shared by all
-    layers — every layer indexes the same physical block ids into its own
-    pool."""
+    statistics. ``origin`` ([B] or [B, T] int32) attributes each token's
+    gating counts to the EP rank its request originated at (Algorithm 1's
+    per-server f_n(e)); without it counts fall back to the physical rank.
+    ``paged`` (decode/chunk): the page-table info shared by all layers —
+    every layer indexes the same physical block ids into its own pool."""
     cfg = rt.cfg
     pattern, n_groups = cfg.layer_pattern()
     shared_p = params.get("shared_attn")
@@ -248,7 +249,8 @@ def _run_stack(rt: Runtime, params, h, *, mode, cache, pos, placement,
         gp, gcache, gpl = xs
         hh, new_gcache, mstats = _apply_group(
             rt, pattern, gp, shared_p, hh, mode=mode, gcache=gcache,
-            pos=pos, placement=gpl, token_mask=token_mask, paged=paged)
+            pos=pos, placement=gpl, token_mask=token_mask, paged=paged,
+            origin=origin)
         if mstats is None:
             mstats = _zero_moe_stats(rt)
         return hh, (new_gcache, mstats)
@@ -374,34 +376,39 @@ def _constrain_outputs(rt: Runtime, logits, cache):
 
 
 def prefill(rt: Runtime, params, tokens=None, embeds=None, placement=None,
-            cache_len: int | None = None):
-    """Returns (last-token logits [B, V], cache, moe_stats)."""
+            cache_len: int | None = None, origin=None):
+    """Returns (last-token logits [B, V], cache, moe_stats). ``origin``:
+    optional [B] int32 — the EP rank each request originated at (gating
+    stats attribution; defaults to the physical row-sharding rank)."""
     h = _embed(rt, params, tokens) if embeds is None else embeds.astype(rt.dtype)
     B, T = h.shape[:2]
     cache = init_cache(rt, B, cache_len if cache_len is not None else T)
     h, new_cache, mstats = _run_stack(rt, params, h, mode="prefill",
                                       cache=cache, pos=None,
-                                      placement=placement)
+                                      placement=placement, origin=origin)
     logits = _logits(rt, params, h[:, -1])
     logits, new_cache = _constrain_outputs(rt, logits, new_cache)
     return logits, new_cache, mstats
 
 
 def decode_step(rt: Runtime, params, cache, tokens, pos, placement=None,
-                token_mask=None, page_table=None):
+                token_mask=None, page_table=None, origin=None):
     """tokens: [B, 1] int32; pos: scalar int32 (whole batch at one
     position) or [B] int32 vector (continuous batching: per-row positions).
     token_mask: optional [B] float validity — 0-rows (vacant pool slots)
     are excluded from the MoE gating statistics.
     page_table: optional [B, P] int32 — ``cache`` is then a paged block
     pool (``init_paged_cache``) and each row reads/writes through its pages.
+    origin: optional [B] int32 originating EP rank per row (stats
+    attribution).
     Returns (logits [B, V], new_cache, moe_stats)."""
     h = _embed(rt, params, tokens)
     paged = {"page_table": page_table} if page_table is not None else None
     h, new_cache, mstats = _run_stack(rt, params, h, mode="decode",
                                       cache=cache, pos=pos,
                                       placement=placement,
-                                      token_mask=token_mask, paged=paged)
+                                      token_mask=token_mask, paged=paged,
+                                      origin=origin)
     logits = _logits(rt, params, h[:, -1])
     if page_table is not None:
         # paged pools have block-major shapes the dense cache pspecs don't
@@ -414,31 +421,46 @@ def decode_step(rt: Runtime, params, cache, tokens, pos, placement=None,
 
 def prefill_chunk(rt: Runtime, params, cache, tokens, page_table,
                   write_blocks, offset, last_idx, placement=None,
-                  token_mask=None):
-    """Paged chunked prefill: consume one block-aligned chunk of a single
-    prompt into a paged pool.
+                  token_mask=None, origin=None):
+    """Batched paged chunked prefill: consume one ``block_size``-aligned
+    chunk of up to ``B`` *different* prompts (one per serving slot) into a
+    paged pool in a single call, so short non-shared prompt tails don't
+    serialize behind each other.
 
-    tokens: [1, C] int32 (C a multiple of the pool's block size; the tail
-    beyond the true prompt is padding — mask it via ``token_mask``).
-    page_table: [1, P] — the slot's full page table (logical order).
-    write_blocks: [W] int32 (W = C // block_size) — physical blocks that
-    receive this chunk's k/v.
-    offset: scalar int32 — absolute position of ``tokens[:, 0]``.
-    last_idx: scalar int32 — in-chunk index whose logits to return (the
-    final prompt token on the last chunk; ignored otherwise).
-    token_mask: optional [1, C] float — 0 for padding tokens (excluded from
-    the MoE gating statistics).
-    Returns (logits [1, V], new_cache, moe_stats)."""
+    tokens: [B, bs] int32 — row ``b`` is one whole-block chunk of slot
+    ``b``'s prompt (the tail beyond the true prompt is padding — mask it
+    via ``token_mask``; rows of idle slots are all-padding).
+    page_table: [B, P] — each slot's full page table (logical order).
+    write_blocks: [B] int32 — the physical block receiving each row's k/v
+    (idle rows target the reserved null block 0).
+    offset: [B] int32 — absolute position of ``tokens[b, 0]``.
+    last_idx: [B] int32 — in-chunk index whose logits to return per row
+    (the final prompt token on a last chunk; ignored otherwise).
+    token_mask: optional [B, bs] float — 0 for padding tokens (excluded
+    from the MoE gating statistics).
+    origin: optional [B] int32 originating EP rank per row.
+    Returns (logits [B, V], new_cache, moe_stats)."""
     h = _embed(rt, params, tokens)
     paged = {"page_table": page_table, "write_blocks": write_blocks}
     h, new_cache, mstats = _run_stack(rt, params, h, mode="chunk",
                                       cache=cache, pos=offset,
                                       placement=placement,
-                                      token_mask=token_mask, paged=paged)
-    h_last = lax.dynamic_slice_in_dim(h, last_idx, 1, axis=1)
-    logits = _logits(rt, params, h_last[:, 0])
+                                      token_mask=token_mask, paged=paged,
+                                      origin=origin)
+    B = h.shape[0]
+    h_last = h[jnp.arange(B), jnp.asarray(last_idx)]       # [B, D]
+    logits = _logits(rt, params, h_last)
     logits, _ = _constrain_outputs(rt, logits, None)
     return logits, new_cache, mstats
+
+
+def copy_paged_block(pool, src, dst):
+    """Copy one physical block across every layer of a paged pool (the
+    serving-side copy-on-write primitive: clone a shared tail block before
+    a sharer's first write). ``pool`` is the ``init_paged_cache`` pytree
+    (leading n_groups dim per layer); src/dst are scalar block ids."""
+    return {k: attn.copy_pool_block(c, src, dst, block_axis=1)
+            for k, c in pool.items()}
 
 
 def supports_paging(rt: Runtime) -> bool:

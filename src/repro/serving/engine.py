@@ -37,21 +37,25 @@ class ServingEngine:
         n_ep = rt.ep_spec.n_ep if rt.ep_spec else 1
         self.stats = ActivationStats(self.n_groups, n_ep, cfg.num_experts)
 
-        def _prefill(params, tokens, placement):
+        def _prefill(params, tokens, placement, origin=None):
             return tr.prefill(rt, params, tokens=tokens, placement=placement,
-                              cache_len=self.max_len)
+                              cache_len=self.max_len, origin=origin)
 
-        def _decode(params, cache, tokens, pos, placement, token_mask=None):
+        def _decode(params, cache, tokens, pos, placement, token_mask=None,
+                    origin=None):
             return tr.decode_step(rt, params, cache, tokens, pos, placement,
-                                  token_mask=token_mask)
+                                  token_mask=token_mask, origin=origin)
 
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode)
+        self._copy_block = jax.jit(tr.copy_paged_block)
         self._paged_fns: dict = {}
 
     # ------------------------------------------------------------------
     def paged_step_fns(self, block_size: int, max_pages: int):
         """Jitted (prefill_chunk, decode) pair for a paged KV pool. The
+        chunk function consumes one block-aligned chunk of *every*
+        prefilling slot per call (batched multi-slot prefill). The
         functions specialize on array shapes; the (block_size, max_pages)
         key only keeps one cached pair per pool geometry."""
         key = (block_size, max_pages)
@@ -59,19 +63,27 @@ class ServingEngine:
             rt = self.rt
 
             def _chunk(params, pool, tokens, page_table, write_blocks,
-                       offset, last_idx, placement, token_mask):
+                       offset, last_idx, placement, token_mask, origin=None):
                 return tr.prefill_chunk(rt, params, pool, tokens, page_table,
                                         write_blocks, offset, last_idx,
-                                        placement, token_mask=token_mask)
+                                        placement, token_mask=token_mask,
+                                        origin=origin)
 
             def _dec(params, pool, tokens, pos, page_table, placement,
-                     token_mask=None):
+                     token_mask=None, origin=None):
                 return tr.decode_step(rt, params, pool, tokens, pos,
                                       placement, token_mask=token_mask,
-                                      page_table=page_table)
+                                      page_table=page_table, origin=origin)
 
             self._paged_fns[key] = (jax.jit(_chunk), jax.jit(_dec))
         return self._paged_fns[key]
+
+    # ------------------------------------------------------------------
+    def copy_block(self, pool, src: int, dst: int):
+        """Copy one physical block across every layer of a paged pool —
+        the runtime's copy-on-write primitive (clone a shared tail block
+        before a sharer's first write)."""
+        return self._copy_block(pool, jnp.int32(src), jnp.int32(dst))
 
     # ------------------------------------------------------------------
     def generate(self, tokens: np.ndarray, steps: int = 16,

@@ -8,13 +8,22 @@ instead:
 * a request queue — ``submit()`` at any time, including mid-stream;
 * a **paged KV-cache pool** (default) — a shared block table of
   ``n_blocks × block_size`` positions per layer plus a per-slot page list
-  managed by a free-list ``BlockAllocator``; admission is governed by free
-  *blocks*, not free ``max_len`` rows, so heterogeneous request streams
-  pack the same KV memory far denser than the legacy dense pool;
-* **chunked prefill** — admitted prompts are consumed in
-  ``block_size``-aligned chunks (one jitted ``prefill_chunk`` per chunk)
-  interleaved with decode rounds, so a long prompt no longer stalls the
-  whole pool;
+  managed by a reference-counted ``BlockAllocator``; admission is governed
+  by free *blocks*, not free ``max_len`` rows, so heterogeneous request
+  streams pack the same KV memory far denser than the legacy dense pool;
+* a **radix prefix cache** (``prefix_cache=True``, the default) — a token
+  trie mapping block-aligned prompt prefixes to the physical blocks that
+  already hold their k/v. A request whose prompt shares a cached prefix
+  acquires those blocks shared (refcount + 1) and skips prefill for them
+  entirely; an identical prompt skips *all* prefill (first token from the
+  cached last-prompt-token logits) and gets a **copy-on-write** clone of
+  the partially-filled tail block before its first decode write — a block
+  with refcount > 1 is never written;
+* **batched chunked prefill** — each scheduler tick advances *every*
+  prefilling slot by one ``block_size``-aligned chunk in a single jitted
+  ``prefill_chunk`` call (fixed ``max_slots`` batch width, one compile),
+  interleaved with decode rounds, so neither a long prompt nor many short
+  non-shared tails serialize the pool;
 * interleaved prefill/decode — every decoding slot advances one token per
   decode round regardless of arrival time (per-row cache positions via the
   vector-``pos`` decode path).
@@ -25,13 +34,18 @@ for architectures whose caches cannot be paged (SSM state, sliding-window
 rings) and as the reference implementation for the equivalence suite.
 
 Outputs are token-identical to sequential ``generate()`` calls in both
-modes as long as the EP dispatch capacities are not saturated (rows are
-independent in attention; the MoE layer couples them only through capacity
-dropping).
+modes — with or without the prefix cache — as long as the EP dispatch
+capacities are not saturated (rows are independent in attention; the MoE
+layer couples them only through capacity dropping). Prefix reuse is exact
+because k/v at position ``i`` depend only on tokens ``0..i``.
 
 The runtime also hosts the serving side of the placement control plane: it
 feeds gating statistics to a ``PlacementController`` and applies adopted
-plans to the engine (re-gather + table swap, no recompile).
+plans to the engine (re-gather + table swap, no recompile). Requests
+tagged with ``submit(origin=...)`` have their gating counts attributed to
+that *originating server* instead of the physical row-sharding rank
+(Algorithm 1's per-server f_n(e)); untagged streams keep the positional
+fallback unchanged.
 """
 from __future__ import annotations
 
@@ -46,6 +60,7 @@ from repro.core.placement import build_ep_placement
 from repro.core.policies import PlacementController
 from repro.models import transformer as tr
 from repro.serving.engine import ServingEngine
+from repro.serving.prefix_cache import PrefixMatch, RadixPrefixCache
 
 
 @dataclasses.dataclass
@@ -54,6 +69,7 @@ class GenRequest:
     rid: int
     prompt: np.ndarray            # [T] int32
     max_new_tokens: int
+    origin: int | None = None     # originating server (EP rank) for stats
 
 
 @dataclasses.dataclass
@@ -64,10 +80,13 @@ class _Slot:
     last: int                     # last emitted token (next decode input)
     tokens: list                  # emitted tokens so far
     need: int                     # total tokens to emit
+    origin: int | None = None     # originating server (stats attribution)
     # paged-mode state
     pages: list = dataclasses.field(default_factory=list)
-    prompt: np.ndarray | None = None   # full prompt (chunked prefill)
-    filled: int = 0                    # prompt tokens already prefilled
+    prompt: np.ndarray | None = None   # full prompt (kept for cache insert)
+    filled: int = 0                    # prompt tokens already in the pool
+    final_logits: np.ndarray | None = None  # last-prompt-token logits (for
+    #                                         tail insertion at retirement)
 
     @property
     def prefilling(self) -> bool:
@@ -75,13 +94,16 @@ class _Slot:
 
 
 class BlockAllocator:
-    """Free-list allocator over the physical blocks of a paged KV pool.
+    """Reference-counted free-list allocator over the physical blocks of a
+    paged KV pool.
 
     Block 0 is reserved as the *null block*: vacant decode rows point their
     page tables at it and park their garbage writes there, so it is never
-    handed out. Allocation is all-or-nothing per request and every block is
-    tagged with its owner so cross-slot aliasing and foreign frees are
-    structural errors, not silent corruption.
+    handed out. ``alloc`` hands out fresh blocks at refcount 1;
+    ``acquire`` adds a reference to a live block (prefix sharing: a block
+    may be held by several slots plus the radix cache at once); ``release``
+    drops one reference and recycles the block only at refcount 0. Acquire
+    or release of a non-live block is a structural error and raises.
     """
 
     def __init__(self, n_blocks: int):
@@ -89,7 +111,7 @@ class BlockAllocator:
             raise ValueError("need >= 2 blocks (block 0 is the null block)")
         self.n_blocks = n_blocks
         self._free = list(range(n_blocks - 1, 0, -1))   # LIFO: hot reuse
-        self._owner: dict[int, int] = {}
+        self._rc: dict[int, int] = {}
 
     @property
     def n_free(self) -> int:
@@ -103,32 +125,56 @@ class BlockAllocator:
     def can_alloc(self, n: int) -> bool:
         return n <= len(self._free)
 
-    def alloc(self, n: int, owner: int) -> list[int]:
-        """Pop ``n`` blocks for ``owner``; raises when exhausted (callers
-        check ``can_alloc`` first and defer admission instead)."""
+    def alloc(self, n: int) -> list[int]:
+        """Pop ``n`` fresh blocks at refcount 1; raises when exhausted
+        (callers check ``can_alloc`` first and defer admission instead)."""
         if not self.can_alloc(n):
             raise RuntimeError(
                 f"paged pool exhausted: requested {n} blocks, "
                 f"{len(self._free)} free")
         blocks = [self._free.pop() for _ in range(n)]
         for b in blocks:
-            self._owner[b] = owner
+            self._rc[b] = 1
         return blocks
 
-    def release(self, blocks: list[int], owner: int) -> None:
-        """Return ``blocks`` to the free list; every block must belong to
-        ``owner`` (double frees and foreign frees raise)."""
+    def acquire(self, blocks: list[int]) -> None:
+        """Add one reference to each live block (shared prefix pages)."""
         for b in blocks:
-            if self._owner.get(b) != owner:
-                raise RuntimeError(
-                    f"block {b} is not owned by request {owner} "
-                    f"(owner: {self._owner.get(b)})")
-            del self._owner[b]
-            self._free.append(b)
+            if b not in self._rc:
+                raise RuntimeError(f"block {b} is not allocated")
+        for b in blocks:
+            self._rc[b] += 1
 
-    def owners(self) -> dict[int, int]:
-        """Live block -> owner rid (for invariant checks and tests)."""
-        return dict(self._owner)
+    def release(self, blocks: list[int]) -> int:
+        """Drop one reference per block; a block is recycled only when its
+        refcount reaches 0. Returns the number of blocks recycled.
+
+        Refcounts are anonymous (sharing means a block has no single
+        owner), so a release the caller does not actually hold steals
+        another holder's reference rather than raising — the runtime's
+        ``check_invariants`` (refcount == slot holds + cache refs, asserted
+        every tick of the property suites) is the guard for that misuse
+        class, replacing the old owner-tag check that sharing made
+        impossible."""
+        freed = 0
+        for b in blocks:
+            rc = self._rc.get(b)
+            if rc is None:
+                raise RuntimeError(f"block {b} is not allocated")
+            if rc == 1:
+                del self._rc[b]
+                self._free.append(b)
+                freed += 1
+            else:
+                self._rc[b] = rc - 1
+        return freed
+
+    def refcount(self, b: int) -> int:
+        return self._rc.get(b, 0)
+
+    def live(self) -> dict[int, int]:
+        """Live block -> refcount (for invariant checks and tests)."""
+        return dict(self._rc)
 
 
 class ServingRuntime:
@@ -153,15 +199,17 @@ class ServingRuntime:
                  positions per row, so this is the cost/length-cap knob.
                  Default: ``2 * ceil(max_len / block_size)``, clamped to
                  the pool.
-    chunks_per_tick: prefill chunks consumed per prefilling slot per
-                 ``step()`` (interleaving knob).
+    chunks_per_tick: batched prefill rounds per ``step()`` — each round
+                 advances every prefilling slot one chunk in one jitted
+                 call (interleaving knob).
+    prefix_cache: enable the radix prefix cache (paged mode only).
     """
 
     def __init__(self, engine: ServingEngine, max_slots: int = 4,
                  controller: PlacementController | None = None, *,
                  paged: bool | None = None, block_size: int = 16,
                  n_blocks: int | None = None, max_pages: int | None = None,
-                 chunks_per_tick: int = 1):
+                 chunks_per_tick: int = 1, prefix_cache: bool = True):
         self.engine = engine
         self.max_slots = max_slots
         self.controller = controller
@@ -176,6 +224,7 @@ class ServingRuntime:
         if paged is None:
             paged = tr.supports_paging(engine.rt)
         self.paged = paged
+        self.prefix_cache: RadixPrefixCache | None = None
         if paged:
             self.block_size = block_size
             if n_blocks is None:
@@ -191,6 +240,9 @@ class ServingRuntime:
                                 2 * (-(-engine.max_len // block_size)))
             self.max_pages = max_pages
             self.chunks_per_tick = chunks_per_tick
+            if prefix_cache:
+                self.prefix_cache = RadixPrefixCache(block_size,
+                                                     self.allocator)
             self.pool = tr.init_paged_cache(engine.rt, n_blocks, block_size)
             self.page_table = np.zeros((max_slots, self.max_pages), np.int32)
             self._chunk_fn, self._decode_fn = engine.paged_step_fns(
@@ -206,8 +258,14 @@ class ServingRuntime:
         self.max_admitted = 0         # peak concurrently admitted requests
         self.finished_at: dict[int, int] = {}   # rid -> tick of completion
         self.deferrals = 0            # admissions deferred on free blocks
+        self.prefix_hits = 0          # admissions that reused cached pages
+        self.prefix_tokens_skipped = 0  # prompt tokens never prefilled
+        self.prefill_calls = 0        # jitted chunk calls issued
+        self.chunks_executed = 0      # per-slot chunks consumed (compute)
+        self.cow_copies = 0           # copy-on-write tail clones
         self.migrations: list = []
         self._next_rid = 0
+        self._origin_mode: str | None = None   # 'tagged' | 'untagged'
 
         def _write_rows(pool, new, idx):
             return jax.tree.map(
@@ -231,8 +289,11 @@ class ServingRuntime:
             return self.allocator.capacity_blocks * self.block_size
         return self.max_slots * self.engine.max_len
 
-    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
+    def submit(self, prompt: np.ndarray, max_new_tokens: int,
+               origin: int | None = None) -> int:
         """Enqueue one request; returns its id. ``prompt``: [T] int tokens.
+        ``origin``: the EP rank / edge server the request arrived at —
+        gating statistics are attributed to it (Algorithm 1's f_n(e)).
 
         Paged mode validates against the *total pool capacity* (a request
         merely larger than the legacy ``max_len`` is admissible — it just
@@ -241,6 +302,25 @@ class ServingRuntime:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        n_ep = (self.engine.rt.ep_spec.n_ep
+                if self.engine.rt.ep_spec is not None else 1)
+        if origin is not None and not 0 <= origin < n_ep:
+            # the gating-stats scatter drops out-of-range origins silently
+            # (mode="drop"); reject them here so the PlacementController
+            # never computes adoption decisions on invisibly missing traffic
+            raise ValueError(
+                f"origin {origin} out of range for {n_ep} EP rank(s)")
+        mode = "untagged" if origin is None else "tagged"
+        if self._origin_mode is None:
+            self._origin_mode = mode
+        elif self._origin_mode != mode:
+            # mixing would silently credit untagged rows to server 0 when
+            # batched with tagged ones (the positional fallback is
+            # all-or-nothing per jitted call) — reject at submit time, the
+            # same place out-of-range origins are rejected
+            raise ValueError(
+                f"cannot mix {mode} submit with a {self._origin_mode} "
+                "stream: pass origin= on every request or on none")
         if self.paged:
             npages = self._pages_needed(len(prompt), max_new_tokens)
             if npages > min(self.allocator.capacity_blocks, self.max_pages):
@@ -256,16 +336,34 @@ class ServingRuntime:
                 f"exceeds the pool's max_len={self.engine.max_len}")
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(GenRequest(rid, prompt, max_new_tokens))
+        self.queue.append(GenRequest(rid, prompt, max_new_tokens, origin))
         return rid
 
     @property
     def active(self) -> int:
         return sum(s is not None for s in self.slots)
 
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of admitted requests that reused cached prefix pages."""
+        n = len(self.finished) + self.active
+        return self.prefix_hits / n if n else 0.0
+
     # ------------------------------------------------------------------
     def _free_slot_ids(self) -> list[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
+
+    @staticmethod
+    def _origin_arg(origins):
+        """[B] int32 origin array for the jitted step fns, or None when no
+        request in the batch carries an explicit origin — None keeps the
+        MoE layer's positional attribution fallback (and its decode
+        replica routing) identical to an origin-unaware deployment.
+        ``submit`` rejects mixing, so a batch is all-tagged or all-None."""
+        origins = list(origins)
+        if all(o is None for o in origins):
+            return None
+        return jnp.asarray([o or 0 for o in origins], jnp.int32)
 
     def _admit(self) -> int:
         if self.paged:
@@ -277,25 +375,78 @@ class ServingRuntime:
 
     def _admit_paged(self) -> int:
         """Admit FIFO-head requests while a slot row and enough free blocks
-        exist. A head that does not fit *defers* (stays queued, no crash,
-        no overtaking) until retirements return blocks."""
+        exist. The prefix cache is consulted first: shared pages are
+        acquired (refcount + 1) instead of allocated, so a hit both skips
+        prefill and shrinks the fresh-block bill. A head that does not fit
+        — after evicting cold cache entries — *defers* (stays queued, no
+        crash, no overtaking) until retirements return blocks."""
         admitted = 0
         while self.queue and self._free_slot_ids():
             r = self.queue[0]
-            npages = self._pages_needed(len(r.prompt), r.max_new_tokens)
-            if not self.allocator.can_alloc(npages):
+            if not self._try_admit_one(r):
                 self.deferrals += 1
                 break
             self.queue.popleft()
-            i = self._free_slot_ids()[0]
-            pages = self.allocator.alloc(npages, r.rid)
-            self.page_table[i] = 0
-            self.page_table[i, :npages] = pages
-            self.slots[i] = _Slot(rid=r.rid, pos=0, last=-1, tokens=[],
-                                  need=r.max_new_tokens, pages=pages,
-                                  prompt=r.prompt, filled=0)
             admitted += 1
         return admitted
+
+    def _try_admit_one(self, r: GenRequest) -> bool:
+        T = len(r.prompt)
+        total = self._pages_needed(T, r.max_new_tokens)
+        m = (self.prefix_cache.lookup(r.prompt)
+             if self.prefix_cache is not None else PrefixMatch(0, []))
+        shared = list(m.blocks)
+        if m.tail_block is not None:
+            shared.append(m.tail_block)
+        # CoW: a full-prompt hit on a non-block-aligned prompt holds the
+        # cached, partially-filled tail block. Its first decode write
+        # (position T, only if a second token will be emitted) would land
+        # in that shared block — clone it first. Full shared blocks sit
+        # strictly before the write frontier and are never written.
+        cow = m.tail_block is not None and r.max_new_tokens >= 2
+        n_fresh = total - len(shared) + (1 if cow else 0)
+        # hold the matched pages before evicting: eviction only drops the
+        # *cache's* refs, so our shared pages survive it
+        if shared:
+            self.allocator.acquire(shared)
+        if not self.allocator.can_alloc(n_fresh) and self.prefix_cache:
+            self.prefix_cache.evict(n_fresh - self.allocator.n_free)
+        if not self.allocator.can_alloc(n_fresh):
+            if shared:
+                self.allocator.release(shared)
+            return False
+        fresh = self.allocator.alloc(n_fresh)
+        pages = list(m.blocks)
+        if cow:
+            dst = fresh.pop(0)
+            self.pool = self.engine.copy_block(self.pool, m.tail_block, dst)
+            self.allocator.release([m.tail_block])
+            self.cow_copies += 1
+            pages.append(dst)
+        elif m.tail_block is not None:
+            pages.append(m.tail_block)
+        pages.extend(fresh)
+        i = self._free_slot_ids()[0]
+        self.page_table[i] = 0
+        self.page_table[i, :len(pages)] = pages
+        slot = _Slot(rid=r.rid, pos=0, last=-1, tokens=[],
+                     need=r.max_new_tokens, origin=r.origin, pages=pages,
+                     prompt=r.prompt, filled=m.tokens)
+        self.slots[i] = slot
+        if m.tokens:
+            self.prefix_hits += 1
+            self.prefix_tokens_skipped += m.tokens
+        if m.full_hit:
+            # the whole prompt is cached: the first token is recomputed
+            # from the cached last-prompt-token logits (greedy argmax is
+            # deterministic, so this is bit-equal to running prefill)
+            first = int(np.argmax(m.logits))
+            slot.pos = T
+            slot.last = first
+            slot.tokens = [first]
+            slot.final_logits = m.logits
+            self._retire_if_done(i)
+        return True
 
     def _admit_dense(self) -> int:
         """Prefill waiting requests into free slots (batching same-length
@@ -313,14 +464,16 @@ class ServingRuntime:
             tokens = np.stack([r.prompt for r in group])           # [b, T]
             logits, cache, mstats = self.engine._prefill(
                 self.engine.params, jnp.asarray(tokens),
-                self.engine.placement)
+                self.engine.placement,
+                self._origin_arg(r.origin for r in group))
             self.engine._ingest(mstats)
             idx = jnp.asarray(free[:len(group)], jnp.int32)
             self.pool = self._write_rows(self.pool, cache, idx)
             first = np.asarray(jnp.argmax(logits, -1), np.int32)   # [b]
             for j, r in enumerate(group):
                 slot = _Slot(rid=r.rid, pos=T, last=int(first[j]),
-                             tokens=[int(first[j])], need=r.max_new_tokens)
+                             tokens=[int(first[j])], need=r.max_new_tokens,
+                             origin=r.origin)
                 self.slots[free[j]] = slot
                 self._retire_if_done(free[j])
             admitted += len(group)
@@ -332,7 +485,18 @@ class ServingRuntime:
             self.finished[slot.rid] = np.asarray(slot.tokens, np.int32)
             self.finished_at[slot.rid] = self.ticks
             if self.paged and slot.pages:
-                self.allocator.release(slot.pages, slot.rid)
+                if (self.prefix_cache is not None and slot.prompt is not None
+                        and slot.final_logits is not None):
+                    # donate the partially-filled tail block: the slot will
+                    # never write it again, and stale decode entries beyond
+                    # the prompt are overwritten by any sharer before its
+                    # validity mask can expose them
+                    T = len(slot.prompt)
+                    if T % self.block_size:
+                        self.prefix_cache.insert_tail(
+                            slot.prompt, slot.pages[T // self.block_size],
+                            slot.final_logits)
+                self.allocator.release(slot.pages)
                 self.page_table[i] = 0
             self.slots[i] = None
             return True
@@ -340,42 +504,83 @@ class ServingRuntime:
 
     # ------------------------------------------------------------------
     def _prefill_round(self) -> None:
-        """Advance every prefilling slot by up to ``chunks_per_tick``
-        block-aligned chunks (one B=1 jitted call per chunk). When a slot's
-        final chunk lands, its first token is sampled and it joins the
-        decode batch from the next round on."""
+        """Advance every prefilling slot by one block-aligned chunk per
+        batched jitted call, ``chunks_per_tick`` times. All prefilling
+        slots ride one fixed-width ``[max_slots, block_size]`` call (rows
+        of idle slots write the null block and are masked out of the
+        gating statistics). When a slot's final chunk lands, its first
+        token is sampled, its block-aligned prefix enters the radix cache,
+        and it joins the decode batch from the next round on."""
         bs = self.block_size
-        for i, slot in enumerate(self.slots):
-            if slot is None or not slot.prefilling:
-                continue
-            for _ in range(self.chunks_per_tick):
-                if not slot.prefilling:
-                    break
-                T = len(slot.prompt)
-                c0 = slot.filled
+        for _ in range(self.chunks_per_tick):
+            act = [i for i, s in enumerate(self.slots)
+                   if s is not None and s.prefilling]
+            if not act:
+                return
+            N = self.max_slots
+            toks = np.zeros((N, bs), np.int32)
+            mask = np.zeros((N, bs), np.float32)
+            offs = np.zeros((N,), np.int32)
+            lidx = np.zeros((N,), np.int32)
+            wb = np.zeros((N,), np.int32)      # idle rows -> null block 0
+            tbl = np.zeros((N, self.max_pages), np.int32)
+            meta: dict[int, tuple[bool, int]] = {}
+            for i in act:
+                s = self.slots[i]
+                T = len(s.prompt)
+                c0 = s.filled
                 valid = min(bs, T - c0)
-                chunk = np.zeros((1, bs), np.int32)
-                chunk[0, :valid] = slot.prompt[c0:c0 + valid]
-                mask = np.zeros((1, bs), np.float32)
-                mask[0, :valid] = 1.0
-                write_blocks = np.asarray([slot.pages[c0 // bs]], np.int32)
+                toks[i, :valid] = s.prompt[c0:c0 + valid]
+                mask[i, :valid] = 1.0
+                offs[i] = c0
+                wb[i] = s.pages[c0 // bs]
+                tbl[i] = self.page_table[i]
                 final = c0 + valid >= T
-                last_idx = (T - 1 - c0) if final else bs - 1
-                logits, self.pool, mstats = self._chunk_fn(
-                    self.engine.params, self.pool, jnp.asarray(chunk),
-                    jnp.asarray(self.page_table[i:i + 1]),
-                    jnp.asarray(write_blocks), jnp.int32(c0),
-                    jnp.int32(last_idx), self.engine.placement,
-                    jnp.asarray(mask))
-                self.engine._ingest(mstats)
-                slot.filled += valid
-                if final:
-                    first = int(np.asarray(jnp.argmax(logits, -1))[0])
-                    slot.pos = T
-                    slot.last = first
-                    slot.tokens = [first]
-                    self._retire_if_done(i)
-                    break
+                lidx[i] = (T - 1 - c0) if final else bs - 1
+                meta[i] = (final, valid)
+            org = self._origin_arg(
+                self.slots[i].origin if i in meta else None
+                for i in range(N))
+            logits, self.pool, mstats = self._chunk_fn(
+                self.engine.params, self.pool, jnp.asarray(toks),
+                jnp.asarray(tbl), jnp.asarray(wb), jnp.asarray(offs),
+                jnp.asarray(lidx), self.engine.placement,
+                jnp.asarray(mask), org)
+            self.engine._ingest(mstats)
+            self.prefill_calls += 1
+            self.chunks_executed += len(act)
+            lg = None
+            for i in act:
+                final, valid = meta[i]
+                s = self.slots[i]
+                s.filled += valid
+                if not final:
+                    continue
+                if lg is None:
+                    lg = np.asarray(logits)
+                row = lg[i]
+                first = int(np.argmax(row))
+                s.pos = len(s.prompt)
+                s.last = first
+                s.tokens = [first]
+                s.final_logits = row
+                self._cache_insert(i, row)
+                self._retire_if_done(i)
+
+    def _cache_insert(self, i: int, logits_row: np.ndarray) -> None:
+        """Register a freshly prefilled prompt's block-aligned prefix (and,
+        for block-aligned prompts, its last-token logits) in the radix
+        cache. The partial tail block is donated only at retirement — the
+        slot still decodes into it."""
+        if self.prefix_cache is None:
+            return
+        s = self.slots[i]
+        T = len(s.prompt)
+        nfull = T // self.block_size
+        if nfull:
+            self.prefix_cache.insert_prefix(s.prompt, s.pages[:nfull])
+        if T % self.block_size == 0:
+            self.prefix_cache.set_logits(s.prompt, logits_row)
 
     def _decode_round(self) -> None:
         """Advance every decoding slot one token in one shared decode
@@ -388,6 +593,9 @@ class ServingRuntime:
         cur = np.zeros((self.max_slots, 1), np.int32)
         pos = np.zeros((self.max_slots,), np.int32)
         mask = np.zeros((self.max_slots,), np.float32)
+        org = self._origin_arg(
+            self.slots[i].origin if i in act else None
+            for i in range(self.max_slots))
         for i in act:
             cur[i, 0] = self.slots[i].last
             pos[i] = self.slots[i].pos
@@ -403,11 +611,12 @@ class ServingRuntime:
             logits, self.pool, mstats = self._decode_fn(
                 self.engine.params, self.pool, jnp.asarray(cur),
                 jnp.asarray(pos), jnp.asarray(tbl), self.engine.placement,
-                jnp.asarray(mask))
+                jnp.asarray(mask), org)
         else:
             logits, self.pool, mstats = self.engine._decode(
                 self.engine.params, self.pool, jnp.asarray(cur),
-                jnp.asarray(pos), self.engine.placement, jnp.asarray(mask))
+                jnp.asarray(pos), self.engine.placement, jnp.asarray(mask),
+                org)
         self.engine._ingest(mstats)
         nxt = np.asarray(jnp.argmax(logits, -1), np.int32)         # [B]
         for i in act:
@@ -431,25 +640,51 @@ class ServingRuntime:
             self.migrations.append(dec.diag)
 
     # ------------------------------------------------------------------
+    def drop_prefix_cache(self) -> int:
+        """Evict every cached prefix and return the blocks recycled (tests
+        and memory-pressure escape hatch)."""
+        if self.prefix_cache is None:
+            return 0
+        return self.prefix_cache.clear()
+
     def check_invariants(self) -> None:
         """Paged-pool structural invariants (used by the test suite):
-        no block referenced by two live slots, page tables consistent with
-        the allocator's ownership map, null block never owned."""
+        refcounts exactly match the holders (slots + radix cache), the
+        null block is never allocated, no slot holds a page twice, and the
+        next block each live slot will *write* is exclusively owned
+        (refcount 1) — the no-CoW-aliasing rule."""
         if not self.paged:
             return
-        owners = self.allocator.owners()
-        assert 0 not in owners, "null block was allocated"
-        seen: dict[int, int] = {}
+        live = self.allocator.live()
+        assert 0 not in live, "null block was allocated"
+        held: collections.Counter = collections.Counter()
         for i, s in enumerate(self.slots):
             if s is None:
                 continue
+            assert len(set(s.pages)) == len(s.pages), \
+                f"slot {i} holds a duplicated page: {s.pages}"
             for b in s.pages:
-                assert b not in seen, \
-                    f"block {b} held by slots of rids {seen[b]} and {s.rid}"
-                seen[b] = s.rid
-                assert owners.get(b) == s.rid
-        assert len(owners) == len(seen), \
-            "allocator tracks blocks owned by no live slot"
+                held[b] += 1
+                assert b in live, f"slot {i} references freed block {b}"
+            if s.prefilling:
+                frontier = s.pages[s.filled // self.block_size]
+            elif len(s.tokens) < s.need:
+                frontier = s.pages[s.pos // self.block_size]
+            else:
+                continue
+            assert live.get(frontier) == 1, (
+                f"write frontier block {frontier} of rid {s.rid} is shared "
+                f"(refcount {live.get(frontier)}) — CoW rule violated")
+        cache_refs = (self.prefix_cache.block_refs()
+                      if self.prefix_cache is not None
+                      else collections.Counter())
+        for b, rc in live.items():
+            expect = held[b] + cache_refs[b]
+            assert rc == expect, (
+                f"block {b}: refcount {rc} != {held[b]} slot refs + "
+                f"{cache_refs[b]} cache refs")
+        assert set(held) | set(cache_refs) == set(live), \
+            "allocator tracks blocks held by no slot and no cache entry"
 
     def step(self) -> bool:
         """One scheduler tick: admit what fits, advance chunked prefills,

@@ -141,7 +141,6 @@ class TimeModel:
         """Single-server offloading: cached experts compute locally, misses
         load weights from host RAM (MoE-Infinity baseline)."""
         pf = self.profile
-        L = pf.num_layers
         comp = layer_counts * pf.expert_flops_per_token / self.speeds[server]
         miss = (layer_counts > 0) & ~cache_mask_n
         t_le = comp + miss * (pf.expert_bytes / self.io[server])

@@ -3,12 +3,9 @@ pluggable optimizer. The same ``train_step`` is what the multi-pod dry-run
 lowers for the ``train_4k`` input shape."""
 from __future__ import annotations
 
-import functools
 import time
-from typing import Any
 
 import jax
-import jax.numpy as jnp
 
 from repro.models import transformer as tr
 from repro.optim.adamw import Optimizer, clip_by_global_norm

@@ -2,7 +2,6 @@
 loss and prefill logits agree across layouts on a 2x4 fake mesh."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.models import moe as M

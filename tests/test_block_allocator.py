@@ -1,5 +1,8 @@
-"""Unit tests for the paged KV pool's free-list ``BlockAllocator``
-(pure Python — no JAX, no engine)."""
+"""Unit tests for the paged KV pool's reference-counted ``BlockAllocator``
+(pure Python — no JAX, no engine). Since the radix prefix cache landed,
+blocks are shared: ``alloc`` hands out fresh blocks at refcount 1,
+``acquire`` adds a reference (a sharing slot or the cache), and ``release``
+recycles a block only when the last reference drops."""
 import pytest
 
 from repro.serving.runtime import BlockAllocator
@@ -8,61 +11,75 @@ from repro.serving.runtime import BlockAllocator
 def test_null_block_reserved_and_capacity():
     a = BlockAllocator(9)
     assert a.capacity_blocks == 8
-    got = a.alloc(8, owner=0)
+    got = a.alloc(8)
     assert 0 not in got                       # block 0 never handed out
     assert sorted(got) == list(range(1, 9))
     assert a.n_free == 0
+    assert all(a.refcount(b) == 1 for b in got)
 
 
 def test_exhaustion_is_a_clean_refusal():
     """``can_alloc`` lets callers defer; a forced over-allocation raises
     without corrupting state."""
     a = BlockAllocator(5)
-    a.alloc(3, owner=0)
+    a.alloc(3)
     assert not a.can_alloc(2)
     with pytest.raises(RuntimeError):
-        a.alloc(2, owner=1)
+        a.alloc(2)
     assert a.n_free == 1                      # nothing leaked by the refusal
-    assert set(a.owners().values()) == {0}
-    got = a.alloc(1, owner=1)                 # what fits still allocates
+    got = a.alloc(1)                          # what fits still allocates
     assert len(got) == 1
 
 
 def test_freed_blocks_are_reused():
     a = BlockAllocator(4)
-    first = a.alloc(3, owner=0)
-    a.release(first, owner=0)
-    second = a.alloc(3, owner=1)
+    first = a.alloc(3)
+    assert a.release(first) == 3
+    second = a.alloc(3)
     assert set(second) == set(first)          # free-list reuse, no growth
-    assert all(o == 1 for o in a.owners().values())
 
 
-def test_no_block_owned_by_two_requests():
-    a = BlockAllocator(6)
-    x = a.alloc(2, owner=0)
-    y = a.alloc(2, owner=1)
-    assert not set(x) & set(y)
-    owners = a.owners()
-    assert {owners[b] for b in x} == {0}
-    assert {owners[b] for b in y} == {1}
+def test_refcounted_release_recycles_only_at_zero():
+    """A shared block survives its first release and is recycled — and
+    only then reusable — when the last holder lets go."""
+    a = BlockAllocator(4)
+    (b,) = a.alloc(1)
+    a.acquire([b])                            # second holder (e.g. cache)
+    a.acquire([b])                            # third holder
+    assert a.refcount(b) == 3
+    assert a.release([b]) == 0                # still held twice
+    assert a.release([b]) == 0
+    assert a.refcount(b) == 1
+    assert b not in a.alloc(2)                # live block never re-issued
+    assert a.release([b]) == 1                # last ref: recycled
+    assert a.refcount(b) == 0
+    assert b in a.alloc(1)
+
+
+def test_acquire_requires_live_block():
+    a = BlockAllocator(4)
+    with pytest.raises(RuntimeError):
+        a.acquire([2])                        # never allocated
+    x = a.alloc(1)
+    a.release(x)
+    with pytest.raises(RuntimeError):
+        a.acquire(x)                          # already recycled
 
 
 def test_release_returns_all_pages():
     a = BlockAllocator(6)
-    x = a.alloc(4, owner=7)
-    a.release(x, owner=7)
+    x = a.alloc(4)
+    a.release(x)
     assert a.n_free == a.capacity_blocks
-    assert a.owners() == {}
+    assert a.live() == {}
 
 
-def test_foreign_and_double_free_raise():
+def test_double_free_raises():
     a = BlockAllocator(6)
-    x = a.alloc(2, owner=0)
+    x = a.alloc(2)
+    a.release(x)
     with pytest.raises(RuntimeError):
-        a.release(x, owner=1)                 # foreign free
-    a.release(x, owner=0)
-    with pytest.raises(RuntimeError):
-        a.release(x, owner=0)                 # double free
+        a.release(x)                          # refcount already hit zero
     assert a.n_free == a.capacity_blocks
 
 

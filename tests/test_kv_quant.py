@@ -1,7 +1,6 @@
 """int8 KV-cache quantization (beyond-paper serving feature)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_config

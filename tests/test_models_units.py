@@ -8,7 +8,6 @@ from hypothesis import given, settings, strategies as st
 
 from repro.models.attention import chunked_attention, decode_attention
 from repro.models.ssm import linear_scan
-from repro.kernels.ref import flash_attention_ref
 
 
 def naive_attention(q, k, v, causal=True, window=0):

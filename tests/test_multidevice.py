@@ -6,7 +6,6 @@ import subprocess
 import sys
 from pathlib import Path
 
-import pytest
 
 SCRIPTS = Path(__file__).parent / "md_scripts"
 

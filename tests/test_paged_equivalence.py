@@ -148,8 +148,11 @@ def _run_equivalence(kv_quant: bool, scenario):
                            n_blocks=n_blocks)
     assert paged.paged
     out_p = _drive(paged, jobs)
+    # every non-cache-held page returned; dropping the radix cache
+    # releases the rest down to an empty allocator
+    paged.drop_prefix_cache()
     assert paged.allocator.n_free == paged.allocator.capacity_blocks
-    assert not paged.allocator.owners()          # all pages returned
+    assert not paged.allocator.live()            # all pages returned
 
     dense = ServingRuntime(eng, max_slots=3, paged=False)
     out_d = _drive(dense, jobs)
@@ -173,6 +176,140 @@ def test_paged_matches_sequential_and_dense_int8(scenario):
     """int8 KV-quant leg: paged == dense == sequential (the engine's
     serve-consistent fake-quant prefill makes all three bit-identical)."""
     _run_equivalence(True, scenario)
+
+
+# ---------------------------------------------------------------------------
+# Radix prefix cache: shared-prefix families stay token-identical
+# ---------------------------------------------------------------------------
+
+def _family_prompt(vocab: int, shared_len: int, fam: int, tail_len: int,
+                   member: int) -> np.ndarray:
+    """Member prompt = family-shared prefix + member-unique tail. Distinct
+    leading tokens per family keep different families disjoint."""
+    shared = TaskTokenSource("arith", vocab, seed=1000 + fam).sample(
+        1, shared_len)[0]
+    shared[0] = fam % vocab              # families never share block 1
+    if tail_len == 0:
+        return shared
+    tail = TaskTokenSource("arith", vocab,
+                           seed=2000 + 17 * fam + member).sample(
+        1, tail_len)[0]
+    return np.concatenate([shared, tail])
+
+
+@st.composite
+def prefix_family_stream(draw):
+    """Streams dominated by shared-prefix prompt families (the edge
+    workload the radix cache targets), incl. exact-duplicate prompts
+    (tail_len 0 duplicates the family prefix prompt)."""
+    jobs = []
+    for fam in range(draw(st.integers(1, 2))):
+        shared_len = draw(st.sampled_from((8, 12, 16, 24)))
+        for member in range(draw(st.integers(2, 3))):
+            jobs.append(dict(
+                fam=fam, shared_len=shared_len,
+                tail_len=draw(st.sampled_from((0, 3, 5, 8))),
+                member=member, steps=draw(st.integers(1, 6)),
+                arrival=draw(st.integers(0, 6)),
+            ))
+    n_blocks = draw(st.sampled_from([9, 33]))    # tight pool forces evictions
+    return jobs, n_blocks
+
+
+def _run_prefix_equivalence(kv_quant: bool, scenario):
+    eng, src, refs = _engine(kv_quant)
+    specs, n_blocks = scenario
+    jobs = []
+    for sp in specs:
+        prompt = _family_prompt(eng.rt.cfg.vocab_size, sp["shared_len"],
+                                sp["fam"], sp["tail_len"], sp["member"])
+        jobs.append(dict(prompt=prompt, steps=sp["steps"],
+                         arrival=sp["arrival"]))
+    cap_blocks = n_blocks - 1
+    need = [-(-(len(j["prompt"]) + j["steps"] - 1) // BLOCK_SIZE)
+            for j in jobs]
+    jobs = [j for j, np_ in zip(jobs, need) if np_ <= cap_blocks]
+    if not jobs:
+        return
+    paged = ServingRuntime(eng, max_slots=3, block_size=BLOCK_SIZE,
+                           n_blocks=n_blocks)
+    assert paged.prefix_cache is not None
+    out_p = _drive(paged, jobs)
+    paged.drop_prefix_cache()
+    assert paged.allocator.n_free == paged.allocator.capacity_blocks
+    for j in jobs:
+        ref = _reference(eng, refs, j["prompt"], j["steps"])
+        np.testing.assert_array_equal(out_p[id(j)], ref)
+
+
+@settings(max_examples=15, deadline=None)
+@given(prefix_family_stream())
+def test_prefix_cache_matches_sequential_fp(scenario):
+    """fp32 KV leg: shared-prefix streams served through the radix cache
+    (partial hits, full hits + CoW, evictions under tight pools) are
+    token-identical to sequential ``generate()``."""
+    _run_prefix_equivalence(False, scenario)
+
+
+@settings(max_examples=15, deadline=None)
+@given(prefix_family_stream())
+def test_prefix_cache_matches_sequential_int8(scenario):
+    """int8 KV-quant leg of the shared-prefix property: cached pages store
+    quantized k/v, and sharers read back exactly what the original request
+    wrote — bit-identical to the cold path."""
+    _run_prefix_equivalence(True, scenario)
+
+
+def test_disjoint_stream_unaffected_by_prefix_cache():
+    """A stream with no shared block-aligned prefixes behaves *identically*
+    with the cache on and off: same tokens, same chunk compute, zero hits,
+    zero CoW copies."""
+    eng, src, refs = _engine(False)
+    vocab = eng.rt.cfg.vocab_size
+    jobs = []
+    for k in range(5):
+        prompt = TaskTokenSource("arith", vocab, seed=50 + k).sample(
+            1, 12 + 4 * (k % 3))[0]
+        prompt[0] = k % vocab                    # distinct first block
+        jobs.append(dict(prompt=prompt, steps=2 + k % 4, arrival=k // 2))
+    outs, stats = [], []
+    for cache_on in (True, False):
+        rtm = ServingRuntime(eng, max_slots=3, block_size=BLOCK_SIZE,
+                             n_blocks=17, prefix_cache=cache_on)
+        outs.append(_drive(rtm, jobs))
+        stats.append((rtm.chunks_executed, rtm.prefill_calls, rtm.ticks,
+                      rtm.deferrals))
+        if cache_on:
+            assert rtm.prefix_hits == 0
+            assert rtm.prefix_tokens_skipped == 0
+            assert rtm.cow_copies == 0
+        else:
+            assert rtm.prefix_cache is None
+    assert stats[0] == stats[1]                  # identical schedule/compute
+    for j in jobs:
+        np.testing.assert_array_equal(outs[0][id(j)], outs[1][id(j)])
+
+
+def test_identical_prompts_skip_prefill_entirely():
+    """Second occurrence of an identical prompt is a full hit: zero chunks
+    executed for it, first token recomputed from the cached logits, CoW
+    clone taken for its decode writes."""
+    eng, src, refs = _engine(False)
+    prompt = src.sample(1, 20)[0]                # 2 full blocks + 4-token tail
+    ref = _reference(eng, refs, prompt, 4)
+    rtm = ServingRuntime(eng, max_slots=2, block_size=BLOCK_SIZE,
+                         n_blocks=17)
+    r0 = rtm.submit(prompt, 4)
+    rtm.run()
+    chunks_cold = rtm.chunks_executed
+    r1 = rtm.submit(prompt, 4)
+    out = rtm.run()
+    assert rtm.chunks_executed == chunks_cold    # no prefill for the rerun
+    assert rtm.prefix_hits == 1
+    assert rtm.prefix_tokens_skipped == len(prompt)
+    assert rtm.cow_copies == 1                   # shared tail was cloned
+    np.testing.assert_array_equal(out[r0], ref)
+    np.testing.assert_array_equal(out[r1], ref)
 
 
 # ---------------------------------------------------------------------------
@@ -230,24 +367,54 @@ def test_exhaustion_defers_admission_then_serves():
 def test_freed_pages_are_reused():
     eng, src, refs = _engine(False)
     prompt = src.sample(1, 12)[0]
-    rtm = ServingRuntime(eng, max_slots=1, block_size=BLOCK_SIZE, n_blocks=5)
+    rtm = ServingRuntime(eng, max_slots=1, block_size=BLOCK_SIZE, n_blocks=5,
+                         prefix_cache=False)
     pages_by_rid: dict = {}
     rtm.submit(prompt, 2)
     rtm.submit(prompt, 2)
     while rtm.queue or rtm.active:
         rtm.step()
-        for b, rid in rtm.allocator.owners().items():
-            pages_by_rid.setdefault(rid, set()).add(b)
-    # with a 1-slot runtime the requests run strictly in sequence; the
-    # second's pages must come out of the first's freed set
+        for s in rtm.slots:
+            if s is not None:
+                pages_by_rid.setdefault(s.rid, set()).update(s.pages)
+    # with a 1-slot cache-less runtime the requests run strictly in
+    # sequence; the second's pages must come out of the first's freed set
     assert set(rtm.finished) == {0, 1}
     assert pages_by_rid[1] <= pages_by_rid[0]
     assert rtm.allocator.n_free == rtm.allocator.capacity_blocks
 
 
+def test_shared_prefix_pages_are_not_duplicated():
+    """With the cache on, a same-prefix successor *shares* the cached
+    blocks (refcount) instead of re-allocating them — the memory half of
+    the prefix-cache win."""
+    eng, src, refs = _engine(False)
+    shared = src.sample(1, 16)[0]                 # 2 full blocks
+    p_a = np.concatenate([shared, src.sample(1, 5)[0]])
+    p_b = np.concatenate([shared, src.sample(1, 7)[0]])
+    rtm = ServingRuntime(eng, max_slots=1, block_size=BLOCK_SIZE,
+                         n_blocks=17)
+    rtm.submit(p_a, 2)
+    rtm.run()
+    pages_a = set()
+    rtm.submit(p_b, 2)
+    while rtm.queue or rtm.active:
+        rtm.step()
+        rtm.check_invariants()
+        for s in rtm.slots:
+            if s is not None:
+                pages_a.update(s.pages[:2])       # its two prefix blocks
+    assert rtm.prefix_hits == 1
+    assert rtm.prefix_tokens_skipped == 16
+    # the successor's prefix blocks are exactly the cached (still-held) ones
+    cache_blocks = set(rtm.prefix_cache.block_refs())
+    assert pages_a <= cache_blocks
+
+
 def test_no_page_aliasing_and_full_return_under_churn():
-    """Across a churning stream, no block is ever referenced by two live
-    slots and every retirement returns all its pages."""
+    """Across a churning stream with prefix sharing, refcounts always match
+    the holders, no slot ever writes a shared block, and dropping the cache
+    at the end returns every page."""
     eng, src, refs = _engine(False)
     rtm = ServingRuntime(eng, max_slots=3, block_size=BLOCK_SIZE,
                          n_blocks=9)
@@ -258,8 +425,38 @@ def test_no_page_aliasing_and_full_return_under_churn():
     while rtm.queue or rtm.active:
         rtm.step()
         rtm.check_invariants()                   # asserts no aliasing
-    assert not rtm.allocator.owners()
+    rtm.drop_prefix_cache()
+    assert not rtm.allocator.live()
     assert rtm.allocator.n_free == rtm.allocator.capacity_blocks
+
+
+def test_origin_attribution_and_validation():
+    """Requests tagged with ``submit(origin=...)`` keep their outputs
+    identical to untagged serving (origin only relabels statistics), and
+    out-of-range origins are rejected up front — the gating-stats scatter
+    would otherwise drop them silently."""
+    import pytest
+    eng, src, refs = _ep_engine(False)
+    prompt = src.sample(1, 12)[0]
+    ref = _reference(eng, refs, prompt, 3)
+    rtm = ServingRuntime(eng, max_slots=2, block_size=BLOCK_SIZE,
+                         n_blocks=9, prefix_cache=False)
+    before = eng.stats.counts.sum()
+    rid = rtm.submit(prompt, 3, origin=0)         # explicit origin leg
+    out = rtm.run()
+    np.testing.assert_array_equal(out[rid], ref)
+    assert eng.stats.counts.sum() > before        # stats did flow
+    with pytest.raises(ValueError):
+        rtm.submit(prompt, 3, origin=1)           # n_ep == 1: rank 1 invalid
+    with pytest.raises(ValueError):
+        rtm.submit(prompt, 3, origin=-1)
+    with pytest.raises(ValueError):
+        rtm.submit(prompt, 3)                     # tagged stream: no mixing
+    untagged = ServingRuntime(eng, max_slots=2, block_size=BLOCK_SIZE,
+                              n_blocks=9, prefix_cache=False)
+    untagged.submit(prompt, 3)
+    with pytest.raises(ValueError):
+        untagged.submit(prompt, 3, origin=0)      # and the reverse
 
 
 def test_submit_validates_against_pool_capacity():

@@ -1,0 +1,261 @@
+"""Property-based invariants for the refcounted ``BlockAllocator`` and the
+``RadixPrefixCache`` (pure Python — no JAX, no engine), plus a runtime-level
+no-CoW-aliasing property on a live serving stream.
+
+Runs under real ``hypothesis`` when installed, else the deterministic
+fallback in ``tests/_hypothesis_fallback.py`` (see conftest.py) — both CI
+legs execute the same properties.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.prefix_cache import RadixPrefixCache
+from repro.serving.runtime import BlockAllocator
+
+BS = 4          # cache block size for the pure-Python properties
+VOCAB = 5       # tiny alphabet maximises accidental prefix collisions
+
+
+# ---------------------------------------------------------------------------
+# BlockAllocator: model-based refcount invariants
+# ---------------------------------------------------------------------------
+
+@st.composite
+def allocator_ops(draw):
+    """A random alloc/acquire/release schedule (encoded with plain integers
+    so it runs under the hypothesis fallback)."""
+    ops = []
+    for _ in range(draw(st.integers(5, 40))):
+        ops.append((draw(st.integers(0, 2)),      # 0 alloc / 1 acquire / 2 rel
+                    draw(st.integers(1, 3)),      # alloc size
+                    draw(st.integers(0, 10 ** 6))))  # victim selector
+    return draw(st.integers(4, 12)), ops          # n_blocks, schedule
+
+
+@settings(max_examples=40, deadline=None)
+@given(allocator_ops())
+def test_allocator_refcount_invariants(scenario):
+    """Against a reference refcount model: a live block is never re-issued,
+    a block is recycled exactly when its last reference drops, the free
+    count always complements the live set, and the null block never moves."""
+    n_blocks, ops = scenario
+    a = BlockAllocator(n_blocks)
+    model: dict[int, int] = {}                    # block -> expected rc
+    for kind, size, sel in ops:
+        live = sorted(model)
+        if kind == 0:
+            if a.can_alloc(size):
+                got = a.alloc(size)
+                assert len(set(got)) == size
+                assert not set(got) & set(live)   # no live block re-issued
+                assert 0 not in got
+                for b in got:
+                    model[b] = 1
+        elif kind == 1 and live:
+            b = live[sel % len(live)]
+            a.acquire([b])
+            model[b] += 1
+        elif kind == 2 and live:
+            b = live[sel % len(live)]
+            freed = a.release([b])
+            model[b] -= 1
+            if model[b] == 0:
+                del model[b]
+                assert freed == 1                 # recycled at rc 0 ...
+            else:
+                assert freed == 0                 # ... and only at rc 0
+        assert a.live() == model
+        assert a.n_free == a.capacity_blocks - len(model)
+
+
+# ---------------------------------------------------------------------------
+# RadixPrefixCache: lookup == longest block-aligned common prefix
+# ---------------------------------------------------------------------------
+
+def _brute_force_match(query: np.ndarray, inserted: list) -> int:
+    """Reference: longest block-aligned common prefix (in tokens) between
+    ``query`` and any *cached span* — capped one block short of the whole
+    query when no full-prompt entry exists (the final token must be
+    recomputed for its logits)."""
+    best = 0
+    for p, nblocks in inserted:
+        span = min(len(query), nblocks * BS)
+        m = 0
+        while m + BS <= span and np.array_equal(query[m:m + BS],
+                                                p[m:m + BS]):
+            m += BS
+        best = max(best, m)
+    if best == len(query):
+        best -= BS
+    return best
+
+
+@st.composite
+def trie_scenario(draw):
+    """Random prompt sets over a tiny alphabet (so shared prefixes happen
+    by collision, not construction) plus query prompts."""
+    def prompt(n):
+        return [draw(st.integers(0, VOCAB - 1)) for _ in range(n)]
+    inserted = [prompt(draw(st.integers(1, 5)) * BS)
+                for _ in range(draw(st.integers(1, 6)))]
+    queries = [prompt(draw(st.integers(1, 6)) * BS +
+                      draw(st.sampled_from((0, 1, 3))))
+               for _ in range(draw(st.integers(1, 4)))]
+    return inserted, queries
+
+
+@settings(max_examples=40, deadline=None)
+@given(trie_scenario())
+def test_radix_lookup_is_longest_block_aligned_prefix(scenario):
+    inserted, queries = scenario
+    alloc = BlockAllocator(256)
+    cache = RadixPrefixCache(BS, alloc)
+    ref: list = []
+    for p in inserted:
+        p = np.asarray(p, np.int32)
+        nblocks = len(p) // BS
+        blocks = alloc.alloc(nblocks)
+        cache.insert_prefix(p, blocks)
+        alloc.release(blocks)                 # cache refs keep them live
+        ref.append((p, nblocks))
+    for q in queries:
+        q = np.asarray(q, np.int32)
+        m = cache.lookup(q)
+        assert m.tokens == _brute_force_match(q, ref)
+        assert len(m.blocks) * BS == m.tokens
+        assert m.logits is None and m.tail_block is None
+        # the returned run must be the cached blocks of a witness prompt
+        if m.tokens:
+            witness = [blocks for p, nb in ref
+                       if nb * BS >= m.tokens
+                       and np.array_equal(p[:m.tokens], q[:m.tokens])]
+            assert witness
+    # identical nodes are deduplicated: refcounts are one per trie node
+    for b, rc in alloc.live().items():
+        assert rc == 1
+    assert sum(cache.block_refs().values()) == len(alloc.live())
+
+
+def test_full_prompt_hits_tail_and_logits():
+    """Deterministic full-hit semantics: a block-aligned prompt hits via
+    node logits; a ragged prompt needs its tail entry; lookup without
+    either backs off one block so the last token is recomputed."""
+    alloc = BlockAllocator(64)
+    cache = RadixPrefixCache(BS, alloc)
+    aligned = np.arange(2 * BS, dtype=np.int32)
+    blocks = alloc.alloc(2)
+    cache.insert_prefix(aligned, blocks)
+    m = cache.lookup(aligned)
+    assert m.tokens == BS and len(m.blocks) == 1      # back-off: no logits
+    cache.set_logits(aligned, np.ones(7))
+    m = cache.lookup(aligned)
+    assert m.full_hit and m.tokens == 2 * BS and m.tail_block is None
+
+    ragged = np.concatenate([aligned, np.asarray([9, 9], np.int32)])
+    m = cache.lookup(ragged)
+    assert not m.full_hit and m.tokens == 2 * BS      # partial: shared run
+    (tail,) = alloc.alloc(1)
+    assert cache.insert_tail(ragged, tail, np.zeros(7))
+    assert not cache.insert_tail(ragged, tail, np.zeros(7))   # dedup
+    m = cache.lookup(ragged)
+    assert m.full_hit and m.tokens == len(ragged) and m.tail_block == tail
+
+
+def test_eviction_never_frees_or_drops_a_shared_block():
+    """Eviction skips entries whose block a live request still shares —
+    no memory would be freed and the reuse would be destroyed (the
+    anti-thrashing rule). Once the last sharer retires, the entry becomes
+    evictable and recycles its block."""
+    alloc = BlockAllocator(8)
+    cache = RadixPrefixCache(BS, alloc)
+    p = np.arange(2 * BS, dtype=np.int32)
+    blocks = alloc.alloc(2)
+    cache.insert_prefix(p, blocks)          # rc 2 each: "slot" + cache
+    assert cache.evict(2) == 0              # shared: skipped entirely
+    assert cache.lookup(p).blocks == [blocks[0]]   # entries survived
+    assert alloc.refcount(blocks[0]) == 2   # slot + cache (lookup adds none)
+    assert alloc.release(blocks) == 0       # "slot" retires; cache holds
+    assert cache.evict(2) == 2              # now evictable -> recycled
+    assert alloc.n_free == alloc.capacity_blocks
+    # clear() force-drops even shared entries (shutdown path)
+    blocks2 = alloc.alloc(2)
+    p2 = np.arange(2 * BS, dtype=np.int32) + 1
+    cache.insert_prefix(p2, blocks2)
+    assert cache.clear() == 0               # refs dropped; "slot" still holds
+    assert alloc.release(blocks2) == 2
+    assert alloc.n_free == alloc.capacity_blocks
+
+
+def test_lru_eviction_order_and_leaf_only():
+    """Eviction is LRU over leaves: a recently-looked-up branch outlives a
+    cold one, and an inner node is never evicted before its extension."""
+    alloc = BlockAllocator(16)
+    cache = RadixPrefixCache(BS, alloc)
+    cold = np.asarray([1] * BS, np.int32)
+    hot_long = np.asarray([2] * (2 * BS), np.int32)
+    for p, n in ((cold, 1), (hot_long, 2)):
+        blocks = alloc.alloc(n)
+        cache.insert_prefix(p, blocks)
+        alloc.release(blocks)
+    cache.lookup(hot_long)                  # refresh both hot nodes
+    assert cache.evict(1) == 1              # evicts the cold leaf
+    m = cache.lookup(hot_long)
+    assert m.tokens >= BS                   # hot chain survived
+    assert cache.lookup(cold).tokens == 0
+    # the deep leaf goes before its parent
+    assert cache.evict(1) == 1
+    assert cache.lookup(hot_long).tokens == BS
+    cache.clear()
+    assert alloc.n_free == alloc.capacity_blocks
+
+
+# ---------------------------------------------------------------------------
+# Runtime-level property: refcount exactness + no CoW aliasing on a stream
+# ---------------------------------------------------------------------------
+
+@st.composite
+def runtime_stream(draw):
+    jobs = []
+    for k in range(draw(st.integers(2, 5))):
+        jobs.append((draw(st.integers(0, 1)),          # family id
+                     draw(st.sampled_from((0, 2, 6))),  # unique tail length
+                     draw(st.integers(1, 4)),           # steps
+                     draw(st.integers(0, 4))))          # arrival tick
+    return jobs, draw(st.sampled_from([7, 17]))
+
+
+@settings(max_examples=8, deadline=None)
+@given(runtime_stream())
+def test_runtime_refcounts_and_cow_on_live_stream(scenario):
+    """Drive the real paged runtime over shared-prefix streams and assert
+    the structural invariants every tick (``check_invariants``: refcounts
+    == slot holds + cache refs, write frontiers exclusively owned — i.e.
+    no copy-on-write aliasing), ending with a fully returned pool."""
+    from test_paged_equivalence import _engine       # lazy: heavy import
+
+    eng, _, _ = _engine(False)                       # shared cached engine
+    from repro.serving.runtime import ServingRuntime
+    jobs, n_blocks = scenario
+    rtm = ServingRuntime(eng, max_slots=2, block_size=8, n_blocks=n_blocks)
+    vocab = eng.rt.cfg.vocab_size
+    rng = np.random.default_rng(7)
+    pending = []
+    for fam, tail, steps, arrival in jobs:
+        base = (np.arange(12, dtype=np.int32) + fam) % vocab
+        prompt = (base if tail == 0 else np.concatenate(
+            [base, rng.integers(0, vocab, tail).astype(np.int32)]))
+        npages = -(-(len(prompt) + steps - 1) // 8)
+        if npages <= min(n_blocks - 1, rtm.max_pages):
+            pending.append((arrival, prompt, steps))
+    pending.sort(key=lambda x: x[0])
+    t = 0
+    while pending or rtm.queue or rtm.active:
+        while pending and pending[0][0] <= t:
+            _, prompt, steps = pending.pop(0)
+            rtm.submit(prompt, steps)
+        rtm.step()
+        rtm.check_invariants()
+        t += 1
+    rtm.drop_prefix_cache()
+    assert not rtm.allocator.live()
+    assert rtm.allocator.n_free == rtm.allocator.capacity_blocks
