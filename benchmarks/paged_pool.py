@@ -26,6 +26,7 @@ from repro.data.pipeline import TaskTokenSource
 from repro.launch.mesh import make_test_mesh
 from repro.models import moe as M
 from repro.models import transformer as tr
+from repro.serving.api import Request
 from repro.serving.engine import ServingEngine
 from repro.serving.runtime import ServingRuntime
 
@@ -56,7 +57,8 @@ def build_engine():
 
 
 def serve(rtm, prompts, steps):
-    rids = [rtm.submit(p, steps) for p in prompts]
+    rids = [rtm.enqueue(Request(prompt=p, max_new_tokens=steps)).rid
+            for p in prompts]
     rtm.run()
     lat = [rtm.finished_at[r] for r in rids]      # completion tick per req
     return {"peak_admitted": rtm.max_admitted,

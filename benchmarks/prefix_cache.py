@@ -14,7 +14,11 @@ on a tight pool.
 Prints ``prefix_cache,<case>,<value>`` CSV lines and asserts the >= 2x
 prefill-compute reduction target. ``smoke()`` returns the same measurement
 on a smaller stream as the ``BENCH_serving.json`` document for the CI
-``bench-smoke`` job (see ``benchmarks/schema.py`` for the contract). The
+``bench-smoke`` job (see ``benchmarks/schema.py`` for the contract); since
+``bench-serving/v2`` the document also carries the per-server
+admitted/locality/routing metrics of an ``EdgeCluster`` run
+(``cluster_smoke``: 3 paper-testbed servers, typed API request stream,
+DanceMoE controller). The
 CPU test config (mixtral-8x7b reduced, dense MoE impl — identical
 attention/paging code paths, no shard_map overhead) runs anywhere tier-1
 runs.
@@ -31,8 +35,11 @@ from repro.configs import get_config
 from repro.data.pipeline import TaskTokenSource
 from repro.launch.mesh import make_test_mesh
 from repro.models import transformer as tr
+from repro.serving.api import Request
 from repro.serving.engine import ServingEngine
 from repro.serving.runtime import ServingRuntime
+
+CLUSTER_REQUESTS = 30
 
 MAX_LEN = 64
 BLOCK_SIZE = 8
@@ -76,7 +83,8 @@ def serve(rtm: ServingRuntime, prompts, steps: int) -> dict:
     tick = 0
     while queue or rtm.queue or rtm.active:
         for p in queue[:ARRIVALS_PER_TICK]:
-            submitted[rtm.submit(p, steps)] = tick
+            h = rtm.enqueue(Request(prompt=p, max_new_tokens=steps))
+            submitted[h.rid] = tick
         queue = queue[ARRIVALS_PER_TICK:]
         t0 = time.perf_counter()
         rtm.step()
@@ -110,14 +118,53 @@ def measure(eng, n_requests: int, n_blocks: int, max_slots: int):
     return out
 
 
+def cluster_smoke(n_requests: int = CLUSTER_REQUESTS) -> dict:
+    """The ``metrics.cluster`` section of ``bench-serving/v2``: per-server
+    admitted/locality/routing metrics emitted by a 3-server ``EdgeCluster``
+    (sim backend — the numpy time model keeps the CI gate fast) serving a
+    typed API request stream under a DanceMoE controller."""
+    from repro.core.policies import (ClusterView, PlacementController,
+                                     get_policy)
+    from repro.data.traces import BIGBENCH_TASKS
+    from repro.serving.cluster import (DEEPSEEK_V2_LITE_PROFILE, EdgeCluster,
+                                       paper_testbed)
+
+    pf = DEEPSEEK_V2_LITE_PROFILE
+    spec = paper_testbed(mem_fraction=0.3)
+    ctrl = PlacementController(
+        policy=get_policy("dancemoe"), cost=None,
+        cluster=ClusterView.from_cluster(spec, pf), interval=30.0)
+    ec = EdgeCluster("sim", spec=spec, profile=pf, controller=ctrl, seed=0)
+    rng = np.random.default_rng(0)
+    t = 0.0
+    for k in range(n_requests):
+        t += float(rng.exponential(5.0))
+        origin = k % spec.n
+        ec.submit(Request(
+            prompt=np.zeros(max(int(rng.normal(128, 32)), 8), np.int32),
+            max_new_tokens=20, origin=origin, arrival=t,
+            task=BIGBENCH_TASKS[origin]))
+    ec.run()
+    m = ec.metrics()
+    return {
+        "n_servers": m["n_servers"],
+        # admitted is per *origin* (submitted), routed is per *serving*
+        # server — independent signals once the router redirects traffic
+        "per_server_admitted": m["per_server"]["submitted"],
+        "per_server_routed": m["per_server"]["served"],
+        "per_server_local_ratio": m["per_server"]["local_ratio"],
+        "redirected_total": m["redirected_total"],
+    }
+
+
 def to_bench_doc(r: dict, *, mode: str, n_requests: int,
-                 n_blocks: int) -> dict:
+                 n_blocks: int, cluster: dict) -> dict:
     """Shape the measurement as the ``BENCH_serving.json`` document (see
     ``benchmarks.schema`` for the required fields)."""
     chunk_ratio = r["nocache"]["chunks_executed"] / max(
         r["cache"]["chunks_executed"], 1)
     return {
-        "schema": "bench-serving/v1",
+        "schema": "bench-serving/v2",
         "mode": mode,
         "config": {
             "arch": "mixtral-8x7b(reduced)",
@@ -153,6 +200,7 @@ def to_bench_doc(r: dict, *, mode: str, n_requests: int,
                 "cache": r["cache"]["mean_latency_ticks"],
                 "nocache": r["nocache"]["mean_latency_ticks"],
             },
+            "cluster": cluster,
         },
     }
 
@@ -164,7 +212,7 @@ def smoke() -> dict:
     n_requests, n_blocks, max_slots = 10, 15, 8
     r = measure(eng, n_requests, n_blocks, max_slots)
     return to_bench_doc(r, mode="smoke", n_requests=n_requests,
-                        n_blocks=n_blocks)
+                        n_blocks=n_blocks, cluster=cluster_smoke())
 
 
 def main(csv: bool = False):
@@ -172,7 +220,7 @@ def main(csv: bool = False):
     n_requests, n_blocks, max_slots = 20, 15, 8
     r = measure(eng, n_requests, n_blocks, max_slots)
     doc = to_bench_doc(r, mode="full", n_requests=n_requests,
-                       n_blocks=n_blocks)
+                       n_blocks=n_blocks, cluster=cluster_smoke())
     m = doc["metrics"]
     ratio = m["prefill_chunk_reduction"]
     print(f"# {int(SHARED_FRAC * 100)}%-shared-prefix stream, "

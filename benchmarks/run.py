@@ -36,6 +36,11 @@ def smoke(out_path: str) -> None:
           f"admitted {m['admitted_concurrency']['nocache']} -> "
           f"{m['admitted_concurrency']['cache']} "
           f"decode_round={m['decode_round_latency_s']['mean'] * 1e3:.1f}ms")
+    c = m["cluster"]
+    print(f"cluster[v2]: {int(c['n_servers'])} servers "
+          f"admitted={c['per_server_admitted']} "
+          f"local_ratio={c['per_server_local_ratio']} "
+          f"redirected={int(c['redirected_total'])}")
 
 
 def main() -> None:

@@ -8,9 +8,11 @@ perf history. Validation is dependency-free (no jsonschema install on the
 runner)."""
 from __future__ import annotations
 
-SCHEMA_NAME = "bench-serving/v1"
+SCHEMA_NAME = "bench-serving/v2"
 
-# metric key -> ("scalar" | "pair" | "stats") shape requirement
+# metric key -> ("scalar" | "pair" | "stats") shape requirement.
+# v2 extends v1 (same keys, same shapes) with the EdgeCluster section
+# below — extend, don't fork, when adding serving metrics.
 _REQUIRED_METRICS = {
     "admitted_concurrency": "pair",        # {"cache": n, "nocache": n}
     "prefill_chunks_executed": "pair",
@@ -21,6 +23,16 @@ _REQUIRED_METRICS = {
     "deferrals": "pair",
     "decode_round_latency_s": "stats",     # {"mean": s, "p95": s}
     "mean_latency_ticks": "pair",
+}
+
+# v2: metrics.cluster — per-server serving metrics emitted by an
+# EdgeCluster run ("list" = per-server list of n_servers numbers)
+_REQUIRED_CLUSTER = {
+    "n_servers": "scalar",
+    "per_server_admitted": "list",         # requests admitted per origin
+    "per_server_routed": "list",           # requests routed to each server
+    "per_server_local_ratio": "list",      # local-compute ratio in [0, 1]
+    "redirected_total": "scalar",          # requests served off-origin
 }
 
 
@@ -68,4 +80,34 @@ def validate_bench_serving(doc) -> dict:
     if metrics["admitted_concurrency"]["cache"] < 1 \
             or metrics["prefill_chunks_executed"]["nocache"] < 1:
         raise BenchSchemaError("metrics: empty run (nothing was served)")
+
+    # -- v2: the EdgeCluster per-server section ---------------------------
+    cluster = metrics.get("cluster")
+    if not isinstance(cluster, dict) or not cluster:
+        raise BenchSchemaError("metrics.cluster: missing or empty (v2)")
+    n = _num(cluster, "metrics.cluster", "n_servers")
+    if n < 1 or n != int(n):
+        raise BenchSchemaError(f"metrics.cluster.n_servers: invalid {n!r}")
+    for key, kind in _REQUIRED_CLUSTER.items():
+        if key not in cluster:
+            raise BenchSchemaError(f"metrics.cluster.{key}: missing")
+        if kind == "scalar":
+            _num(cluster, "metrics.cluster", key)
+            continue
+        v = cluster[key]
+        if not isinstance(v, list) or len(v) != int(n):
+            raise BenchSchemaError(
+                f"metrics.cluster.{key}: expected a list of {int(n)} "
+                f"numbers, got {v!r}")
+        for i, x in enumerate(v):
+            if not isinstance(x, (int, float)) or isinstance(x, bool) \
+                    or x < 0:
+                raise BenchSchemaError(
+                    f"metrics.cluster.{key}[{i}]: invalid {x!r}")
+    if any(x > 1.0 for x in cluster["per_server_local_ratio"]):
+        raise BenchSchemaError(
+            "metrics.cluster.per_server_local_ratio: ratio > 1")
+    if sum(cluster["per_server_admitted"]) < 1:
+        raise BenchSchemaError(
+            "metrics.cluster: empty cluster run (nothing was served)")
     return doc

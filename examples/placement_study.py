@@ -15,8 +15,8 @@ from repro.core.placement import (PlacementPlan, allocate_expert_counts,
 from repro.core.policies import ClusterView, get_policy
 from repro.core.stats import entropy
 from repro.data.traces import BIGBENCH_TASKS, poisson_workload
-from repro.serving.cluster import DEEPSEEK_V2_LITE_PROFILE, paper_testbed
-from repro.serving.simulator import EdgeSimulator
+from repro.serving.cluster import (DEEPSEEK_V2_LITE_PROFILE, EdgeCluster,
+                                   paper_testbed, requests_from_workload)
 
 
 def flat_counts_plan(freqs, capacity, slots):
@@ -71,11 +71,19 @@ def main():
         "w/o activation awareness": random_assignment_plan(freqs, cap,
                                                            slots),
     }
+    # every variant rides the serving API v1 sim backend: one typed
+    # request stream, one EdgeCluster per candidate placement
+    reqs = requests_from_workload(wl)
     print(f"{'variant':26s} {'Eq.2 proxy':>11s} {'sim latency':>12s}")
     for name, plan in variants.items():
-        r = EdgeSimulator(cl, pf, wl, plan=plan, seed=1).run()
+        ec = EdgeCluster("sim", spec=cl, profile=pf, plan=plan,
+                         tasks=wl.tasks, seed=1)
+        for r in reqs:
+            ec.submit(r)
+        handles = ec.run()
+        lat = float(np.mean([h.metrics["latency"] for h in handles]))
         print(f"{name:26s} {remote_cost(plan, freqs):11.2f} "
-              f"{r.avg_latency:11.3f}s")
+              f"{lat:11.3f}s")
 
 
 if __name__ == "__main__":

@@ -1,91 +1,154 @@
-"""End-to-end serving driver (the paper's kind of system): serve a small
-Mixtral-family MoE as a CONTINUOUS request stream through the real JAX
-engine, with the unified placement control plane collecting gating
-statistics and migrating the expert placement live (zero recompile — tables
-and expert slots are jit arguments).
+"""The paper's headline scenario, end to end on serving API v1: THREE edge
+servers cooperatively serve one MoE model through the ``EdgeCluster``
+façade, against BOTH execution backends, from the *same* typed
+``Request`` stream.
 
-Phases:
-  1. requests stream in and share decode batches under the Uniform
-     placement (cold start) — different arrival times, one KV-slot pool;
-  2. the ``PlacementController`` reviews the observed f_n^l(e) and migrates
-     to the DanceMoE placement (Eq.-4 adopt decision);
-  3. more traffic is served — the local compute ratio rises, and generated
-     tokens are bit-identical before/after migration (function preserved).
+* ``backend="runtime"`` — the real jitted JAX path: one engine whose EP
+  spec spans the 3 servers (mesh 1x3 over placeholder devices, one EP rank
+  per server), origin-tagged continuous batching, the shared
+  ``PlacementController`` reviewing live gating statistics on the tick
+  clock. Outputs are token-identical to sequential ``generate()`` and the
+  per-origin gating statistics land in the ``[n_ep, E]`` attribution
+  matrix (Algorithm 1's f_n(e)).
+* ``backend="sim"`` — the event-driven time model of the paper's testbed
+  (Sec. IV), seconds clock, same request objects, same handle/event/metric
+  surface.
 
 Run:  PYTHONPATH=src python examples/serve_edge.py
 """
 import os
 
-# 8 placeholder devices so the example exercises a real 2x4 edge mesh
+# 3 placeholder devices: one EP rank per edge server
 # (standalone script — safe to set before jax initialises)
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=3")
 
 import jax
+import numpy as np
 
 from repro.configs import get_config
 from repro.core.migration import CostModel
 from repro.core.policies import ClusterView, PlacementController, get_policy
 from repro.data.pipeline import TaskTokenSource
+from repro.data.traces import BIGBENCH_TASKS
 from repro.launch.mesh import make_test_mesh
 from repro.models import moe as M
 from repro.models import transformer as tr
+from repro.serving.api import Request
+from repro.serving.cluster import EdgeCluster, MoEProfile, paper_testbed
 from repro.serving.engine import ServingEngine
-from repro.serving.runtime import ServingRuntime
+
+N_SERVERS = 3
+PROMPT, STEPS, N_REQUESTS = 16, 6, 6
 
 
-def main(steps: int = 8):
+def build_engine():
     cfg = get_config("mixtral-8x7b").reduced()  # 4 experts, top-2, 2 layers
-    mesh = make_test_mesh(2, 4)                 # 2x4 fake mesh: 4 EP ranks
+    mesh = make_test_mesh(1, 3)                 # one EP rank per edge server
     spec = M.EPSpec.build(mesh, cfg, ep_axes=("model",), slots=2,
                           capacity=4096, slot_capacity=8192)
     _, n_groups = cfg.layer_pattern()
-    key = jax.random.PRNGKey(0)
-    rt_dense = tr.Runtime(cfg=cfg, mesh=mesh, moe_impl="dense")
     rt = tr.Runtime(cfg=cfg, mesh=mesh, moe_impl="ep", ep_spec=spec)
-    params_dense = tr.init_params(rt_dense, key)
-
+    rt_dense = tr.Runtime(cfg=cfg, mesh=mesh, moe_impl="dense")
+    params_dense = tr.init_params(rt_dense, jax.random.PRNGKey(0))
     pl0 = M.uniform_placement(spec.n_ep, spec.slots, cfg.num_experts)
     pls0 = tr.stack_placement(pl0, n_groups)
     params = dict(params_dense)
     params["groups"] = M.regather_ep_groups(params_dense["groups"], pls0,
                                             n_groups)
-
     engine = ServingEngine(rt=rt, params=params, placement=pls0,
-                           dense_master=params_dense["groups"], max_len=96)
+                           dense_master=params_dense["groups"], max_len=48)
+    return cfg, spec, n_groups, engine
+
+
+def build_requests(cfg) -> list:
+    """One typed stream, consumed by both backends: token prompts for the
+    runtime, arrival times + task profiles for the simulator."""
+    reqs = []
+    for k in range(N_REQUESTS):
+        n = k % N_SERVERS
+        prompt = TaskTokenSource(f"edge{k}", cfg.vocab_size,
+                                 seed=10 + k).sample(1, PROMPT)[0]
+        reqs.append(Request(prompt=prompt, max_new_tokens=STEPS, origin=n,
+                            arrival=4.0 * k, task=BIGBENCH_TASKS[n]))
+    return reqs
+
+
+def show(m: dict) -> None:
+    ps = m["per_server"]
+    print(f"  [{m['backend']}] clock={m['clock']} "
+          f"servers={m['n_servers']} redirected={m['redirected_total']}")
+    for n in range(m["n_servers"]):
+        print(f"    server{n}: submitted={ps['submitted'][n]} "
+              f"served={ps['served'][n]} finished={ps['finished'][n]} "
+              f"mean_latency={ps['mean_latency'][n]:.4g} "
+              f"local_ratio={ps['local_ratio'][n]:.2f}")
+
+
+def main():
+    cfg, spec, n_groups, engine = build_engine()
+    requests = build_requests(cfg)
+    K = cfg.top_k
+
+    print(f"== runtime backend: {N_SERVERS}-server EdgeCluster over the "
+          "jitted engine ==")
     cm = CostModel(expert_bytes=3 * cfg.d_model * cfg.d_ff * 2,
                    activation_bytes=cfg.d_model * 2, bandwidth=62.5e6,
                    tokens_per_horizon=1e5)
     controller = PlacementController(
         policy=get_policy("dancemoe"), cost=cm,
         cluster=ClusterView.from_ep_spec(spec, n_groups),
-        interval=2 * steps)               # review every ~2 requests' decodes
-    runtime = ServingRuntime(engine, max_slots=4, controller=controller)
+        interval=STEPS)  # one live review mid-stream
+    # max_slots=3: the batched chunk-prefill call flattens
+    # max_slots * block_size token rows, which the EP dispatch shards over
+    # the whole 3-device mesh — keep it divisible by 3
+    cluster = EdgeCluster("runtime", engine=engine, n_servers=N_SERVERS,
+                          controller=controller,
+                          runtime_opts=dict(max_slots=3, prefix_cache=False))
+    handles = [cluster.submit(r) for r in requests]
+    cluster.run()
+    counts = engine.stats.counts.copy()          # [n_groups, n_ep, E]
+    show(cluster.metrics())
+    print(f"  migrations: {len(cluster.migrations)}")
+    assert len(cluster.migrations) >= 1, "no live placement review ran"
 
-    src = TaskTokenSource("arithmetic", cfg.vocab_size, seed=0)
-    probe = src.sample(1, 32)[0]
+    # 1) outputs are token-identical to sequential generate() per request
+    #    (one batched reference call — rows are independent)
+    ref, _ = engine.generate(np.stack([r.prompt for r in requests]),
+                             steps=STEPS)
+    for k, h in enumerate(handles):
+        np.testing.assert_array_equal(h.result(), ref[k])
+    print("  runtime outputs token-identical to sequential generate(): OK")
 
-    print("phase 1: uniform placement, continuous batching")
-    r0 = runtime.submit(probe, steps)
-    for _ in range(3):                    # staggered arrivals share batches
-        runtime.submit(src.sample(1, 32)[0], steps)
-        runtime.step()
-    gen_before = runtime.run()[r0]
-    print(f"  peak decode batch: {runtime.max_concurrency} requests")
+    # 2) per-origin gating stats match the [n_ep, E] attribution path:
+    #    each origin's row carries exactly its own prompts + decodes
+    per_origin = counts.sum(axis=(0, 2))         # [n_ep]
+    expect = np.zeros(N_SERVERS)
+    for r in requests:
+        expect[r.origin] += K * n_groups * (len(r.prompt) + STEPS - 1)
+    np.testing.assert_allclose(per_origin, expect, rtol=0.01)
+    print(f"  per-origin gating mass {per_origin} matches the "
+          "[n_ep, E] attribution path: OK")
 
-    print("phase 2: controller review -> migration")
-    for _ in range(4):
-        runtime.submit(src.sample(1, 32)[0], steps)
-    runtime.run()
-    print(f"  migrations so far: {len(runtime.migrations)}")
+    print("\n== sim backend: same Request stream, paper testbed ==")
+    profile = MoEProfile.from_config(cfg)
+    testbed = paper_testbed(0.3)
+    sim_ctrl = PlacementController(
+        policy=get_policy("dancemoe"), cost=None,
+        cluster=ClusterView.from_cluster(testbed, profile), interval=10.0)
+    sim = EdgeCluster("sim", spec=testbed, profile=profile,
+                      controller=sim_ctrl, seed=0)
+    sim_handles = [sim.submit(r) for r in requests]
+    sim.run()
+    show(sim.metrics())
+    assert all(h.done for h in sim_handles)
+    assert all(h.metrics["latency"] > 0 for h in sim_handles)
 
-    print("phase 3: serve the probe again after migration")
-    r1 = runtime.submit(probe, steps)
-    gen_after = runtime.run()[r1]
-    same = bool((gen_before == gen_after).all())
-    print(f"  generations identical across migration: {same}")
-    assert same, "migration must preserve the served function"
-    assert runtime.max_concurrency >= 2, "decode batches were never shared"
-    print("OK")
+    # one contract, two worlds: identical metric surface
+    assert set(cluster.metrics()["per_server"]) == \
+        set(sim.metrics()["per_server"])
+    assert {e.type for h in handles for e in h.events} >= \
+        {"ADMITTED", "TOKEN", "FINISHED"}
+    print("\nOK: both backends served the same typed stream")
 
 
 if __name__ == "__main__":

@@ -29,7 +29,8 @@ from typing import Callable, Protocol, runtime_checkable
 
 import numpy as np
 
-from repro.core.placement import PlacementPlan, dancemoe_placement
+from repro.core.placement import (PlacementPlan, build_ep_placement,
+                                  dancemoe_placement)
 from repro.core.stats import ActivationStats
 
 
@@ -187,6 +188,8 @@ class PlacementDecision:
     plan: PlacementPlan
     adopted: bool
     diag: dict
+    applied: bool = False     # set by review_and_apply when the adopted
+    #                           plan was actually pushed into an engine
 
 
 @dataclasses.dataclass
@@ -268,6 +271,22 @@ class PlacementController:
         if adopt:
             self.plan = candidate
         return PlacementDecision(self.plan, adopt, diag)
+
+    def review_and_apply(self, now: float, engine) -> PlacementDecision | None:
+        """Review on the caller's clock and apply an adopted plan to a
+        serving engine (EP slot re-gather + table swap via
+        ``engine.migrate``). The one code path behind both the
+        ``ServingRuntime`` decode-round clock and the ``EdgeCluster``
+        façade's tick clock. Returns the decision when a review ran,
+        ``None`` when the interval has not elapsed."""
+        if not self.review_due(now):
+            return None
+        dec = self.review(now)
+        if dec.adopted and getattr(engine.rt, "ep_spec", None) is not None:
+            engine.migrate(build_ep_placement(dec.plan,
+                                              engine.rt.ep_spec.slots))
+            dec.applied = True      # callers log migrations off this flag
+        return dec
 
     @property
     def migrations(self) -> list:

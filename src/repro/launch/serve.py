@@ -27,6 +27,7 @@ from repro.data.pipeline import TaskTokenSource
 from repro.launch.mesh import make_test_mesh
 from repro.models import moe as M
 from repro.models import transformer as tr
+from repro.serving.api import Request
 from repro.serving.engine import ServingEngine
 from repro.serving.runtime import ServingRuntime
 
@@ -113,21 +114,22 @@ def main():
     shared = (src.sample(1, args.shared_prefix)[0]
               if args.shared_prefix else None)
     t0 = time.time()
-    rids = []
+    handles = []
     for _ in range(args.requests):
         tail = src.sample(1, max(args.prompt - args.shared_prefix, 1))[0]
         prompt = tail if shared is None else np.concatenate([shared, tail])
-        rids.append(runtime.submit(prompt, args.steps))
-    outs = runtime.run()
+        handles.append(runtime.enqueue(Request(prompt=prompt,
+                                               max_new_tokens=args.steps)))
+    runtime.run()
     dt = time.time() - t0
-    n_tok = sum(len(outs[r]) for r in rids)
+    n_tok = sum(len(h.result()) for h in handles)
     pool = (f"paged[{runtime.allocator.n_blocks}x{runtime.block_size}]"
             if runtime.paged else f"dense[{args.slots}x{engine.max_len}]")
     cache = ("off" if runtime.prefix_cache is None else
              f"hit_rate={runtime.prefix_hit_rate:.2f} "
              f"tokens_skipped={runtime.prefix_tokens_skipped} "
              f"cow={runtime.cow_copies}")
-    print(f"{cfg.name}: served {len(rids)} requests / {n_tok} tokens in "
+    print(f"{cfg.name}: served {len(handles)} requests / {n_tok} tokens in "
           f"{dt:.1f}s ({n_tok / dt:.1f} tok/s) pool={pool} "
           f"peak_batch={runtime.max_concurrency} "
           f"peak_admitted={runtime.max_admitted} "

@@ -1,0 +1,227 @@
+"""Serving API v1: the typed request/event contract shared by every serving
+surface in the repo.
+
+One request shape — :class:`Request` — and one observable lifecycle —
+:class:`RequestHandle` emitting structured :class:`Event` records — replace
+the positional ``submit(prompt, max_new_tokens, origin=...)`` call and the
+raw ``{rid: tokens}`` result dicts. Both execution worlds consume it
+identically:
+
+* the **runtime** backend (``ServingRuntime`` over the jitted JAX engines,
+  clock = scheduler ticks / decode rounds), and
+* the **sim** backend (the event-driven ``EdgeSimulator`` time model,
+  clock = seconds),
+
+selected via ``EdgeCluster(backend=...)`` (see ``repro.serving.cluster``),
+so a policy, benchmark or example written against this contract runs
+unchanged against either.
+
+Event lifecycle of one request::
+
+    submit ──► ADMITTED ──► TOKEN* ──► FINISHED
+        │          ▲
+        └─ DEFERRED┘   (+ PREFIX_HIT at admission when cached pages matched)
+
+``FINISHED`` carries the per-request metrics (latency in the backend's
+clock, queue wait, locality, SLO verdict). The sim backend does not emit
+``TOKEN`` events (it models time, not tokens).
+
+This module is dependency-light (numpy only) on purpose: it is the contract
+both backends import, never the other way around.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+
+class EventType:
+    """Lifecycle event names (plain strings for cheap logging/JSON)."""
+    ADMITTED = "ADMITTED"        # assigned a slot / started service
+    DEFERRED = "DEFERRED"        # admission deferred (pool pressure); FIFO
+    PREFIX_HIT = "PREFIX_HIT"    # admission reused cached prefix pages
+    TOKEN = "TOKEN"              # one generated token (runtime backend)
+    FINISHED = "FINISHED"        # done; carries the per-request metrics
+
+    ALL = (ADMITTED, DEFERRED, PREFIX_HIT, TOKEN, FINISHED)
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """One structured lifecycle event.
+
+    ``time`` is in the emitting backend's clock (scheduler ticks for the
+    runtime backend, seconds for the simulator); ``data`` is the typed
+    payload (token id, deferral depth, the FINISHED metrics dict, ...).
+    """
+    type: str
+    rid: int
+    time: float
+    data: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class Request:
+    """One typed generation request.
+
+    prompt:          [T] int token ids (coerced to a 1-D int32 array).
+    max_new_tokens:  tokens to generate (>= 1).
+    origin:          edge server the request *arrived* at — drives routing
+                     and the per-origin gating-stats attribution
+                     (Algorithm 1's f_n(e)). ``None`` = unattributed.
+    temperature:     sampling temperature. v1 serves greedy argmax only, so
+                     this must be 0.0 (the field exists so the contract does
+                     not change when sampling lands).
+    slo:             optional latency budget in the serving backend's clock
+                     (ticks or seconds); FINISHED reports ``slo_met``.
+    arrival:         arrival time in seconds (sim backend; the runtime
+                     backend serves in submission order).
+    task:            task-profile name (sim backend: selects the activation
+                     distribution its time model samples from).
+    """
+    prompt: np.ndarray
+    max_new_tokens: int
+    origin: int | None = None
+    temperature: float = 0.0
+    slo: float | None = None
+    arrival: float | None = None
+    task: str | None = None
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if len(self.prompt) < 1:
+            raise ValueError("prompt must contain at least one token")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if self.temperature != 0.0:
+            raise ValueError(
+                "serving API v1 is greedy-only: temperature must be 0.0 "
+                f"(got {self.temperature})")
+        if self.slo is not None and self.slo <= 0:
+            raise ValueError(f"slo must be positive (got {self.slo})")
+        if self.origin is not None and self.origin < 0:
+            raise ValueError(f"origin must be >= 0 (got {self.origin})")
+
+
+class RequestHandle:
+    """Observable lifecycle of one submitted :class:`Request`.
+
+    Backends append :class:`Event` records via :meth:`_emit`; consumers read
+    ``events``, ``tokens`` (runtime backend), ``done`` and ``metrics`` (the
+    FINISHED payload), or call :meth:`result` for the generated tokens.
+    """
+
+    def __init__(self, rid: int, request: Request, clock: str = "ticks"):
+        self.rid = rid
+        self.request = request
+        self.clock = clock                 # "ticks" | "seconds"
+        self.events: list[Event] = []
+        self.server: int | None = None     # server the request was routed to
+        self.submitted_at: float | None = None
+        self.admitted_at: float | None = None
+        self.deferred_ticks = 0            # scheduler ticks spent deferred
+        self._tokens: list[int] = []
+        self._finished: dict | None = None
+
+    # -- backend side ------------------------------------------------------
+    def _emit(self, type_: str, time: float, **data) -> Event:
+        ev = Event(type_, self.rid, time, data)
+        self.events.append(ev)
+        if type_ == EventType.ADMITTED:
+            self.admitted_at = time
+            # first writer wins: a cluster router assigns the serving
+            # server at submit time; the runtime's ADMITTED event (which
+            # reports the *origin*) must not clobber that routing decision
+            if self.server is None and data.get("server") is not None:
+                self.server = int(data["server"])
+        elif type_ == EventType.TOKEN:
+            self._tokens.append(int(data["token"]))
+        elif type_ == EventType.FINISHED:
+            self._finished = data
+        return ev
+
+    # -- consumer side -----------------------------------------------------
+    @property
+    def done(self) -> bool:
+        return self._finished is not None
+
+    @property
+    def tokens(self) -> np.ndarray:
+        """Generated tokens so far ([0] before any TOKEN event; the sim
+        backend never emits tokens — use ``metrics`` there)."""
+        return np.asarray(self._tokens, np.int32)
+
+    @property
+    def metrics(self) -> dict:
+        """The FINISHED payload (latency, wait, locality, slo_met, ...);
+        empty until the request finishes."""
+        return dict(self._finished) if self._finished is not None else {}
+
+    def result(self) -> np.ndarray:
+        if not self.done:
+            raise RuntimeError(
+                f"request {self.rid} has not finished; drive the runtime or "
+                "cluster (step()/run()) before reading the result")
+        return self.tokens
+
+    def __repr__(self) -> str:  # debugging aid, not a stable format
+        state = "done" if self.done else (
+            "active" if self.admitted_at is not None else "queued")
+        return (f"RequestHandle(rid={self.rid}, {state}, "
+                f"events={len(self.events)}, clock={self.clock!r})")
+
+
+# ---------------------------------------------------------------------------
+# Routing: server selection, lifted out of the simulator so both backends
+# (and EdgeCluster) share one pluggable policy
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class Router(Protocol):
+    """Pick the serving server for a request.
+
+    ``origin`` is the arrival server (or None); ``loads`` is a [N] array of
+    earliest-start estimates — ``max(timeline.free, arrival)`` in the
+    simulator, queue+active backlog in the runtime backend.
+    """
+
+    def route(self, origin: int | None, loads: np.ndarray) -> int:
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class HomeRouter:
+    """Serve at the arrival server (the paper's default); requests without
+    an origin fall back to the least-loaded server."""
+
+    def route(self, origin: int | None, loads: np.ndarray) -> int:
+        if origin is not None:
+            return int(origin)
+        return int(np.argmin(loads))
+
+
+@dataclasses.dataclass(frozen=True)
+class LeastLoadedRouter:
+    """Redirect every request to the server that can start it earliest
+    (the simulator's ``redirect=True`` baseline)."""
+
+    def route(self, origin: int | None, loads: np.ndarray) -> int:
+        return int(np.argmin(loads))
+
+
+def as_router(router: "Router | str | None") -> Router:
+    """Normalize: Router object | name ("home" / "least-loaded") | None."""
+    if router is None:
+        return HomeRouter()
+    if isinstance(router, str):
+        try:
+            return {"home": HomeRouter,
+                    "least-loaded": LeastLoadedRouter}[router]()
+        except KeyError:
+            raise KeyError(f"unknown router {router!r}; "
+                           "available: 'home', 'least-loaded'") from None
+    if isinstance(router, Router):
+        return router
+    raise TypeError(f"not a router: {router!r}")

@@ -1,14 +1,36 @@
-"""Edge-cluster description: heterogeneous servers, bandwidth, model profile.
+"""Edge-cluster description and the multi-server serving façade.
 
-This is the faithful testbed model of the paper (Sec. IV): N servers with
-different GPU counts/memory/compute, linked by rate-limited networking
-(testbed: 500 Mbps via Linux tc). The event-driven simulator consumes it.
+Two layers live here:
+
+* the faithful testbed model of the paper (Sec. IV): ``ServerSpec`` /
+  ``ClusterSpec`` / ``MoEProfile`` — N servers with different GPU
+  counts/memory/compute, linked by rate-limited networking (testbed:
+  500 Mbps via Linux tc). The event-driven simulator consumes it.
+* ``EdgeCluster`` — the serving-API-v1 façade over the paper's headline
+  scenario: N edge servers cooperatively serving one MoE model, one
+  pluggable router, one shared ``PlacementController``, and **two
+  interchangeable backends** selected by ``backend=``:
+
+  - ``"runtime"`` — real jitted JAX engines (``ServingRuntime``), clock =
+    scheduler ticks. Either one shared runtime with origin-tagged slots
+    (default — one KV pool, the EP spec already spans the N servers) or N
+    per-server runtimes (``shared_runtime=False``, per-server KV pools and
+    decode batches, where memory allows).
+  - ``"sim"`` — the event-driven ``EdgeSimulator`` time model, clock =
+    seconds.
+
+  Both consume the same typed ``repro.serving.api.Request`` stream and
+  emit the same ``RequestHandle`` events, so policies, benchmarks and
+  examples run identically against either world.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 
 import numpy as np
+
+from repro.serving.api import (EventType, Request, RequestHandle, as_router)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,3 +111,359 @@ MIXTRAL_PROFILE = MoEProfile(num_layers=32, num_experts=8, top_k=2,
                              d_model=4096, d_ff=14336)
 DEEPSEEK_V2_LITE_PROFILE = MoEProfile(num_layers=26, num_experts=64, top_k=8,
                                       d_model=2048, d_ff=1408)
+
+
+# ---------------------------------------------------------------------------
+# EdgeCluster: the serving-API-v1 façade over both execution worlds
+# ---------------------------------------------------------------------------
+
+class _RuntimeBackend:
+    """N edge servers over the jitted JAX serving stack (clock = ticks).
+
+    One shared ``ServingRuntime`` with origin-tagged slots (default: one KV
+    pool — the engine's EP spec already spans the N servers), or N
+    per-server runtimes (own pools and decode batches) when memory allows.
+    The router picks the serving runtime in per-server mode; in shared
+    mode admission is cluster-wide, so requests are recorded at their
+    origin (round-robin for origin-less ones) and never redirected.
+    The shared ``PlacementController`` is reviewed on the *cluster* tick
+    clock, so per-server runtimes do not double-count reviews.
+    """
+    clock = "ticks"
+
+    def __init__(self, engine, n_servers: int, router, controller,
+                 shared_runtime: bool, runtime_opts: dict):
+        from repro.serving.runtime import ServingRuntime   # lazy: keeps the
+        #   sim world (simulator.py imports this module) free of jax
+        self.engine = engine
+        self.n = n_servers
+        self.router = router
+        self.controller = controller
+        self.shared = shared_runtime
+        n_ep = engine.rt.ep_spec.n_ep if engine.rt.ep_spec is not None else 1
+        # per-origin stats attribution needs one EP rank per server; when
+        # the engine cannot represent every origin, serve untagged (the
+        # positional fallback) rather than mis-crediting traffic
+        self.tag_origins = n_ep >= n_servers
+        if controller is not None:
+            if controller.stats is None:
+                controller.stats = engine.stats
+            if controller.last_review is None:
+                controller.last_review = 0.0       # full first interval
+        self.runtimes = [
+            ServingRuntime(engine, controller=None, **runtime_opts)
+            for _ in range(1 if shared_runtime else n_servers)]
+        self.rounds = 0
+        self._rr = 0                 # round-robin cursor (shared mode)
+        self.migrations: list = []
+
+    def loads(self) -> np.ndarray:
+        """[N] backlog estimate (queued + active) per server."""
+        return np.array([len(r.queue) + r.active for r in self.runtimes],
+                        float)
+
+    def submit(self, req: Request) -> RequestHandle:
+        if req.origin is not None and not 0 <= req.origin < self.n:
+            # fail at the submit site (the sim backend's contract too) —
+            # not as an IndexError in routing or metrics()
+            raise ValueError(
+                f"origin {req.origin} out of range for {self.n} server(s)")
+        if self.shared:
+            # one pool serves the whole cluster: there is no routing
+            # decision to make, so record the origin (round-robin for
+            # origin-less requests) rather than reporting a degenerate
+            # argmin-of-equal-loads that would pin metrics to server 0
+            if req.origin is not None:
+                server = req.origin
+            else:
+                server = self._rr
+                self._rr = (self._rr + 1) % self.n
+            rtm = self.runtimes[0]
+        else:
+            server = self.router.route(req.origin, self.loads())
+            rtm = self.runtimes[server]
+        if self.tag_origins:
+            origin = req.origin if req.origin is not None else server
+        else:
+            origin = None
+        handle = rtm.enqueue(dataclasses.replace(req, origin=origin))
+        handle.request = req      # keep the caller's origin for metrics
+        handle.server = server
+        return handle
+
+    @property
+    def pending(self) -> bool:
+        return any(r.queue or r.active for r in self.runtimes)
+
+    def step(self) -> bool:
+        had = self.pending
+        for rtm in self.runtimes:
+            rtm.step()
+        self.rounds += 1
+        if self.controller is not None:
+            dec = self.controller.review_and_apply(self.rounds, self.engine)
+            if dec is not None and dec.applied:
+                self.migrations.append(dec.diag)
+        return had
+
+    def run(self) -> None:
+        while self.pending:
+            self.step()
+
+    def local_ratio(self) -> np.ndarray:
+        """[N] observed local-compute ratio per origin server: activation
+        mass that landed on experts resident at the origin, under the
+        controller's active plan."""
+        ctrl = self.controller
+        if (not self.tag_origins or ctrl is None or ctrl.plan is None
+                or self.engine.rt.ep_spec is None):
+            return np.ones(self.n)
+        counts = self.engine.stats.counts          # [L, n_ep, E]
+        res = ctrl.plan.residency() > 0            # [L, N, E]
+        if res.shape != counts.shape:
+            return np.ones(self.n)
+        out = np.ones(self.n)
+        for s in range(self.n):
+            tot = counts[:, s, :].sum()
+            if tot > 0:
+                out[s] = (counts[:, s, :] * res[:, s, :]).sum() / tot
+        return out
+
+
+class _SimBackend:
+    """N edge servers over the event-driven time model (clock = seconds).
+
+    Typed requests become simulator arrivals: ``len(prompt)`` prompt
+    tokens, ``max_new_tokens`` decode tokens, ``task`` selecting the
+    activation profile, ``arrival``/``origin`` the arrival process. The
+    simulator models time, not tokens, so handles get ADMITTED/FINISHED
+    events (with latency + locality metrics) but no TOKEN events.
+    """
+    clock = "seconds"
+
+    def __init__(self, spec: ClusterSpec, profile: MoEProfile, plan,
+                 controller, router, tasks: dict | None, seed: int,
+                 ratio_bucket: float):
+        from repro.data.traces import Workload     # numpy-only
+        from repro.serving.simulator import EdgeSimulator   # lazy: this
+        #   module is imported by simulator.py (no import cycle at load)
+        self.profile = profile
+        self.seed = seed
+        self.workload = Workload(requests=[], tasks=dict(tasks or {}),
+                                 duration=0.0)
+        self.sim = EdgeSimulator(spec, profile, self.workload, plan=plan,
+                                 controller=controller, router=router,
+                                 seed=seed, ratio_bucket=ratio_bucket)
+        self.controller = controller
+        self.n = spec.n
+        self._pending: list = []       # heap of (arrival, seq, sim_req, h)
+        self._seq = 0
+
+    def _task_probs(self, name: str) -> None:
+        from repro.data.traces import make_task_profile
+        if name not in self.workload.tasks:
+            self.workload.tasks[name] = make_task_profile(
+                name, self.profile.num_layers, self.profile.num_experts,
+                seed=self.seed)
+
+    def submit(self, req: Request) -> RequestHandle:
+        from repro.data.traces import Request as SimRequest
+        if req.origin is not None and not 0 <= req.origin < self.n:
+            # fail at the submit site, not as an IndexError mid-simulation
+            raise ValueError(
+                f"origin {req.origin} out of range for {self.n} server(s)")
+        task = req.task if req.task is not None else "default"
+        self._task_probs(task)
+        arrival = float(req.arrival) if req.arrival is not None else 0.0
+        # origin-less requests get their server at *serve* time (step()),
+        # when the router can see the live timeline; -1 marks them here
+        sim_req = SimRequest(arrival=arrival,
+                             server=req.origin if req.origin is not None
+                             else -1,
+                             task=task, prompt_tokens=len(req.prompt),
+                             decode_tokens=req.max_new_tokens)
+        handle = RequestHandle(self._seq, req, clock="seconds")
+        handle.submitted_at = arrival
+        heapq.heappush(self._pending, (arrival, self._seq, sim_req, handle))
+        self._seq += 1
+        return handle
+
+    @property
+    def pending(self) -> bool:
+        return bool(self._pending)
+
+    def step(self) -> bool:
+        """Serve the earliest pending arrival (event-driven: one request is
+        one event)."""
+        if not self._pending:
+            return False
+        arrival, _, sim_req, handle = heapq.heappop(self._pending)
+        if sim_req.server < 0:
+            # origin-less: the router assigns the server against the live
+            # timeline (HomeRouter/LeastLoadedRouter both fall back to the
+            # least-loaded server when origin is None)
+            n = self.sim.router.route(None, self.sim.loads(arrival))
+            sim_req = dataclasses.replace(sim_req, server=n)
+        rec = self.sim.serve_request(sim_req)
+        handle._emit(EventType.ADMITTED, rec["start"], server=rec["server"])
+        slo = handle.request.slo
+        handle._emit(
+            EventType.FINISHED, rec["done"],
+            tokens=handle.request.max_new_tokens, origin=handle.request.origin,
+            server=rec["server"], latency=rec["latency"],
+            wait=rec["start"] - arrival, deferred_ticks=0,
+            prefix_tokens_skipped=0,
+            local_frac=(rec["hits"] / rec["tot"] if rec["tot"] else None),
+            slo=slo,
+            slo_met=(bool(rec["latency"] <= slo)
+                     if slo is not None else None))
+        return True
+
+    def run(self) -> None:
+        while self.step():
+            pass
+
+    @property
+    def migrations(self) -> list:
+        self.sim.start()
+        return self.sim._migrations
+
+    def local_ratio(self) -> np.ndarray:
+        return self.sim.local_ratio_by_server()
+
+
+class EdgeCluster:
+    """Serving API v1 façade: N edge servers, one router, one shared
+    placement control plane, two interchangeable backends.
+
+    backend:        ``"runtime"`` (jitted JAX engines, tick clock) or
+                    ``"sim"`` (event-driven time model, seconds clock).
+    n_servers:      cluster size (runtime backend: defaults to the engine's
+                    EP rank count; sim backend: ``spec.n``).
+    router:         ``repro.serving.api.Router`` instance or name
+                    (``"home"`` / ``"least-loaded"``); default home-server
+                    routing (the paper's arrival semantics).
+    controller:     the shared ``PlacementController`` (optional for the
+                    runtime backend; the sim backend needs it or ``plan``).
+    engine:         runtime backend — the ``ServingEngine`` the cluster
+                    serves with.
+    shared_runtime: runtime backend — one origin-tagged runtime (default)
+                    vs one ``ServingRuntime`` (own KV pool/decode batch)
+                    per server.
+    runtime_opts:   runtime backend — kwargs forwarded to each
+                    ``ServingRuntime`` (max_slots, block_size, ...).
+    spec/profile:   sim backend — ``ClusterSpec`` + ``MoEProfile``.
+    plan:           sim backend — static ``PlacementPlan`` (alternative to
+                    a controller).
+    tasks:          sim backend — {name: TaskProfile} activation profiles
+                    (unknown task names get a generated profile).
+    """
+
+    def __init__(self, backend: str = "runtime", *,
+                 n_servers: int | None = None, router=None, controller=None,
+                 engine=None, shared_runtime: bool = True,
+                 runtime_opts: dict | None = None,
+                 spec: ClusterSpec | None = None,
+                 profile: MoEProfile | None = None, plan=None,
+                 tasks: dict | None = None, seed: int = 0,
+                 ratio_bucket: float = 60.0):
+        router = as_router(router)
+        if backend == "runtime":
+            if engine is None:
+                raise ValueError("runtime backend needs engine=")
+            if n_servers is None:
+                n_servers = (engine.rt.ep_spec.n_ep
+                             if engine.rt.ep_spec is not None else 1)
+            self.backend = _RuntimeBackend(engine, n_servers, router,
+                                           controller, shared_runtime,
+                                           dict(runtime_opts or {}))
+        elif backend == "sim":
+            if spec is None or profile is None:
+                raise ValueError("sim backend needs spec= and profile=")
+            if n_servers is not None and n_servers != spec.n:
+                raise ValueError(
+                    f"n_servers={n_servers} != spec.n={spec.n}")
+            n_servers = spec.n
+            self.backend = _SimBackend(spec, profile, plan, controller,
+                                       router, tasks, seed, ratio_bucket)
+        else:
+            raise ValueError(
+                f"unknown backend {backend!r}: expected 'runtime' or 'sim'")
+        self.backend_name = backend
+        self.n_servers = n_servers
+        self.controller = controller
+        self.handles: list[RequestHandle] = []
+
+    # -- the portable surface ------------------------------------------
+    def submit(self, request: Request) -> RequestHandle:
+        h = self.backend.submit(request)
+        self.handles.append(h)
+        return h
+
+    def step(self) -> bool:
+        """Advance the cluster one unit of its backend clock."""
+        return self.backend.step()
+
+    def run(self) -> list[RequestHandle]:
+        """Serve until every submitted request finished; returns all
+        handles in submission order."""
+        self.backend.run()
+        return self.handles
+
+    @property
+    def migrations(self) -> list:
+        return self.backend.migrations
+
+    def metrics(self) -> dict:
+        """Per-server serving metrics in one backend-agnostic shape:
+        submitted/served/finished/redirected request counts, mean latency
+        by origin (backend clock units) and the local-compute ratio."""
+        N = self.n_servers
+        submitted = np.zeros(N, int)
+        served = np.zeros(N, int)
+        finished = np.zeros(N, int)
+        redirected = np.zeros(N, int)
+        lat_sum = np.zeros(N)
+        lat_n = np.zeros(N, int)
+        for h in self.handles:
+            o = h.request.origin
+            s = h.server if h.server is not None else (o if o is not None
+                                                       else 0)
+            oo = o if o is not None else s
+            submitted[oo] += 1
+            served[s] += 1
+            if o is not None and s != o:
+                redirected[oo] += 1
+            if h.done:
+                finished[s] += 1
+                lat = h.metrics.get("latency")
+                if lat is not None:
+                    lat_sum[oo] += lat
+                    lat_n[oo] += 1
+        mean_lat = np.where(lat_n > 0, lat_sum / np.maximum(lat_n, 1), 0.0)
+        return {
+            "backend": self.backend_name,
+            "clock": self.backend.clock,
+            "n_servers": N,
+            "per_server": {
+                "submitted": submitted.tolist(),
+                "served": served.tolist(),
+                "finished": finished.tolist(),
+                "redirected": redirected.tolist(),
+                "mean_latency": [round(float(v), 6) for v in mean_lat],
+                "local_ratio": [round(float(v), 6)
+                                for v in self.backend.local_ratio()],
+            },
+            "redirected_total": int(redirected.sum()),
+        }
+
+
+def requests_from_workload(workload) -> list[Request]:
+    """Convert a ``repro.data.traces.Workload`` into the equivalent typed
+    API request stream (synthetic prompts of the right length — the sim
+    backend models time from token *counts*). Pass ``tasks=workload.tasks``
+    to ``EdgeCluster`` so the activation profiles carry over too."""
+    return [Request(prompt=np.zeros(max(r.prompt_tokens, 1), np.int32),
+                    max_new_tokens=r.decode_tokens, origin=r.server,
+                    arrival=r.arrival, task=r.task)
+            for r in workload.requests]

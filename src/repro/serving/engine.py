@@ -36,6 +36,8 @@ class ServingEngine:
         _, self.n_groups = cfg.layer_pattern()
         n_ep = rt.ep_spec.n_ep if rt.ep_spec else 1
         self.stats = ActivationStats(self.n_groups, n_ep, cfg.num_experts)
+        self.last_local_frac: float | None = None   # most recent step's
+        #   mean local-dispatch fraction (serving-side locality signal)
 
         def _prefill(params, tokens, placement, origin=None):
             return tr.prefill(rt, params, tokens=tokens, placement=placement,
@@ -120,6 +122,9 @@ class ServingEngine:
             return
         counts = np.asarray(mstats["counts_per_rank"], np.float64) * weight
         self.stats.update(counts)
+        if "local_frac" in mstats:
+            self.last_local_frac = float(
+                np.asarray(mstats["local_frac"]).mean())
 
     # ------------------------------------------------------------------
     def migrate(self, new_placement_stacked) -> None:

@@ -26,7 +26,16 @@ instead:
   non-shared tails serialize the pool;
 * interleaved prefill/decode — every decoding slot advances one token per
   decode round regardless of arrival time (per-row cache positions via the
-  vector-``pos`` decode path).
+  vector-``pos`` decode path);
+* **compacted decode** (``compact_decode=True``, paged mode) — each decode
+  round batches only the occupied slots, padded to the next power-of-two
+  bucket width, instead of always paying for the full ``max_slots`` pool.
+
+Requests enter through the typed serving API
+(``repro.serving.api.Request`` -> ``enqueue() -> RequestHandle``): handles
+emit structured ``ADMITTED/DEFERRED/PREFIX_HIT/TOKEN/FINISHED`` events with
+per-request latency/locality metrics. The positional ``submit(...)`` +
+``{rid: tokens}`` surface survives only as a ``DeprecationWarning`` shim.
 
 The legacy dense slot pool (``paged=False``) allocates ``max_slots`` rows
 of ``max_len`` positions and prefills whole prompts in one call; it remains
@@ -51,21 +60,23 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.placement import build_ep_placement
 from repro.core.policies import PlacementController
 from repro.models import transformer as tr
+from repro.serving.api import EventType, Request, RequestHandle
 from repro.serving.engine import ServingEngine
 from repro.serving.prefix_cache import PrefixMatch, RadixPrefixCache
 
 
 @dataclasses.dataclass
 class GenRequest:
-    """One queued generation request."""
+    """One queued generation request (internal admission record built from
+    an API :class:`Request` by ``enqueue``)."""
     rid: int
     prompt: np.ndarray            # [T] int32
     max_new_tokens: int
@@ -87,6 +98,9 @@ class _Slot:
     filled: int = 0                    # prompt tokens already in the pool
     final_logits: np.ndarray | None = None  # last-prompt-token logits (for
     #                                         tail insertion at retirement)
+    prefix_skipped: int = 0            # prompt tokens served from the cache
+    lf_sum: float = 0.0                # running local_frac over decode rounds
+    lf_rounds: int = 0
 
     @property
     def prefilling(self) -> bool:
@@ -203,13 +217,21 @@ class ServingRuntime:
                  advances every prefilling slot one chunk in one jitted
                  call (interleaving knob).
     prefix_cache: enable the radix prefix cache (paged mode only).
+    compact_decode: decode only the occupied slots each round, padded to
+                 the next power-of-two bucket (paged mode only) — a pool
+                 that is 1/8 occupied decodes a width-1 batch instead of
+                 the full ``max_slots`` width. Bucketing keeps the jit
+                 universe at ``log2(max_slots)`` decode variants; the dense
+                 pool always decodes full width (its KV rows are
+                 positional).
     """
 
     def __init__(self, engine: ServingEngine, max_slots: int = 4,
                  controller: PlacementController | None = None, *,
                  paged: bool | None = None, block_size: int = 16,
                  n_blocks: int | None = None, max_pages: int | None = None,
-                 chunks_per_tick: int = 1, prefix_cache: bool = True):
+                 chunks_per_tick: int = 1, prefix_cache: bool = True,
+                 compact_decode: bool = True):
         self.engine = engine
         self.max_slots = max_slots
         self.controller = controller
@@ -249,13 +271,16 @@ class ServingRuntime:
                 block_size, self.max_pages)
         else:
             self.pool = tr.init_cache(engine.rt, max_slots, engine.max_len)
+        self.compact_decode = compact_decode
         self.slots: list[_Slot | None] = [None] * max_slots
         self.queue: collections.deque[GenRequest] = collections.deque()
         self.finished: dict[int, np.ndarray] = {}
+        self.handles: dict[int, RequestHandle] = {}   # rid -> handle
         self.rounds = 0               # decode rounds served (controller clock)
         self.ticks = 0                # scheduler ticks (step() calls)
         self.max_concurrency = 0      # peak active slots in one decode batch
         self.max_admitted = 0         # peak concurrently admitted requests
+        self.decode_rows = 0          # batch rows decoded (compaction metric)
         self.finished_at: dict[int, int] = {}   # rid -> tick of completion
         self.deferrals = 0            # admissions deferred on free blocks
         self.prefix_hits = 0          # admissions that reused cached pages
@@ -289,19 +314,21 @@ class ServingRuntime:
             return self.allocator.capacity_blocks * self.block_size
         return self.max_slots * self.engine.max_len
 
-    def submit(self, prompt: np.ndarray, max_new_tokens: int,
-               origin: int | None = None) -> int:
-        """Enqueue one request; returns its id. ``prompt``: [T] int tokens.
-        ``origin``: the EP rank / edge server the request arrived at —
-        gating statistics are attributed to it (Algorithm 1's f_n(e)).
+    def enqueue(self, request: Request) -> RequestHandle:
+        """Enqueue one typed :class:`Request`; returns its
+        :class:`RequestHandle` (structured ADMITTED/DEFERRED/PREFIX_HIT/
+        TOKEN/FINISHED events, tokens, per-request metrics).
+
+        ``request.origin`` is the EP rank / edge server the request arrived
+        at — gating statistics are attributed to it (Algorithm 1's f_n(e)).
 
         Paged mode validates against the *total pool capacity* (a request
         merely larger than the legacy ``max_len`` is admissible — it just
         holds more pages); dense mode keeps the per-row ``max_len`` bound.
         """
-        prompt = np.asarray(prompt, np.int32).reshape(-1)
-        if max_new_tokens < 1:
-            raise ValueError("max_new_tokens must be >= 1")
+        prompt = request.prompt
+        max_new_tokens = request.max_new_tokens
+        origin = request.origin
         n_ep = (self.engine.rt.ep_spec.n_ep
                 if self.engine.rt.ep_spec is not None else 1)
         if origin is not None and not 0 <= origin < n_ep:
@@ -337,7 +364,32 @@ class ServingRuntime:
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(GenRequest(rid, prompt, max_new_tokens, origin))
-        return rid
+        handle = RequestHandle(rid, request, clock="ticks")
+        handle.submitted_at = self.ticks
+        self.handles[rid] = handle
+        return handle
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int,
+               origin: int | None = None) -> int:
+        """DEPRECATED positional submit — construct a
+        ``repro.serving.api.Request`` and call :meth:`enqueue` instead
+        (same admission semantics; the handle's events/metrics replace the
+        raw ``{rid: tokens}`` dict). Kept as a thin shim returning the
+        request id; results remain readable from ``self.finished``."""
+        warnings.warn(
+            "ServingRuntime.submit(prompt, max_new_tokens, origin) is "
+            "deprecated: build a repro.serving.api.Request and call "
+            "enqueue() (see serving/README.md, 'Serving API v1')",
+            DeprecationWarning, stacklevel=2)
+        return self.enqueue(Request(prompt=prompt,
+                                    max_new_tokens=max_new_tokens,
+                                    origin=origin)).rid
+
+    # -- event plumbing ------------------------------------------------
+    def _emit(self, rid: int, type_: str, **data) -> None:
+        h = self.handles.get(rid)
+        if h is not None:
+            h._emit(type_, self.ticks, **data)
 
     @property
     def active(self) -> int:
@@ -385,6 +437,12 @@ class ServingRuntime:
             r = self.queue[0]
             if not self._try_admit_one(r):
                 self.deferrals += 1
+                h = self.handles.get(r.rid)
+                if h is not None:
+                    h.deferred_ticks += 1
+                    if h.deferred_ticks == 1:   # one event, not one per tick
+                        self._emit(r.rid, EventType.DEFERRED,
+                                   free_blocks=self.allocator.n_free)
                 break
             self.queue.popleft()
             admitted += 1
@@ -431,11 +489,16 @@ class ServingRuntime:
         self.page_table[i, :len(pages)] = pages
         slot = _Slot(rid=r.rid, pos=0, last=-1, tokens=[],
                      need=r.max_new_tokens, origin=r.origin, pages=pages,
-                     prompt=r.prompt, filled=m.tokens)
+                     prompt=r.prompt, filled=m.tokens,
+                     prefix_skipped=m.tokens)
         self.slots[i] = slot
+        self._emit(r.rid, EventType.ADMITTED, slot=i, server=r.origin,
+                   pages=len(pages))
         if m.tokens:
             self.prefix_hits += 1
             self.prefix_tokens_skipped += m.tokens
+            self._emit(r.rid, EventType.PREFIX_HIT, tokens_skipped=m.tokens,
+                       full_hit=m.full_hit)
         if m.full_hit:
             # the whole prompt is cached: the first token is recomputed
             # from the cached last-prompt-token logits (greedy argmax is
@@ -445,6 +508,7 @@ class ServingRuntime:
             slot.last = first
             slot.tokens = [first]
             slot.final_logits = m.logits
+            self._emit(r.rid, EventType.TOKEN, token=first)
             self._retire_if_done(i)
         return True
 
@@ -475,6 +539,9 @@ class ServingRuntime:
                              tokens=[int(first[j])], need=r.max_new_tokens,
                              origin=r.origin)
                 self.slots[free[j]] = slot
+                self._emit(r.rid, EventType.ADMITTED, slot=free[j],
+                           server=r.origin)
+                self._emit(r.rid, EventType.TOKEN, token=int(first[j]))
                 self._retire_if_done(free[j])
             admitted += len(group)
         return admitted
@@ -484,6 +551,7 @@ class ServingRuntime:
         if slot is not None and len(slot.tokens) >= slot.need:
             self.finished[slot.rid] = np.asarray(slot.tokens, np.int32)
             self.finished_at[slot.rid] = self.ticks
+            self._emit_finished(slot)
             if self.paged and slot.pages:
                 if (self.prefix_cache is not None and slot.prompt is not None
                         and slot.final_logits is not None):
@@ -501,6 +569,31 @@ class ServingRuntime:
             self.slots[i] = None
             return True
         return False
+
+    def _emit_finished(self, slot: _Slot) -> None:
+        """FINISHED carries the per-request metrics of the API contract:
+        latency/wait in scheduler ticks, locality over the request's decode
+        rounds, prefix reuse and the SLO verdict."""
+        h = self.handles.get(slot.rid)
+        if h is None:
+            return
+        latency = (self.ticks - h.submitted_at
+                   if h.submitted_at is not None else None)
+        wait = (h.admitted_at - h.submitted_at
+                if h.admitted_at is not None and h.submitted_at is not None
+                else None)
+        slo = h.request.slo
+        h._emit(EventType.FINISHED, self.ticks,
+                tokens=len(slot.tokens), origin=slot.origin,
+                server=h.server, latency=latency, wait=wait,
+                deferred_ticks=h.deferred_ticks,
+                prefix_tokens_skipped=slot.prefix_skipped,
+                local_frac=(slot.lf_sum / slot.lf_rounds
+                            if slot.lf_rounds else None),
+                slo=slo,
+                slo_met=(bool(latency <= slo)
+                         if slo is not None and latency is not None
+                         else None))
 
     # ------------------------------------------------------------------
     def _prefill_round(self) -> None:
@@ -564,6 +657,7 @@ class ServingRuntime:
                 s.last = first
                 s.tokens = [first]
                 s.final_logits = row
+                self._emit(s.rid, EventType.TOKEN, token=first)
                 self._cache_insert(i, row)
                 self._retire_if_done(i)
 
@@ -584,30 +678,43 @@ class ServingRuntime:
 
     def _decode_round(self) -> None:
         """Advance every decoding slot one token in one shared decode
-        batch."""
+        batch. With ``compact_decode`` (paged mode) only the occupied slots
+        ride the batch, padded up to the next power-of-two bucket — the
+        jitted decode fn specializes per bucket width, so a near-empty pool
+        stops paying for ``max_slots`` rows of garbage decode."""
         act = [i for i, s in enumerate(self.slots)
                if s is not None and not s.prefilling]
         if not act:
             return
         self.max_concurrency = max(self.max_concurrency, len(act))
-        cur = np.zeros((self.max_slots, 1), np.int32)
-        pos = np.zeros((self.max_slots,), np.int32)
-        mask = np.zeros((self.max_slots,), np.float32)
+        if self.paged and self.compact_decode:
+            B = min(self.max_slots, 1 << max(len(act) - 1, 0).bit_length())
+            row_slots: list[int | None] = act + [None] * (B - len(act))
+        else:
+            B = self.max_slots
+            row_slots = [i if i in act else None for i in range(B)]
+        cur = np.zeros((B, 1), np.int32)
+        pos = np.zeros((B,), np.int32)
+        mask = np.zeros((B,), np.float32)
+        for j, i in enumerate(row_slots):
+            if i is None:
+                continue
+            cur[j, 0] = self.slots[i].last
+            pos[j] = self.slots[i].pos
+            mask[j] = 1.0
         org = self._origin_arg(
-            self.slots[i].origin if i in act else None
-            for i in range(self.max_slots))
-        for i in act:
-            cur[i, 0] = self.slots[i].last
-            pos[i] = self.slots[i].pos
-            mask[i] = 1.0
-        # vacant rows decode garbage tokens whose outputs are discarded;
-        # the token mask keeps them out of the gating statistics too
+            self.slots[i].origin if i is not None else None
+            for i in row_slots)
+        # padding/vacant rows decode garbage tokens whose outputs are
+        # discarded; the token mask keeps them out of the gating statistics
         if self.paged:
-            # non-decoding rows (vacant OR still prefilling) get an
-            # all-null page table so their garbage write lands in the
+            # non-decoding rows (padding, vacant OR still prefilling) get
+            # an all-null page table so their garbage write lands in the
             # reserved null block instead of a live page
-            tbl = np.where(np.asarray(mask, bool)[:, None],
-                           self.page_table, 0).astype(np.int32)
+            tbl = np.zeros((B, self.max_pages), np.int32)
+            for j, i in enumerate(row_slots):
+                if i is not None:
+                    tbl[j] = self.page_table[i]
             logits, self.pool, mstats = self._decode_fn(
                 self.engine.params, self.pool, jnp.asarray(cur),
                 jnp.asarray(pos), jnp.asarray(tbl), self.engine.placement,
@@ -618,25 +725,30 @@ class ServingRuntime:
                 jnp.asarray(pos), self.engine.placement, jnp.asarray(mask),
                 org)
         self.engine._ingest(mstats)
+        self.decode_rows += B
+        lf = self.engine.last_local_frac
         nxt = np.asarray(jnp.argmax(logits, -1), np.int32)         # [B]
-        for i in act:
+        for j, i in enumerate(row_slots):
+            if i is None:
+                continue
             slot = self.slots[i]
             slot.pos += 1
-            slot.last = int(nxt[i])
-            slot.tokens.append(int(nxt[i]))
+            slot.last = int(nxt[j])
+            slot.tokens.append(int(nxt[j]))
+            if lf is not None:
+                slot.lf_sum += lf
+                slot.lf_rounds += 1
+            self._emit(slot.rid, EventType.TOKEN, token=int(nxt[j]))
             self._retire_if_done(i)
         self.rounds += 1
         self._maybe_review()
 
     def _maybe_review(self) -> None:
         ctrl = self.controller
-        if ctrl is None or not ctrl.review_due(self.rounds):
+        if ctrl is None:
             return
-        dec = ctrl.review(self.rounds)
-        if dec.adopted and self.engine.rt.ep_spec is not None:
-            stacked = build_ep_placement(dec.plan,
-                                         self.engine.rt.ep_spec.slots)
-            self.engine.migrate(stacked)
+        dec = ctrl.review_and_apply(self.rounds, self.engine)
+        if dec is not None and dec.applied:
             self.migrations.append(dec.diag)
 
     # ------------------------------------------------------------------

@@ -5,9 +5,12 @@
 ``GlobalScheduler`` is kept for the legacy batch-clocked API
 (``after_batch() -> bool``): it counts served batches, asks the unified
 controller to review at the configured cadence, and applies adopted plans
-to the engine. New code should construct a ``PlacementController`` and a
-``ServingRuntime`` directly (see serving/README.md for the migration
-note)."""
+to the engine. New code should construct a ``PlacementController`` plus a
+``ServingRuntime`` (single server) or a ``repro.serving.cluster
+.EdgeCluster`` (multi-server) and submit typed ``repro.serving.api
+.Request`` objects — see serving/README.md ("Serving API v1") for the
+migration table. Live adoption is ``PlacementController
+.review_and_apply(now, engine)``, the same code path both consumers use."""
 from __future__ import annotations
 
 import dataclasses

@@ -7,7 +7,10 @@ reused or swapped independently:
      token volumes, from ``repro.data.traces``).
   2. request routing        — per-layer expert activations sampled from the
      request's task profile (``TimeModel.sample_layer_counts``) + server
-     selection (``Router``: home server or least-loaded redirect).
+     selection via the serving API's pluggable routers
+     (``repro.serving.api.HomeRouter`` / ``LeastLoadedRouter`` — the same
+     objects the runtime-backed ``EdgeCluster`` uses; the simulator-local
+     ``Router`` class survives only as a ``DeprecationWarning`` shim).
   3. ``TimeModel``          — linear comm/comp estimator from the cluster
      spec (bandwidth, RTT, FLOP rates, IO speed).
   4. Eq.-1 time stamps      — a layer completes when its slowest expert
@@ -30,6 +33,7 @@ offloading ("MoE-Infinity"-style), with and without request redirection.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
 
@@ -38,6 +42,7 @@ from repro.core.placement import PlacementPlan
 from repro.core.policies import PlacementController
 from repro.core.stats import ActivationStats
 from repro.data.traces import Request, Workload
+from repro.serving.api import HomeRouter, LeastLoadedRouter, as_router
 from repro.serving.cluster import ClusterSpec, MoEProfile
 
 
@@ -81,14 +86,24 @@ class Timeline:
 
 @dataclasses.dataclass
 class Router:
-    """Server selection: the request's home server, or (``redirect``) the
-    server that can start it earliest."""
+    """DEPRECATED simulator-local router — the routing policies now live in
+    ``repro.serving.api`` (``HomeRouter`` / ``LeastLoadedRouter``) so the
+    runtime-backed ``EdgeCluster`` and the simulator share them. This shim
+    keeps the old ``route(req, timeline)`` signature."""
     redirect: bool = False
 
+    def __post_init__(self):
+        warnings.warn(
+            "serving.simulator.Router is deprecated: use "
+            "repro.serving.api.HomeRouter / LeastLoadedRouter (or pass "
+            "router= to EdgeSimulator / EdgeCluster)",
+            DeprecationWarning, stacklevel=3)
+
     def route(self, req: Request, timeline: Timeline) -> int:
+        loads = np.maximum(timeline.free, req.arrival)
         if self.redirect:
-            return int(np.argmin(np.maximum(timeline.free, req.arrival)))
-        return req.server
+            return LeastLoadedRouter().route(req.server, loads)
+        return HomeRouter().route(req.server, loads)
 
 
 class TimeModel:
@@ -195,11 +210,14 @@ class LocalRatioTracker:
 @dataclasses.dataclass
 class SimResult:
     latencies: np.ndarray            # per request
-    servers: np.ndarray              # per request
+    servers: np.ndarray              # per request (arrival/home server)
     finish_times: np.ndarray
     local_ratio_t: list              # (time, ratio) samples
     migrations: list                 # diagnostics dicts
     stats: ActivationStats
+    routed: np.ndarray | None = None         # per request: serving server
+    hits_by_server: np.ndarray | None = None  # [N] local activations served
+    tot_by_server: np.ndarray | None = None   # [N] total activations served
 
     def avg_latency_per_server(self, n: int) -> np.ndarray:
         return np.array([self.latencies[self.servers == i].mean()
@@ -220,13 +238,15 @@ class EdgeSimulator:
                  workload: Workload, plan: PlacementPlan | None = None,
                  controller=None, mode: str = "collab",
                  redirect: bool = False, seed: int = 0,
-                 ratio_bucket: float = 60.0):
+                 ratio_bucket: float = 60.0, router=None):
         """mode: 'collab' (distributed expert calls under `plan`) or
         'offload' (each server caches its own top experts; misses load
         weights from host RAM — the MoE-Infinity-style baseline).
         controller: a ``PlacementController`` (or the deprecated
         ``MigrationController`` shim).
-        redirect: route each request to the least-loaded server first."""
+        redirect: route each request to the least-loaded server first
+        (sugar for ``router=LeastLoadedRouter()``).
+        router: a ``repro.serving.api.Router`` (overrides ``redirect``)."""
         assert mode in ("collab", "offload")
         if mode == "collab" and plan is None and controller is None:
             raise ValueError("collab mode needs a plan or a controller")
@@ -236,9 +256,12 @@ class EdgeSimulator:
         self.mode = mode
         self.rng = np.random.default_rng(seed)
         self.source = ArrivalSource(workload)
-        self.router = Router(redirect=redirect)
+        self.router = (as_router(router) if router is not None
+                       else LeastLoadedRouter() if redirect
+                       else HomeRouter())
         self.time_model = TimeModel(cluster, profile)
         self.ratio_bucket = ratio_bucket
+        self._started = False
 
     @staticmethod
     def _unwrap(controller) -> PlacementController | None:
@@ -267,72 +290,132 @@ class EdgeSimulator:
         return caches
 
     # ------------------------------------------------------------------
-    def run(self) -> SimResult:
+    # Incremental core: ``start()`` -> ``serve_request()`` per request (in
+    # arrival order) -> ``finish()``. ``run()`` composes them over the
+    # workload; the EdgeCluster "sim" backend drives them request-by-
+    # request from the typed serving API instead.
+    # ------------------------------------------------------------------
+    def start(self) -> None:
+        """Initialize the mutable run state (timeline, trackers, initial
+        placement review, offload caches). Idempotent per run."""
+        if self._started:
+            return
         cl, pf = self.cluster, self.profile
         N, L, E = cl.n, pf.num_layers, pf.num_experts
-        tm = self.time_model
-        timeline = Timeline.create(N)
-        ratio = LocalRatioTracker(self.ratio_bucket)
-
+        self._timeline = Timeline.create(N)
+        self._ratio = LocalRatioTracker(self.ratio_bucket)
         ctrl = self.controller
         if ctrl is not None and ctrl.stats is None:
             ctrl.stats = ActivationStats(L, N, E)
-        stats = ctrl.stats if ctrl is not None else ActivationStats(L, N, E)
-        plan = self.plan
+        self._stats = (ctrl.stats if ctrl is not None
+                       else ActivationStats(L, N, E))
+        self._plan = self.plan
         if ctrl is not None:
-            plan = ctrl.review(0.0).plan            # initial placement
-        res = plan.residency() if plan is not None else None  # [L, N, E]
-
+            self._plan = ctrl.review(0.0).plan      # initial placement
+        self._res = (self._plan.residency()
+                     if self._plan is not None else None)      # [L, N, E]
         if self.mode == "offload":
             caches = self._offload_caches()
-            cache_mask = np.zeros((N, L, E), bool)
+            self._cache_mask = np.zeros((N, L, E), bool)
             for n in range(N):
                 for l in range(L):
-                    cache_mask[n, l, list(caches[n][l])] = True
+                    self._cache_mask[n, l, list(caches[n][l])] = True
+        self._latencies: list = []
+        self._servers: list = []
+        self._routed: list = []
+        self._finishes: list = []
+        self._migrations: list = []
+        self._hits_by_server = np.zeros(N)
+        self._tot_by_server = np.zeros(N)
+        self._started = True
 
-        latencies, servers, finishes = [], [], []
-        migrations = []
-
-        for r in self.source:
-            n = self.router.route(r, timeline)
-            start = timeline.start_time(n, r.arrival)
-            tokens = r.prompt_tokens + r.decode_tokens
-            probs = self.workload.tasks[r.task].probs
-            layer_counts = tm.sample_layer_counts(self.rng, probs, tokens)
-            dense_t = tm.dense_time(tokens, n)
-            if self.mode == "offload":
-                service, hits, tot = tm.offload_service(layer_counts, n,
-                                                        cache_mask[n])
-                service += L * dense_t
+    def serve_request(self, r: Request) -> dict:
+        """Serve one request (callers must present requests in arrival
+        order). Returns its timing/locality record — the payload the
+        EdgeCluster sim backend turns into ADMITTED/FINISHED events."""
+        self.start()
+        cl, pf, tm = self.cluster, self.profile, self.time_model
+        L = pf.num_layers
+        timeline, ratio, ctrl = self._timeline, self._ratio, self.controller
+        n = self.router.route(r.server, self.loads(r.arrival))
+        start = timeline.start_time(n, r.arrival)
+        tokens = r.prompt_tokens + r.decode_tokens
+        probs = self.workload.tasks[r.task].probs
+        layer_counts = tm.sample_layer_counts(self.rng, probs, tokens)
+        dense_t = tm.dense_time(tokens, n)
+        req_hits = req_tot = 0.0
+        if self.mode == "offload":
+            service, hits, tot = tm.offload_service(layer_counts, n,
+                                                    self._cache_mask[n])
+            service += L * dense_t
+            ratio.add(hits, tot)
+            req_hits, req_tot = hits, tot
+        else:
+            service = 0.0
+            for l in range(L):
+                worst, hits, tot = tm.collab_layer(layer_counts[l],
+                                                   self._res[l], n, timeline)
                 ratio.add(hits, tot)
-            else:
-                service = 0.0
-                for l in range(L):
-                    worst, hits, tot = tm.collab_layer(layer_counts[l],
-                                                       res[l], n, timeline)
-                    ratio.add(hits, tot)
-                    service += dense_t + worst
-            done = start + service
-            timeline.occupy(n, done)
-            latencies.append(done - r.arrival)
-            servers.append(r.server)
-            finishes.append(done)
-            stats.update_server(r.server, layer_counts)
-            ratio.roll(done)
+                req_hits += hits
+                req_tot += tot
+                service += dense_t + worst
+        done = start + service
+        timeline.occupy(n, done)
+        self._latencies.append(done - r.arrival)
+        self._servers.append(r.server)
+        self._routed.append(n)
+        self._finishes.append(done)
+        self._hits_by_server[n] += req_hits
+        self._tot_by_server[n] += req_tot
+        self._stats.update_server(r.server, layer_counts)
+        ratio.roll(done)
 
-            if ctrl is not None:
-                dec = ctrl.review(done)
-                if dec.adopted:
-                    new_res = dec.plan.residency()
-                    delays, added = tm.migration_pause(res, new_res)  # Eq. 3
-                    timeline.pause(delays)
-                    migrations.append({"time": done,
-                                       "added_per_server": added.tolist()})
-                    plan, res = dec.plan, new_res
+        migrated = False
+        if ctrl is not None:
+            dec = ctrl.review(done)
+            if dec.adopted:
+                new_res = dec.plan.residency()
+                delays, added = tm.migration_pause(self._res, new_res)  # Eq.3
+                timeline.pause(delays)
+                self._migrations.append({"time": done,
+                                         "added_per_server": added.tolist()})
+                self._plan, self._res = dec.plan, new_res
+                migrated = True
+        return {"origin": r.server, "server": n, "start": start,
+                "done": done, "latency": done - r.arrival,
+                "hits": req_hits, "tot": req_tot, "migrated": migrated}
 
-        ratio.flush()
-        return SimResult(latencies=np.array(latencies),
-                         servers=np.array(servers),
-                         finish_times=np.array(finishes),
-                         local_ratio_t=ratio.samples,
-                         migrations=migrations, stats=stats)
+    def loads(self, arrival: float = 0.0) -> np.ndarray:
+        """[N] earliest-start estimate per server (the router's input)."""
+        self.start()
+        return np.maximum(self._timeline.free, arrival)
+
+    def local_ratio_by_server(self) -> np.ndarray:
+        """[N] local-compute ratio of the traffic each server has served so
+        far (live view; 1.0 for servers with no traffic yet)."""
+        self.start()
+        return np.where(self._tot_by_server > 0,
+                        self._hits_by_server
+                        / np.maximum(self._tot_by_server, 1.0), 1.0)
+
+    def finish(self) -> SimResult:
+        self.start()
+        self._ratio.flush()
+        return SimResult(latencies=np.array(self._latencies),
+                         servers=np.array(self._servers),
+                         finish_times=np.array(self._finishes),
+                         local_ratio_t=self._ratio.samples,
+                         migrations=self._migrations, stats=self._stats,
+                         routed=np.array(self._routed, int),
+                         hits_by_server=self._hits_by_server.copy(),
+                         tot_by_server=self._tot_by_server.copy())
+
+    def run(self) -> SimResult:
+        # a full pass always starts from a fresh timeline (run() was
+        # reentrant before the incremental refactor and must stay so);
+        # incremental callers drive start()/serve_request()/finish()
+        self._started = False
+        self.start()
+        for r in self.source:
+            self.serve_request(r)
+        return self.finish()

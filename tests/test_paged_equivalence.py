@@ -24,6 +24,7 @@ from repro.data.pipeline import TaskTokenSource
 from repro.launch.mesh import make_test_mesh
 from repro.models import moe as M
 from repro.models import transformer as tr
+from repro.serving.api import Request
 from repro.serving.engine import ServingEngine
 from repro.serving.runtime import ServingRuntime
 
@@ -120,7 +121,8 @@ def _drive(rtm, jobs):
     while pending or rtm.queue or rtm.active:
         while pending and pending[0]["arrival"] <= t:
             j = pending.pop(0)
-            rids[id(j)] = rtm.submit(j["prompt"], j["steps"])
+            rids[id(j)] = rtm.enqueue(Request(prompt=j["prompt"],
+                                              max_new_tokens=j["steps"])).rid
         rtm.step()
         rtm.check_invariants()
         t += 1
@@ -299,10 +301,10 @@ def test_identical_prompts_skip_prefill_entirely():
     ref = _reference(eng, refs, prompt, 4)
     rtm = ServingRuntime(eng, max_slots=2, block_size=BLOCK_SIZE,
                          n_blocks=17)
-    r0 = rtm.submit(prompt, 4)
+    r0 = rtm.enqueue(Request(prompt=prompt, max_new_tokens=4)).rid
     rtm.run()
     chunks_cold = rtm.chunks_executed
-    r1 = rtm.submit(prompt, 4)
+    r1 = rtm.enqueue(Request(prompt=prompt, max_new_tokens=4)).rid
     out = rtm.run()
     assert rtm.chunks_executed == chunks_cold    # no prefill for the rerun
     assert rtm.prefix_hits == 1
@@ -356,7 +358,8 @@ def test_exhaustion_defers_admission_then_serves():
     prompt = src.sample(1, 12)[0]
     ref = _reference(eng, refs, prompt, 4)
     rtm = ServingRuntime(eng, max_slots=4, block_size=BLOCK_SIZE, n_blocks=5)
-    rids = [rtm.submit(prompt, 4) for _ in range(4)]
+    rids = [rtm.enqueue(Request(prompt=prompt, max_new_tokens=4)).rid
+            for _ in range(4)]
     out = rtm.run()
     assert rtm.deferrals > 0                      # pool pressure was real
     assert len(out) == 4
@@ -370,8 +373,8 @@ def test_freed_pages_are_reused():
     rtm = ServingRuntime(eng, max_slots=1, block_size=BLOCK_SIZE, n_blocks=5,
                          prefix_cache=False)
     pages_by_rid: dict = {}
-    rtm.submit(prompt, 2)
-    rtm.submit(prompt, 2)
+    rtm.enqueue(Request(prompt=prompt, max_new_tokens=2))
+    rtm.enqueue(Request(prompt=prompt, max_new_tokens=2))
     while rtm.queue or rtm.active:
         rtm.step()
         for s in rtm.slots:
@@ -394,10 +397,10 @@ def test_shared_prefix_pages_are_not_duplicated():
     p_b = np.concatenate([shared, src.sample(1, 7)[0]])
     rtm = ServingRuntime(eng, max_slots=1, block_size=BLOCK_SIZE,
                          n_blocks=17)
-    rtm.submit(p_a, 2)
+    rtm.enqueue(Request(prompt=p_a, max_new_tokens=2))
     rtm.run()
     pages_a = set()
-    rtm.submit(p_b, 2)
+    rtm.enqueue(Request(prompt=p_b, max_new_tokens=2))
     while rtm.queue or rtm.active:
         rtm.step()
         rtm.check_invariants()
@@ -420,8 +423,9 @@ def test_no_page_aliasing_and_full_return_under_churn():
                          n_blocks=9)
     rng = np.random.default_rng(0)
     for k in range(6):
-        rtm.submit(src.sample(1, int(rng.choice([4, 8, 12])))[0],
-                   int(rng.integers(1, 5)))
+        rtm.enqueue(Request(
+            prompt=src.sample(1, int(rng.choice([4, 8, 12])))[0],
+            max_new_tokens=int(rng.integers(1, 5))))
     while rtm.queue or rtm.active:
         rtm.step()
         rtm.check_invariants()                   # asserts no aliasing
@@ -442,21 +446,25 @@ def test_origin_attribution_and_validation():
     rtm = ServingRuntime(eng, max_slots=2, block_size=BLOCK_SIZE,
                          n_blocks=9, prefix_cache=False)
     before = eng.stats.counts.sum()
-    rid = rtm.submit(prompt, 3, origin=0)         # explicit origin leg
+    rid = rtm.enqueue(Request(prompt=prompt, max_new_tokens=3,
+                       origin=0)).rid        # explicit origin leg
     out = rtm.run()
     np.testing.assert_array_equal(out[rid], ref)
     assert eng.stats.counts.sum() > before        # stats did flow
     with pytest.raises(ValueError):
-        rtm.submit(prompt, 3, origin=1)           # n_ep == 1: rank 1 invalid
+        rtm.enqueue(Request(prompt=prompt, max_new_tokens=3,
+                    origin=1))                # n_ep == 1: rank 1 invalid
     with pytest.raises(ValueError):
-        rtm.submit(prompt, 3, origin=-1)
+        Request(prompt=prompt, max_new_tokens=3, origin=-1)
     with pytest.raises(ValueError):
-        rtm.submit(prompt, 3)                     # tagged stream: no mixing
+        rtm.enqueue(Request(prompt=prompt,
+                    max_new_tokens=3))        # tagged stream: no mixing
     untagged = ServingRuntime(eng, max_slots=2, block_size=BLOCK_SIZE,
                               n_blocks=9, prefix_cache=False)
-    untagged.submit(prompt, 3)
+    untagged.enqueue(Request(prompt=prompt, max_new_tokens=3))
     with pytest.raises(ValueError):
-        untagged.submit(prompt, 3, origin=0)      # and the reverse
+        untagged.enqueue(Request(prompt=prompt, max_new_tokens=3,
+                         origin=0))           # and the reverse
 
 
 def test_submit_validates_against_pool_capacity():
@@ -468,9 +476,10 @@ def test_submit_validates_against_pool_capacity():
     rtm = ServingRuntime(eng, max_slots=2, block_size=BLOCK_SIZE,
                          n_blocks=17)
     long_prompt = src.sample(1, 70)[0]            # > max_len, fits pool
-    rid = rtm.submit(long_prompt, 4)
+    rid = rtm.enqueue(Request(prompt=long_prompt, max_new_tokens=4)).rid
     out = rtm.run()
     assert len(out[rid]) == 4
     import pytest
     with pytest.raises(ValueError):
-        rtm.submit(src.sample(1, 126)[0], 8)      # 133 > 128 positions
+        rtm.enqueue(Request(prompt=src.sample(1, 126)[0],
+                    max_new_tokens=8))        # 133 > 128 positions

@@ -9,6 +9,7 @@ legs execute the same properties.
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
+from repro.serving.api import Request
 from repro.serving.prefix_cache import RadixPrefixCache
 from repro.serving.runtime import BlockAllocator
 
@@ -252,7 +253,8 @@ def test_runtime_refcounts_and_cow_on_live_stream(scenario):
     while pending or rtm.queue or rtm.active:
         while pending and pending[0][0] <= t:
             _, prompt, steps = pending.pop(0)
-            rtm.submit(prompt, steps)
+            rtm.enqueue(Request(prompt=prompt,
+                                max_new_tokens=steps))
         rtm.step()
         rtm.check_invariants()
         t += 1

@@ -11,6 +11,7 @@ from repro.data.pipeline import TaskTokenSource
 from repro.launch.mesh import make_test_mesh
 from repro.models import moe as M
 from repro.models import transformer as tr
+from repro.serving.api import Request
 from repro.serving.engine import ServingEngine
 from repro.serving.runtime import ServingRuntime
 
@@ -51,7 +52,8 @@ def test_concurrent_requests_share_batch_and_match_sequential(engine_setup):
             [(p1, 6), (p2, 4), (p3, 5)]]
 
     rtm = ServingRuntime(eng, max_slots=4)
-    rids = [rtm.submit(p1, 6), rtm.submit(p2, 4), rtm.submit(p3, 5)]
+    rids = [rtm.enqueue(Request(prompt=p, max_new_tokens=s)).rid
+            for p, s in [(p1, 6), (p2, 4), (p3, 5)]]
     out = rtm.run()
     # >= 2 concurrently arriving requests advanced in one decode batch
     assert rtm.max_concurrency >= 2
@@ -69,10 +71,11 @@ def test_staggered_arrivals_match_sequential(engine_setup):
     ref2 = _reference(eng, p2, 4)
 
     rtm = ServingRuntime(eng, max_slots=4)
-    a = rtm.submit(p1, 8)
+    a = rtm.enqueue(Request(prompt=p1, max_new_tokens=8)).rid
     rtm.step()
     rtm.step()                       # p1 is several tokens ahead...
-    b = rtm.submit(p2, 4)            # ...when p2 joins the decode batch
+    b = rtm.enqueue(Request(prompt=p2,
+                            max_new_tokens=4)).rid   # ...p2 joins mid-batch
     out = rtm.run()
     assert rtm.max_concurrency >= 2
     np.testing.assert_array_equal(out[a], ref1)
@@ -86,7 +89,8 @@ def test_more_requests_than_slots(engine_setup):
     prompts = [src.sample(1, 12)[0] for _ in range(5)]
     refs = [_reference(eng, p, 3) for p in prompts]
     rtm = ServingRuntime(eng, max_slots=2)
-    rids = [rtm.submit(p, 3) for p in prompts]
+    rids = [rtm.enqueue(Request(prompt=p, max_new_tokens=3)).rid
+            for p in prompts]
     out = rtm.run()
     assert len(out) == 5
     for rid, ref in zip(rids, refs):
@@ -98,7 +102,7 @@ def test_prefill_only_request(engine_setup):
     p = src.sample(1, 16)[0]
     ref = _reference(eng, p, 1)
     rtm = ServingRuntime(eng, max_slots=2)
-    rid = rtm.submit(p, 1)
+    rid = rtm.enqueue(Request(prompt=p, max_new_tokens=1)).rid
     out = rtm.run()
     np.testing.assert_array_equal(out[rid], ref)
 
@@ -116,7 +120,7 @@ def test_runtime_applies_adopted_plans_and_preserves_function(engine_setup):
     assert ctrl.stats is eng.stats   # controller owns the engine's stats
     p = src.sample(1, 16)[0]
     before = _reference(eng, p, 6)
-    rid = rtm.submit(p, 6)
+    rid = rtm.enqueue(Request(prompt=p, max_new_tokens=6)).rid
     out = rtm.run()
     np.testing.assert_array_equal(out[rid], before)
     assert ctrl.plan is not None     # at least the initial review ran
@@ -132,17 +136,20 @@ def test_submit_rejects_overlong_request(engine_setup):
     cfg, spec, n_groups, eng, src = engine_setup
     rtm = ServingRuntime(eng, max_slots=2, paged=False)
     with pytest.raises(ValueError):
-        rtm.submit(src.sample(1, 60)[0], 10)      # 70 > max_len=64
+        rtm.enqueue(Request(prompt=src.sample(1, 60)[0],
+                    max_new_tokens=10))       # 70 > max_len=64
     with pytest.raises(ValueError):
-        rtm.submit(src.sample(1, 8)[0], 0)
+        Request(prompt=src.sample(1, 8)[0], max_new_tokens=0)
     # paged: 2 slots x 64 positions -> 8 blocks of 16 = 128 total
     rtm = ServingRuntime(eng, max_slots=2, block_size=16)
     assert rtm.paged
-    rtm.submit(src.sample(1, 60)[0], 10)          # 70 <= 128: admissible
+    rtm.enqueue(Request(prompt=src.sample(1, 60)[0],
+                max_new_tokens=10))           # 70 <= 128: admissible
     with pytest.raises(ValueError):
-        rtm.submit(src.sample(1, 120)[0], 10)     # 130 > 128: rejected
+        rtm.enqueue(Request(prompt=src.sample(1, 120)[0],
+                    max_new_tokens=10))       # 130 > 128: rejected
     with pytest.raises(ValueError):
-        rtm.submit(src.sample(1, 8)[0], 0)
+        Request(prompt=src.sample(1, 8)[0], max_new_tokens=0)
 
 
 def test_vacant_slots_excluded_from_stats(engine_setup):
@@ -153,7 +160,7 @@ def test_vacant_slots_excluded_from_stats(engine_setup):
     K = cfg.top_k
     eng.stats.reset()
     rtm = ServingRuntime(eng, max_slots=4)
-    rtm.submit(src.sample(1, 8)[0], 4)
+    rtm.enqueue(Request(prompt=src.sample(1, 8)[0], max_new_tokens=4))
     rtm.run()
     # prefill: 8 tokens x K; 3 decode rounds x 1 active row x K — per group
     expected = (8 * K + 3 * K) * n_groups
@@ -170,7 +177,7 @@ def test_first_review_waits_a_full_interval(engine_setup):
                                                                 n_groups),
                                interval=1000)
     rtm = ServingRuntime(eng, max_slots=2, controller=ctrl)
-    rtm.submit(src.sample(1, 8)[0], 4)
+    rtm.enqueue(Request(prompt=src.sample(1, 8)[0], max_new_tokens=4))
     rtm.run()
     assert ctrl.plan is None and rtm.migrations == []   # interval not hit
 

@@ -57,6 +57,21 @@ def test_simulator_determinism(setup):
     assert np.allclose(r1.latencies, r2.latencies)
 
 
+def test_simulator_run_is_reentrant(setup):
+    """run() on the same instance starts from a fresh timeline each time
+    (the incremental start/serve_request core must not leak state into a
+    second full pass; note the RNG stream continues, so only shapes and
+    freshness are checked)."""
+    pf, cl, wl, cap, slots = setup
+    plan = uniform_plan(pf.num_layers, cl.n, pf.num_experts)
+    sim = EdgeSimulator(cl, pf, wl, plan=plan, seed=3)
+    r1 = sim.run()
+    r2 = sim.run()
+    assert len(r2.latencies) == len(r1.latencies) == len(wl.requests)
+    # no phantom backlog from run 1: the second pass is not inflated
+    assert r2.latencies.mean() < 2 * r1.latencies.mean()
+
+
 def test_paper_ordering_dancemoe_beats_uniform(setup):
     pf, cl, wl, cap, slots = setup
     freqs = wl.freqs_by_server(cl.n)
