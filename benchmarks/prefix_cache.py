@@ -18,7 +18,10 @@ on a smaller stream as the ``BENCH_serving.json`` document for the CI
 ``bench-serving/v2`` the document also carries the per-server
 admitted/locality/routing metrics of an ``EdgeCluster`` run
 (``cluster_smoke``: 3 paper-testbed servers, typed API request stream,
-DanceMoE controller). The
+DanceMoE controller — since v3 with the testbed lifted into a
+``serving.net.Topology``, so the section also reports the heterogeneous
+per-server memory caps; the ``metrics.net`` link/migration section comes
+from ``benchmarks.topology``). The
 CPU test config (mixtral-8x7b reduced, dense MoE impl — identical
 attention/paging code paths, no shard_map overhead) runs anywhere tier-1
 runs.
@@ -128,13 +131,18 @@ def cluster_smoke(n_requests: int = CLUSTER_REQUESTS) -> dict:
     from repro.data.traces import BIGBENCH_TASKS
     from repro.serving.cluster import (DEEPSEEK_V2_LITE_PROFILE, EdgeCluster,
                                        paper_testbed)
+    from repro.serving.net import Topology
 
     pf = DEEPSEEK_V2_LITE_PROFILE
     spec = paper_testbed(mem_fraction=0.3)
+    # the testbed's heterogeneous memory profiles (server3 has 2x), lifted
+    # into the topology/link model both backends share since v3
+    topo = Topology.from_cluster_spec(spec)
     ctrl = PlacementController(
         policy=get_policy("dancemoe"), cost=None,
         cluster=ClusterView.from_cluster(spec, pf), interval=30.0)
-    ec = EdgeCluster("sim", spec=spec, profile=pf, controller=ctrl, seed=0)
+    ec = EdgeCluster("sim", spec=spec, profile=pf, controller=ctrl, seed=0,
+                     topology=topo)
     rng = np.random.default_rng(0)
     t = 0.0
     for k in range(n_requests):
@@ -154,6 +162,7 @@ def cluster_smoke(n_requests: int = CLUSTER_REQUESTS) -> dict:
         "per_server_routed": m["per_server"]["served"],
         "per_server_local_ratio": m["per_server"]["local_ratio"],
         "redirected_total": m["redirected_total"],
+        "per_server_mem_gb": m["net"]["per_server_mem_gb"],
     }
 
 
@@ -164,7 +173,7 @@ def to_bench_doc(r: dict, *, mode: str, n_requests: int,
     chunk_ratio = r["nocache"]["chunks_executed"] / max(
         r["cache"]["chunks_executed"], 1)
     return {
-        "schema": "bench-serving/v2",
+        "schema": "bench-serving/v3",
         "mode": mode,
         "config": {
             "arch": "mixtral-8x7b(reduced)",

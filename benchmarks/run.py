@@ -21,10 +21,13 @@ import time
 
 def smoke(out_path: str) -> None:
     import benchmarks.prefix_cache as prefix_cache
+    import benchmarks.topology as topology
     from benchmarks.schema import validate_bench_serving
 
     t0 = time.time()
     doc = prefix_cache.smoke()
+    doc["metrics"]["net"] = topology.smoke()    # v3: non-uniform-topology
+    #   run (per-link dispatch bytes, staged-migration transfer totals)
     doc["elapsed_s"] = round(time.time() - t0, 2)
     validate_bench_serving(doc)          # raises (non-zero exit) on breakage
     with open(out_path, "w") as f:
@@ -41,6 +44,12 @@ def smoke(out_path: str) -> None:
           f"admitted={c['per_server_admitted']} "
           f"local_ratio={c['per_server_local_ratio']} "
           f"redirected={int(c['redirected_total'])}")
+    n = m["net"]
+    print(f"net[v3]: cross_server={n['cross_server_bytes']:.3g}B "
+          f"(uniform {n['cross_server_bytes_by_policy']['uniform']:.3g}B) "
+          f"migrations={int(n['migrations_completed'])} "
+          f"transfer={n['migration_transfer_seconds']:.3g}s "
+          f"mem_gb={n['per_server_mem_gb']}")
 
 
 def main() -> None:
@@ -63,6 +72,7 @@ def main() -> None:
     import benchmarks.paged_pool as paged_pool
     import benchmarks.prefix_cache as prefix_cache
     import benchmarks.roofline_table as roofline_table
+    import benchmarks.topology as topology
 
     csv = "--csv" in sys.argv
     for name, fn in [
@@ -75,6 +85,7 @@ def main() -> None:
         ("Roofline (single-pod dry-run)", roofline_table.main),
         ("Paged KV pool (occupancy + latency-vs-blocks)", paged_pool.main),
         ("Prefix cache (chunk reduction + concurrency)", prefix_cache.main),
+        ("Topology  (non-uniform links, staged migration)", topology.main),
     ]:
         t0 = time.time()
         print(f"\n##### {name}")

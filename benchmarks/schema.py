@@ -8,11 +8,13 @@ perf history. Validation is dependency-free (no jsonschema install on the
 runner)."""
 from __future__ import annotations
 
-SCHEMA_NAME = "bench-serving/v2"
+SCHEMA_NAME = "bench-serving/v3"
 
 # metric key -> ("scalar" | "pair" | "stats") shape requirement.
-# v2 extends v1 (same keys, same shapes) with the EdgeCluster section
-# below — extend, don't fork, when adding serving metrics.
+# v2 extended v1 (same keys, same shapes) with the EdgeCluster section;
+# v3 adds the heterogeneous-topology section (``metrics.net``) and the
+# per-server profile caps — extend, don't fork, when adding serving
+# metrics.
 _REQUIRED_METRICS = {
     "admitted_concurrency": "pair",        # {"cache": n, "nocache": n}
     "prefill_chunks_executed": "pair",
@@ -26,13 +28,30 @@ _REQUIRED_METRICS = {
 }
 
 # v2: metrics.cluster — per-server serving metrics emitted by an
-# EdgeCluster run ("list" = per-server list of n_servers numbers)
+# EdgeCluster run ("list" = per-server list of n_servers numbers).
+# v3 adds the heterogeneous profile caps each server ran under.
 _REQUIRED_CLUSTER = {
     "n_servers": "scalar",
     "per_server_admitted": "list",         # requests admitted per origin
     "per_server_routed": "list",           # requests routed to each server
     "per_server_local_ratio": "list",      # local-compute ratio in [0, 1]
     "redirected_total": "scalar",          # requests served off-origin
+    "per_server_mem_gb": "list",           # heterogeneous memory caps
+}
+
+# v3: metrics.net — the topology/communication section produced by
+# ``benchmarks.topology`` (non-uniform 3-server topology, link-aware
+# controller, staged migration). "matrix" = [n_servers][n_servers]
+# non-negative numbers.
+_REQUIRED_NET = {
+    "n_servers": "scalar",
+    "link_dispatch_bytes": "matrix",       # per-(src, dst) dispatch bytes
+    "cross_server_bytes": "scalar",
+    "migration_transfer_seconds": "scalar",  # staged-migration link time
+    "migration_transfer_bytes": "scalar",
+    "migrations_completed": "scalar",
+    "per_server_mem_gb": "list",
+    "per_server_expert_budget": "list",
 }
 
 
@@ -85,29 +104,55 @@ def validate_bench_serving(doc) -> dict:
     cluster = metrics.get("cluster")
     if not isinstance(cluster, dict) or not cluster:
         raise BenchSchemaError("metrics.cluster: missing or empty (v2)")
-    n = _num(cluster, "metrics.cluster", "n_servers")
-    if n < 1 or n != int(n):
-        raise BenchSchemaError(f"metrics.cluster.n_servers: invalid {n!r}")
-    for key, kind in _REQUIRED_CLUSTER.items():
-        if key not in cluster:
-            raise BenchSchemaError(f"metrics.cluster.{key}: missing")
-        if kind == "scalar":
-            _num(cluster, "metrics.cluster", key)
-            continue
-        v = cluster[key]
-        if not isinstance(v, list) or len(v) != int(n):
-            raise BenchSchemaError(
-                f"metrics.cluster.{key}: expected a list of {int(n)} "
-                f"numbers, got {v!r}")
-        for i, x in enumerate(v):
-            if not isinstance(x, (int, float)) or isinstance(x, bool) \
-                    or x < 0:
-                raise BenchSchemaError(
-                    f"metrics.cluster.{key}[{i}]: invalid {x!r}")
+    _validate_section(cluster, "metrics.cluster", _REQUIRED_CLUSTER)
     if any(x > 1.0 for x in cluster["per_server_local_ratio"]):
         raise BenchSchemaError(
             "metrics.cluster.per_server_local_ratio: ratio > 1")
     if sum(cluster["per_server_admitted"]) < 1:
         raise BenchSchemaError(
             "metrics.cluster: empty cluster run (nothing was served)")
+
+    # -- v3: the topology/communication section ---------------------------
+    net = metrics.get("net")
+    if not isinstance(net, dict) or not net:
+        raise BenchSchemaError("metrics.net: missing or empty (v3)")
+    _validate_section(net, "metrics.net", _REQUIRED_NET)
+    if net["cross_server_bytes"] <= 0:
+        raise BenchSchemaError(
+            "metrics.net.cross_server_bytes: empty run (no dispatch "
+            "traffic was metered)")
     return doc
+
+
+def _validate_section(sec: dict, path: str, required: dict) -> None:
+    """Shared per-server section validation: ``n_servers`` sizes every
+    "list" (length n) and "matrix" (n x n, non-negative) entry."""
+    n = _num(sec, path, "n_servers")
+    if n < 1 or n != int(n):
+        raise BenchSchemaError(f"{path}.n_servers: invalid {n!r}")
+    n = int(n)
+
+    def check_row(v, key, length):
+        if not isinstance(v, list) or len(v) != length:
+            raise BenchSchemaError(
+                f"{path}.{key}: expected a list of {length} numbers, "
+                f"got {v!r}")
+        for i, x in enumerate(v):
+            if not isinstance(x, (int, float)) or isinstance(x, bool) \
+                    or x < 0:
+                raise BenchSchemaError(f"{path}.{key}[{i}]: invalid {x!r}")
+
+    for key, kind in required.items():
+        if key not in sec:
+            raise BenchSchemaError(f"{path}.{key}: missing")
+        if kind == "scalar":
+            _num(sec, path, key)
+        elif kind == "list":
+            check_row(sec[key], key, n)
+        elif kind == "matrix":
+            rows = sec[key]
+            if not isinstance(rows, list) or len(rows) != n:
+                raise BenchSchemaError(
+                    f"{path}.{key}: expected {n} rows, got {rows!r}")
+            for r, row in enumerate(rows):
+                check_row(row, f"{key}[{r}]", n)

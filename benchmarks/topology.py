@@ -1,0 +1,205 @@
+"""Placement policies on a NON-uniform 3-server edge topology.
+
+The paper's testbed links every server at the same 500 Mbps; real edge
+deployments rarely look like that. This benchmark builds a topology with
+one slow WAN-ish link (25 Mbps, 40 ms) isolating server 2 — which is also
+the memory-poor box — and serves the same typed request stream through the
+``EdgeCluster`` sim backend under three placement policies (dancemoe /
+uniform / eplb), each with a link-aware ``CommCostModel`` controller and
+bandwidth-aware staged migration. Reported per policy:
+
+* mean request latency (modeled seconds),
+* cross-server dispatch bytes from the shared ``TrafficMeter`` — the
+  quantity activation-aware placement minimizes,
+* staged-migration transfer totals (seconds/bytes over the modeled links).
+
+Activation-aware placement must beat the uniform baseline on cross-server
+bytes (asserted — the acceptance gate for the topology subsystem).
+
+  PYTHONPATH=src python -m benchmarks.topology [--csv]
+
+``smoke()`` returns the ``metrics.net`` section of ``BENCH_serving.json``
+(``bench-serving/v3``) on a smaller stream for the CI ``bench-smoke`` job.
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.core.policies import ClusterView, PlacementController, get_policy
+from repro.serving.api import Request
+from repro.serving.cluster import EdgeCluster, MoEProfile
+from repro.serving.net import CommCostModel, ServerProfile, Topology
+
+POLICIES = ("dancemoe", "uniform", "eplb")
+
+# A mid-size MoE whose experts (3 * 512 * 1024 * 2 B ~ 3 MB) actually move
+# over a 25 Mbps link within the benchmark's horizon — Eq. 4 then has a
+# real tradeoff to price instead of rejecting every migration outright
+# (a DeepSeek-sized expert takes ~5.5 s per WAN transfer; correct to
+# refuse, useless to demo).
+BENCH_PROFILE = MoEProfile(num_layers=8, num_experts=16, top_k=2,
+                           d_model=512, d_ff=1024)
+
+
+def wan_testbed() -> Topology:
+    """3 edge servers: two LAN-linked (500 Mbps / 2 ms), one behind a slow
+    WAN-ish hop (25 Mbps / 40 ms) — and that one is also memory-poor
+    (half the expert budget of its peers)."""
+    base = 64 * BENCH_PROFILE.expert_bytes       # ~8 expert slots per layer
+    profiles = (
+        ServerProfile("lan0", mem_bytes=base, kv_mem_bytes=8e9,
+                      compute_speed=50e12),
+        ServerProfile("lan1", mem_bytes=base, kv_mem_bytes=8e9,
+                      compute_speed=50e12),
+        ServerProfile("wan2", mem_bytes=base / 2, kv_mem_bytes=4e9,
+                      compute_speed=50e12),
+    )
+    bw = np.full((3, 3), 500e6 / 8)
+    lat = np.full((3, 3), 2e-3)
+    for a, b in ((0, 2), (1, 2)):
+        bw[a, b] = bw[b, a] = 25e6 / 8
+        lat[a, b] = lat[b, a] = 40e-3
+    np.fill_diagonal(lat, 0.0)
+    return Topology(profiles, bw, lat)
+
+
+def build_requests(n_requests: int, n_servers: int, seed: int = 0
+                   ) -> list[Request]:
+    """Poisson stream, one task per origin — with a workload *shift*
+    halfway through (each origin switches task), so the controllers get a
+    reason to stage a migration over the modeled links."""
+    rng = np.random.default_rng(seed)
+    reqs, t = [], 0.0
+    for k in range(n_requests):
+        t += float(rng.exponential(4.0))
+        origin = k % n_servers
+        # synthetic task names: each unknown name gets its own generated
+        # activation profile, so the halfway switch is a real distribution
+        # shift (the BIGBENCH menu only has 3 entries)
+        task = (f"task{origin}" if k < n_requests // 2
+                else f"task{origin + n_servers}")
+        reqs.append(Request(
+            prompt=np.zeros(max(int(rng.normal(128, 32)), 8), np.int32),
+            max_new_tokens=20, origin=origin, arrival=t, task=task))
+    return reqs
+
+
+def _historical_stats(topo: Topology, pf, seed: int):
+    """Prime the controller with the first-phase task profiles (the
+    paper's 'historical communication and computation' statistics), so
+    the initial placement review is informed rather than degenerate."""
+    from repro.core.stats import ActivationStats
+    from repro.data.traces import make_task_profile
+    # EMA decay: the controller tracks the *recent* mix, so the mid-stream
+    # task shift actually surfaces in the reviewed frequencies instead of
+    # drowning in the cumulative history
+    stats = ActivationStats(pf.num_layers, topo.n, pf.num_experts,
+                            decay=0.9)
+    for n in range(topo.n):
+        tp = make_task_profile(f"task{n}", pf.num_layers,
+                               pf.num_experts, seed=seed)
+        stats.update_server(n, tp.probs * 500.0 * pf.top_k)
+    return stats
+
+
+def run_policy(policy: str, topo: Topology, requests: list[Request],
+               interval: float = 20.0, seed: int = 0) -> dict:
+    pf = BENCH_PROFILE
+    cm = CommCostModel(topology=topo, expert_bytes=pf.expert_bytes,
+                       activation_bytes=pf.hidden_bytes_per_token,
+                       tokens_per_horizon=1e5)
+    ctrl = PlacementController(
+        policy=get_policy(policy), cost=cm,
+        cluster=ClusterView.from_topology(topo, pf),
+        interval=interval, topology=topo,
+        stats=_historical_stats(topo, pf, seed))
+    ec = EdgeCluster("sim", topology=topo, profile=pf, controller=ctrl,
+                     seed=seed)
+    for r in requests:
+        ec.submit(r)
+    handles = ec.run()
+    m = ec.metrics()
+    return {
+        "mean_latency_s": float(np.mean([h.metrics["latency"]
+                                         for h in handles])),
+        "cross_server_bytes": m["net"]["cross_server_bytes"],
+        "link_bytes": m["net"]["link_bytes"],
+        "local_ratio": m["per_server"]["local_ratio"],
+        "migrations": m["net"]["migrations"],
+        "metrics": m,
+    }
+
+
+def measure(n_requests: int, seed: int = 0) -> dict:
+    topo = wan_testbed()
+    requests = build_requests(n_requests, topo.n, seed=seed)
+    return {p: run_policy(p, topo, requests, seed=seed) for p in POLICIES}
+
+
+def net_section(results: dict, topo: Topology) -> dict:
+    """The ``metrics.net`` section of ``bench-serving/v3``: the dancemoe
+    run's per-link/migration numbers plus the cross-policy comparison."""
+    dm = results["dancemoe"]
+    pf = BENCH_PROFILE
+    return {
+        "n_servers": topo.n,
+        "link_dispatch_bytes": dm["link_bytes"],
+        "cross_server_bytes": dm["cross_server_bytes"],
+        "migration_transfer_seconds":
+            dm["migrations"]["transfer_seconds"],
+        "migration_transfer_bytes": dm["migrations"]["transfer_bytes"],
+        "migrations_completed": dm["migrations"]["completed"],
+        "per_server_mem_gb": [round(p.mem_bytes / 1e9, 3)
+                              for p in topo.profiles],
+        "per_server_expert_budget": [
+            int(b) for b in topo.expert_budgets(pf.expert_bytes)],
+        "cross_server_bytes_by_policy": {
+            p: results[p]["cross_server_bytes"] for p in results},
+    }
+
+
+def smoke(n_requests: int = 40) -> dict:
+    """Small CI-gate measurement: the ``metrics.net`` document section."""
+    topo = wan_testbed()
+    results = measure(n_requests)
+    assert (results["dancemoe"]["cross_server_bytes"]
+            < results["uniform"]["cross_server_bytes"]), (
+        "activation-aware placement should cut modeled cross-server bytes "
+        "vs the uniform baseline")
+    assert results["dancemoe"]["migrations"]["completed"] >= 1, (
+        "the workload shift should stage at least one migration that "
+        "completes within the run — staged migration regressed")
+    return net_section(results, topo)
+
+
+def main(csv: bool = False):
+    n_requests = 60
+    topo = wan_testbed()
+    results = measure(n_requests)
+    print(f"# {topo.n}-server non-uniform topology "
+          f"({n_requests} requests): WAN-ish 25 Mbps link to the "
+          "memory-poor server, 500 Mbps LAN elsewhere")
+    print(f"{'policy':10s} {'latency (s)':>12s} {'cross bytes':>12s} "
+          f"{'mig xfer (s)':>12s} {'local ratio':>24s}")
+    for p, r in results.items():
+        lr = "/".join(f"{v:.2f}" for v in r["local_ratio"])
+        print(f"{p:10s} {r['mean_latency_s']:12.4f} "
+              f"{r['cross_server_bytes']:12.3e} "
+              f"{r['migrations']['transfer_seconds']:12.3f} {lr:>24s}")
+    dm, up = results["dancemoe"], results["uniform"]
+    ratio = up["cross_server_bytes"] / max(dm["cross_server_bytes"], 1.0)
+    print(f"dancemoe cuts cross-server bytes {ratio:.2f}x vs uniform; "
+          f"latency {up['mean_latency_s'] / dm['mean_latency_s']:.2f}x")
+    if csv:
+        for p, r in results.items():
+            print(f"topology,{p}_latency_s,{r['mean_latency_s']:.5f}")
+            print(f"topology,{p}_cross_bytes,{r['cross_server_bytes']:.1f}")
+    assert dm["cross_server_bytes"] < up["cross_server_bytes"], (
+        "activation-aware placement should cut modeled cross-server bytes "
+        "on the non-uniform topology")
+
+
+if __name__ == "__main__":
+    main(csv="--csv" in sys.argv)

@@ -26,19 +26,34 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.migration import CostModel
+from repro.core.baselines import uniform_plan
 from repro.core.policies import ClusterView, PlacementController, get_policy
 from repro.data.pipeline import TaskTokenSource
 from repro.data.traces import BIGBENCH_TASKS
 from repro.launch.mesh import make_test_mesh
 from repro.models import moe as M
 from repro.models import transformer as tr
-from repro.serving.api import Request
-from repro.serving.cluster import EdgeCluster, MoEProfile, paper_testbed
+from repro.serving.api import EventType, Request
+from repro.serving.cluster import EdgeCluster, MoEProfile
 from repro.serving.engine import ServingEngine
+from repro.serving.net import CommCostModel, ServerProfile, Topology
 
 N_SERVERS = 3
 PROMPT, STEPS, N_REQUESTS = 16, 6, 6
+
+
+def build_topology() -> Topology:
+    """Non-uniform 3-server interconnect: two LAN-linked servers plus one
+    behind a slow WAN-ish hop, and one memory-poor box."""
+    profiles = (ServerProfile("edge0", mem_bytes=8e9),
+                ServerProfile("edge1", mem_bytes=8e9),
+                ServerProfile("edge2", mem_bytes=2e9))   # memory-poor
+    bw = np.full((3, 3), 500e6 / 8)
+    lat = np.full((3, 3), 2e-3)
+    bw[0, 2] = bw[2, 0] = bw[1, 2] = bw[2, 1] = 25e6 / 8   # WAN-ish link
+    lat[0, 2] = lat[2, 0] = lat[1, 2] = lat[2, 1] = 40e-3
+    np.fill_diagonal(lat, 0.0)
+    return Topology(profiles, bw, lat)
 
 
 def build_engine():
@@ -88,28 +103,51 @@ def main():
     cfg, spec, n_groups, engine = build_engine()
     requests = build_requests(cfg)
     K = cfg.top_k
+    topo = build_topology()
 
     print(f"== runtime backend: {N_SERVERS}-server EdgeCluster over the "
           "jitted engine ==")
-    cm = CostModel(expert_bytes=3 * cfg.d_model * cfg.d_ff * 2,
-                   activation_bytes=cfg.d_model * 2, bandwidth=62.5e6,
-                   tokens_per_horizon=1e5)
+    cm = CommCostModel(topology=topo,
+                       expert_bytes=3 * cfg.d_model * cfg.d_ff * 2,
+                       activation_bytes=cfg.d_model * 2,
+                       tokens_per_horizon=1e5)
     controller = PlacementController(
         policy=get_policy("dancemoe"), cost=cm,
         cluster=ClusterView.from_ep_spec(spec, n_groups),
-        interval=STEPS)  # one live review mid-stream
-    # max_slots=3: the batched chunk-prefill call flattens
-    # max_slots * block_size token rows, which the EP dispatch shards over
-    # the whole 3-device mesh — keep it divisible by 3
+        interval=STEPS,  # one live review mid-stream
+        topology=topo)   # bandwidth-aware staged migration
+    # seed the incumbent with the uniform layout the engine boots with:
+    # the mid-stream review then *stages* the move to the activation-aware
+    # plan — expert transfers scheduled over the modeled links, the plan
+    # switching only once they complete
+    controller.plan = uniform_plan(n_groups, N_SERVERS, cfg.num_experts)
+    # max_slots=4: the EP dispatch pads token rows to the device count
+    # internally, so the chunk-prefill geometry (max_slots * block_size)
+    # no longer needs to divide evenly over the 3-device mesh
     cluster = EdgeCluster("runtime", engine=engine, n_servers=N_SERVERS,
-                          controller=controller,
-                          runtime_opts=dict(max_slots=3, prefix_cache=False))
+                          controller=controller, topology=topo,
+                          runtime_opts=dict(max_slots=4, prefix_cache=False))
     handles = [cluster.submit(r) for r in requests]
     cluster.run()
     counts = engine.stats.counts.copy()          # [n_groups, n_ep, E]
     show(cluster.metrics())
     print(f"  migrations: {len(cluster.migrations)}")
     assert len(cluster.migrations) >= 1, "no live placement review ran"
+
+    # staged migration: the plan went live only after its modeled
+    # transfers finished (MIGRATION_STARTED strictly precedes
+    # MIGRATION_COMPLETED on the tick clock)
+    ev = cluster.events
+    starts = [e for e in ev if e.type == EventType.MIGRATION_STARTED]
+    dones = [e for e in ev if e.type == EventType.MIGRATION_COMPLETED]
+    assert starts and dones and starts[0].time < dones[0].time
+    net = cluster.metrics()["net"]
+    print(f"  staged migrations: {len(starts)} started, {len(dones)} "
+          f"completed ({net['migrations']['transfer_seconds']:.3g}s modeled "
+          "transfer)")
+    print(f"  cross-server dispatch: {net['cross_server_bytes']:.3g} bytes "
+          f"over {net['rounds']} metered rounds")
+    assert net["cross_server_bytes"] > 0
 
     # 1) outputs are token-identical to sequential generate() per request
     #    (one batched reference call — rows are independent)
@@ -129,13 +167,13 @@ def main():
     print(f"  per-origin gating mass {per_origin} matches the "
           "[n_ep, E] attribution path: OK")
 
-    print("\n== sim backend: same Request stream, paper testbed ==")
+    print("\n== sim backend: same Request stream, same topology ==")
     profile = MoEProfile.from_config(cfg)
-    testbed = paper_testbed(0.3)
     sim_ctrl = PlacementController(
         policy=get_policy("dancemoe"), cost=None,
-        cluster=ClusterView.from_cluster(testbed, profile), interval=10.0)
-    sim = EdgeCluster("sim", spec=testbed, profile=profile,
+        cluster=ClusterView.from_topology(topo, profile), interval=10.0,
+        topology=topo)
+    sim = EdgeCluster("sim", topology=topo, profile=profile,
                       controller=sim_ctrl, seed=0)
     sim_handles = [sim.submit(r) for r in requests]
     sim.run()
@@ -143,9 +181,11 @@ def main():
     assert all(h.done for h in sim_handles)
     assert all(h.metrics["latency"] > 0 for h in sim_handles)
 
-    # one contract, two worlds: identical metric surface
+    # one contract, two worlds: identical metric surface — including the
+    # topology/net section both backends derive from the one Topology
     assert set(cluster.metrics()["per_server"]) == \
         set(sim.metrics()["per_server"])
+    assert set(cluster.metrics()["net"]) == set(sim.metrics()["net"])
     assert {e.type for h in handles for e in h.events} >= \
         {"ADMITTED", "TOKEN", "FINISHED"}
     print("\nOK: both backends served the same typed stream")

@@ -13,7 +13,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.placement import PlacementPlan, remote_cost
+from repro.core.placement import (PlacementPlan, iter_added_experts,
+                                  remote_cost)
 
 
 @dataclasses.dataclass
@@ -43,21 +44,26 @@ def migration_time(old: PlacementPlan, new: PlacementPlan,
     """Eq. (3): bytes moved / IO speed, per changed placement entry."""
     speeds = np.broadcast_to(np.asarray(cost.io_speed, float),
                              (len(new.assign[0]),))
-    t = 0.0
-    for l, (lo, ln) in enumerate(zip(old.assign, new.assign)):
-        for n, (ao, an) in enumerate(zip(lo, ln)):
-            added = set(an) - set(ao)
-            t += len(added) * cost.expert_bytes / speeds[n]
-    return t
+    return sum(cost.expert_bytes / speeds[n]
+               for _, n, _ in iter_added_experts(old, new))
 
 
 def should_migrate(old: PlacementPlan, new: PlacementPlan,
                    freqs: np.ndarray, cost: CostModel
                    ) -> tuple[bool, dict]:
-    """Eq. (4) decision. Returns (adopt?, diagnostics)."""
+    """Eq. (4) decision. Returns (adopt?, diagnostics).
+
+    ``cost`` may be this module's uniform :class:`CostModel` or any object
+    with the same ``comm_cost_seconds`` surface; a cost model that also
+    provides ``migration_seconds(old, new)`` (the link-aware
+    ``repro.serving.net.CommCostModel`` prices the staged transfer
+    schedule's makespan) overrides the uniform Eq.-3 estimate."""
     c_old = cost.comm_cost_seconds(old, freqs)
     c_new = cost.comm_cost_seconds(new, freqs)
-    t_mig = migration_time(old, new, cost)
+    if hasattr(cost, "migration_seconds"):
+        t_mig = cost.migration_seconds(old, new)
+    else:
+        t_mig = migration_time(old, new, cost)
     return c_new + t_mig < c_old, {
         "C_old": c_old, "C_new": c_new, "T_mig": t_mig,
         "gain": c_old - c_new - t_mig,

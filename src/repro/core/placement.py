@@ -197,6 +197,19 @@ class PlacementPlan:
         return r
 
 
+def iter_added_experts(old: "PlacementPlan", new: "PlacementPlan"):
+    """Yield ``(layer, server, expert)`` for every placement entry present
+    in ``new`` but absent from ``old`` — the entries a migration must
+    actually move (removals are free: weights are dropped, not
+    transferred). Deterministic order: (layer, server, ascending expert).
+    Shared by the Eq.-3 estimate (``core.migration.migration_time``) and
+    the staged transfer planner (``serving.net.plan_transfers``)."""
+    for l, (lo, ln) in enumerate(zip(old.assign, new.assign)):
+        for n, (ao, an) in enumerate(zip(lo, ln)):
+            for e in sorted(set(an) - set(ao)):
+                yield l, n, int(e)
+
+
 def local_utility(assign_layer: list[list[int]], freqs: np.ndarray) -> float:
     """U_n summed over servers for one layer (Theorem 1's objective)."""
     return float(sum(freqs[n, list(set(a))].sum()

@@ -66,6 +66,16 @@ class ClusterView:
             capacity=np.full(spec.n_ep, spec.slots * n_groups),
             slots_cap=np.full(spec.n_ep, spec.slots))
 
+    @staticmethod
+    def from_topology(topology, profile) -> "ClusterView":
+        """From a ``repro.serving.net.Topology`` + ``MoEProfile``: each
+        server's expert budget comes from its own :class:`ServerProfile`
+        memory cap (the heterogeneous analogue of ``from_cluster``)."""
+        cap = topology.expert_budgets(profile.expert_bytes)
+        slots = np.minimum(np.maximum(cap // profile.num_layers, 1),
+                           profile.num_experts)
+        return ClusterView(capacity=cap, slots_cap=slots)
+
 
 # ---------------------------------------------------------------------------
 # Policy protocol + registry
@@ -190,6 +200,8 @@ class PlacementDecision:
     diag: dict
     applied: bool = False     # set by review_and_apply when the adopted
     #                           plan was actually pushed into an engine
+    staged: bool = False      # adopted but still transferring over the
+    #                           modeled links; ``plan`` is the incumbent
 
 
 @dataclasses.dataclass
@@ -206,18 +218,73 @@ class PlacementController:
 
     ``cost=None`` disables the Eq.-4 gate (every review adopts) — useful
     for always-follow policies in ablations.
+
+    **Staged migration** (``topology=`` a ``repro.serving.net.Topology``):
+    adopting a plan no longer switches it instantly. The changed experts
+    become per-link transfer tasks (serialized per link, overlapped with
+    serving — ``net.plan_transfers``/``schedule_transfers``); the
+    candidate sits in ``pending`` until ``poll(now)`` observes the
+    schedule's makespan elapsed, and only then does ``plan`` change.
+    Reviews pause while a migration is in flight. ``clock_rate`` converts
+    modeled transfer *seconds* into the caller's clock units (seconds per
+    tick; the simulator's seconds clock keeps the default 1.0). The
+    initial adoption (no incumbent → nothing to transfer off a live
+    server) stays instantaneous.
     """
     policy: PlacementPolicy | Callable | str
     cost: "CostModel | None" = None          # repro.core.migration.CostModel
+    #                                          or repro.serving.net
+    #                                          .CommCostModel (link-aware)
     cluster: ClusterView | None = None
     interval: float = 300.0
     stats: ActivationStats | None = None
     plan: PlacementPlan | None = None
     last_review: float | None = None
     events: list = dataclasses.field(default_factory=list)
+    topology: "object | None" = None         # repro.serving.net.Topology
+    clock_rate: float = 1.0                  # seconds per caller clock unit
+    expert_bytes: float | None = None        # transfer sizing fallback when
+    #                                          cost= carries no expert_bytes
+    pending: "object | None" = None          # net.StagedMigration in flight
 
     def __post_init__(self):
         self.policy = as_policy(self.policy)
+
+    def _expert_bytes(self) -> float:
+        b = self.expert_bytes
+        if b is None:
+            b = getattr(self.cost, "expert_bytes", None)
+        if b is None:
+            raise ValueError(
+                "staged migration needs the expert weight size: pass "
+                "expert_bytes= (or a cost model carrying it) alongside "
+                "topology=")
+        return float(b)
+
+    def attach_topology(self, topology=None, expert_bytes=None):
+        """Reconcile a caller-supplied topology with this controller's —
+        the one code path behind ``EdgeCluster``, ``EdgeSimulator`` and
+        the runtime backend: adopt the caller's topology when the
+        controller has none, hand the controller's back when the caller
+        has none, and default the staged-transfer sizing when neither
+        ``expert_bytes`` nor the cost model carries it yet. Returns the
+        topology in effect."""
+        if topology is None:
+            topology = self.topology
+        elif self.topology is None:
+            self.topology = topology
+        elif self.topology is not topology:
+            # two divergent link models in one run (metering on one,
+            # staging/Eq.-4 on the other) would disagree silently
+            raise ValueError(
+                "controller already has a different topology attached; "
+                "share one Topology object between the controller and "
+                "the cluster")
+        if (self.topology is not None and expert_bytes is not None
+                and self.expert_bytes is None
+                and getattr(self.cost, "expert_bytes", None) is None):
+            self.expert_bytes = float(expert_bytes)
+        return topology
 
     # -- stats ingestion ---------------------------------------------------
     def observe(self, layer_counts: np.ndarray) -> None:
@@ -243,13 +310,40 @@ class PlacementController:
         return self.policy.propose(freqs, self.cluster)
 
     def review_due(self, now: float) -> bool:
+        if self.pending is not None:        # one migration in flight at a
+            return False                    # time; reviews resume after it
         return (self.last_review is None
                 or now - self.last_review >= self.interval)
+
+    def _stage(self, now: float, candidate: PlacementPlan):
+        """Turn an adopted candidate into an in-flight staged migration
+        (returns it; ``poll`` completes it). No transfers needed → adopt
+        instantly and return None."""
+        from repro.serving import net as _net
+        tasks = _net.plan_transfers(self.plan, candidate, self.topology,
+                                    self._expert_bytes())
+        if not tasks:
+            self.plan = candidate
+            return None
+        seconds = _net.schedule_transfers(tasks, self.topology)
+        staged = _net.StagedMigration(
+            plan=candidate, tasks=tasks, started=now,
+            eta=now + seconds / self.clock_rate, seconds=seconds)
+        self.pending = staged
+        return staged
 
     def review(self, now: float, freqs: np.ndarray | None = None, *,
                force: bool = False) -> PlacementDecision:
         """One control-loop tick. Returns the (possibly unchanged) active
-        plan; ``adopted`` says whether a migration happened at this tick."""
+        plan; ``adopted`` says whether a migration was decided at this
+        tick (with a topology attached, the switch itself lands later —
+        see ``poll``)."""
+        if self.pending is not None:
+            # one migration in flight at a time — even a forced review
+            # must not overwrite the pending plan (its transfers would be
+            # dropped mid-flight and MIGRATION_COMPLETED never emitted)
+            return PlacementDecision(self.plan, False,
+                                     {"reason": "migration-in-flight"})
         if not force and not self.review_due(now):
             return PlacementDecision(self.plan, False, {"reason": "interval"})
         if freqs is None:
@@ -267,24 +361,81 @@ class PlacementController:
         diag = dict(diag)
         diag["time"] = now
         diag["adopted"] = adopt
-        self.events.append(diag)
+        staged = None
         if adopt:
-            self.plan = candidate
-        return PlacementDecision(self.plan, adopt, diag)
+            if self.plan is not None and self.topology is not None:
+                staged = self._stage(now, candidate)
+                if staged is not None:
+                    diag["staged"] = True
+                    diag["eta"] = staged.eta
+                    diag["transfers"] = len(staged.tasks)
+                    diag["transfer_seconds"] = staged.seconds
+                    diag["transfer_bytes"] = staged.nbytes
+            else:
+                self.plan = candidate
+        self.events.append(diag)
+        return PlacementDecision(self.plan, adopt, diag,
+                                 staged=staged is not None)
+
+    def poll(self, now: float):
+        """Complete the in-flight staged migration once its modeled
+        transfers have finished: the pending plan becomes the active plan
+        and a ``migration-complete`` event is recorded. Returns the
+        completed ``net.StagedMigration`` (or ``None``: nothing pending,
+        or transfers still running)."""
+        p = self.pending
+        if p is None or now < p.eta:
+            return None
+        self.pending = None
+        self.plan = p.plan
+        self.events.append({
+            "reason": "migration-complete", "time": now, "adopted": False,
+            "staged_at": p.started, "eta": p.eta,
+            "transfers": len(p.tasks), "transfer_seconds": p.seconds,
+            "transfer_bytes": p.nbytes,
+        })
+        return p
+
+    def _mesh_distance(self, engine):
+        """Topology-derived nearest-replica distance matrix for the
+        engine's EP routing tables, when the topology maps 1:1 onto the
+        EP ranks (else the default ring distance applies)."""
+        if self.topology is None:
+            return None
+        n_ep = engine.rt.ep_spec.n_ep
+        if self.topology.n != n_ep:
+            return None
+        if hasattr(self.cost, "invocation_seconds"):
+            return self.cost.invocation_seconds()
+        return self.topology.distance()
 
     def review_and_apply(self, now: float, engine) -> PlacementDecision | None:
         """Review on the caller's clock and apply an adopted plan to a
         serving engine (EP slot re-gather + table swap via
         ``engine.migrate``). The one code path behind both the
         ``ServingRuntime`` decode-round clock and the ``EdgeCluster``
-        façade's tick clock. Returns the decision when a review ran,
-        ``None`` when the interval has not elapsed."""
+        façade's tick clock. With a topology attached, an adopted plan is
+        *staged* first and pushed into the engine only on the later call
+        whose ``now`` has passed the transfer schedule's makespan.
+        Returns the decision when a review ran or a staged migration
+        completed, ``None`` otherwise."""
+        completed = self.poll(now)
+        if completed is not None:
+            dec = PlacementDecision(self.plan, True, dict(self.events[-1]))
+            if getattr(engine.rt, "ep_spec", None) is not None:
+                engine.migrate(build_ep_placement(
+                    self.plan, engine.rt.ep_spec.slots,
+                    mesh_distance=self._mesh_distance(engine)))
+                dec.applied = True
+            return dec
         if not self.review_due(now):
             return None
         dec = self.review(now)
-        if dec.adopted and getattr(engine.rt, "ep_spec", None) is not None:
-            engine.migrate(build_ep_placement(dec.plan,
-                                              engine.rt.ep_spec.slots))
+        if (dec.adopted and not dec.staged
+                and getattr(engine.rt, "ep_spec", None) is not None):
+            engine.migrate(build_ep_placement(
+                dec.plan, engine.rt.ep_spec.slots,
+                mesh_distance=self._mesh_distance(engine)))
             dec.applied = True      # callers log migrations off this flag
         return dec
 

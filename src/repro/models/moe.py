@@ -489,15 +489,35 @@ def moe_apply_ep(p, cfg, x, *, mesh, spec: EPSpec, placement: EPPlacement,
     # counts leave both bodies as a replicated [n_ep, E] per-origin matrix
     out_specs = (rows_spec, P(), P(), P())
     mask_spec = P(rows_spec[0])
+    # the row axis must divide evenly over its mesh axes; short batches
+    # (e.g. a chunked-prefill geometry whose max_slots * block_size is not
+    # a device-count multiple) are padded with masked zero rows instead of
+    # pushing a divisibility constraint onto every serving caller. Padding
+    # rows route like chunk-padding rows always have (they consume a2a
+    # capacity but are masked out of the gating statistics).
+    row_axes = rows_spec[0]
+    if row_axes:
+        axes = row_axes if isinstance(row_axes, tuple) else (row_axes,)
+        n_shards = int(np.prod([sizes[a] for a in axes]))
+    else:
+        n_shards = 1
+    pad = (-(B * T)) % n_shards
     rows = h.reshape(B * T, D)
+    if pad:
+        rows = jnp.concatenate(
+            [rows, jnp.zeros((pad, D), rows.dtype)])
     rows = lax.with_sharding_constraint(rows, NamedSharding(mesh, rows_spec))
 
-    def to_rows(v, dtype):
+    def to_rows(v, dtype, pad_value=0):
         vv = v.astype(dtype)
         vv = (vv if vv.ndim == 2 else
               jnp.broadcast_to(vv[:, None], (B, T)))
+        vv = vv.reshape(B * T)
+        if pad:
+            vv = jnp.concatenate(
+                [vv, jnp.full((pad,), pad_value, dtype)])
         return lax.with_sharding_constraint(
-            vv.reshape(B * T), NamedSharding(mesh, mask_spec))
+            vv, NamedSharding(mesh, mask_spec))
 
     mask_rows = to_rows(token_mask if token_mask is not None
                         else jnp.ones((B, T)), jnp.float32)
@@ -509,7 +529,7 @@ def moe_apply_ep(p, cfg, x, *, mesh, spec: EPSpec, placement: EPPlacement,
                     out_specs=out_specs)
     out_rows, counts, local, aux = fn(rows, mask_rows, origin_rows, p_in,
                                       placement)
-    out = out_rows.reshape(B, T, D)
+    out = out_rows[:B * T].reshape(B, T, D)
     if batch_row_axes and B % n_batch == 0:
         out = lax.with_sharding_constraint(
             out, NamedSharding(mesh, P(batch_row_axes, None, None)))

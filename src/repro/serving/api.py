@@ -47,6 +47,15 @@ class EventType:
 
     ALL = (ADMITTED, DEFERRED, PREFIX_HIT, TOKEN, FINISHED)
 
+    # cluster-level events (rid = -1): the staged-migration lifecycle of
+    # the shared placement control plane, surfaced by
+    # ``EdgeCluster.events`` (payload: eta, transfer count/bytes/seconds)
+    MIGRATION_STARTED = "MIGRATION_STARTED"      # plan adopted, transfers
+    #                                              scheduled on the links
+    MIGRATION_COMPLETED = "MIGRATION_COMPLETED"  # transfers done, plan live
+
+    CLUSTER = (MIGRATION_STARTED, MIGRATION_COMPLETED)
+
 
 @dataclasses.dataclass(frozen=True)
 class Event:

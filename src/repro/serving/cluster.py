@@ -30,7 +30,9 @@ import heapq
 
 import numpy as np
 
-from repro.serving.api import (EventType, Request, RequestHandle, as_router)
+from repro.serving.api import (Event, EventType, Request, RequestHandle,
+                               as_router)
+from repro.serving.net import Topology, TrafficMeter
 
 
 @dataclasses.dataclass(frozen=True)
@@ -132,7 +134,8 @@ class _RuntimeBackend:
     clock = "ticks"
 
     def __init__(self, engine, n_servers: int, router, controller,
-                 shared_runtime: bool, runtime_opts: dict):
+                 shared_runtime: bool, runtime_opts: dict,
+                 topology: Topology | None = None):
         from repro.serving.runtime import ServingRuntime   # lazy: keeps the
         #   sim world (simulator.py imports this module) free of jax
         self.engine = engine
@@ -140,6 +143,7 @@ class _RuntimeBackend:
         self.router = router
         self.controller = controller
         self.shared = shared_runtime
+        self.topology = topology
         n_ep = engine.rt.ep_spec.n_ep if engine.rt.ep_spec is not None else 1
         # per-origin stats attribution needs one EP rank per server; when
         # the engine cannot represent every origin, serve untagged (the
@@ -150,12 +154,61 @@ class _RuntimeBackend:
                 controller.stats = engine.stats
             if controller.last_review is None:
                 controller.last_review = 0.0       # full first interval
-        self.runtimes = [
-            ServingRuntime(engine, controller=None, **runtime_opts)
-            for _ in range(1 if shared_runtime else n_servers)]
+            controller.attach_topology(topology,
+                                       expert_bytes=self._expert_bytes())
+        itemsize = np.dtype(engine.rt.dtype).itemsize
+        self.meter = (TrafficMeter(topology,
+                                   engine.rt.cfg.d_model * itemsize)
+                      if topology is not None else None)
+        if self.meter is not None:
+            # the engine may have served before this cluster existed
+            # (warmup generate(), a previous cluster): its lifetime stats
+            # are not this cluster's dispatch traffic
+            self.meter.seed(engine.stats.counts)
+        opts = [dict(runtime_opts)
+                for _ in range(1 if shared_runtime else n_servers)]
+        if (not shared_runtime and topology is not None
+                and "n_blocks" not in runtime_opts):
+            # heterogeneous KV budgets: each server's paged pool is sized
+            # by its own ServerProfile cap (per-position bytes estimated
+            # as k+v full-width rows across the layers)
+            bs = runtime_opts.get("block_size", 16)
+            pos_bytes = (2.0 * engine.rt.cfg.num_layers
+                         * engine.rt.cfg.d_model * itemsize)
+            budgets = topology.kv_block_budgets(bs * pos_bytes)
+            for s, o in enumerate(opts):
+                o["n_blocks"] = 1 + int(budgets[s])
+        self.runtimes = [ServingRuntime(engine, controller=None, **o)
+                         for o in opts]
         self.rounds = 0
         self._rr = 0                 # round-robin cursor (shared mode)
         self.migrations: list = []
+
+    def _expert_bytes(self) -> float:
+        cfg = self.engine.rt.cfg
+        return float(3 * cfg.d_model * cfg.d_ff
+                     * np.dtype(self.engine.rt.dtype).itemsize)
+
+    def _residency(self) -> np.ndarray | None:
+        """[L, N, E] residency for the traffic meter: the controller's
+        active plan, falling back to the engine's live placement tables
+        (controller-less clusters still meter their dispatch traffic)."""
+        ctrl = self.controller
+        if ctrl is not None and ctrl.plan is not None:
+            return ctrl.plan.residency()
+        pl = self.engine.placement
+        if pl is None:
+            return None
+        s2e = np.asarray(pl.slot_to_expert)          # [G, n_ep, S]
+        G, N, _ = s2e.shape
+        E = self.engine.rt.cfg.num_experts
+        res = np.zeros((G, N, E))
+        for l in range(G):
+            for n in range(N):
+                for e in s2e[l, n]:
+                    if e >= 0:
+                        res[l, n, int(e)] = 1.0
+        return res
 
     def loads(self) -> np.ndarray:
         """[N] backlog estimate (queued + active) per server."""
@@ -197,13 +250,24 @@ class _RuntimeBackend:
 
     def step(self) -> bool:
         had = self.pending
+        # residency BEFORE the round: this tick's dispatch rides the
+        # incumbent tables even when the review below completes a staged
+        # migration, so its bytes meter against the old links
+        res_before = self._residency() if self.meter is not None else None
         for rtm in self.runtimes:
             rtm.step()
         self.rounds += 1
-        if self.controller is not None:
-            dec = self.controller.review_and_apply(self.rounds, self.engine)
+        ctrl = self.controller
+        if ctrl is not None:
+            dec = ctrl.review_and_apply(self.rounds, self.engine)
             if dec is not None and dec.applied:
                 self.migrations.append(dec.diag)
+        if (self.meter is not None and res_before is not None
+                and res_before.shape == self.engine.stats.counts.shape):
+            # engine.stats is the engine's own plain accumulator (the
+            # meter needs true cumulative volumes, never a user-supplied
+            # EMA-decayed tracker)
+            self.meter.observe(self.engine.stats.counts, res_before)
         return had
 
     def run(self) -> None:
@@ -243,18 +307,22 @@ class _SimBackend:
 
     def __init__(self, spec: ClusterSpec, profile: MoEProfile, plan,
                  controller, router, tasks: dict | None, seed: int,
-                 ratio_bucket: float):
+                 ratio_bucket: float, topology: Topology | None = None):
         from repro.data.traces import Workload     # numpy-only
         from repro.serving.simulator import EdgeSimulator   # lazy: this
         #   module is imported by simulator.py (no import cycle at load)
         self.profile = profile
         self.seed = seed
+        self.topology = topology
         self.workload = Workload(requests=[], tasks=dict(tasks or {}),
                                  duration=0.0)
         self.sim = EdgeSimulator(spec, profile, self.workload, plan=plan,
                                  controller=controller, router=router,
-                                 seed=seed, ratio_bucket=ratio_bucket)
+                                 seed=seed, ratio_bucket=ratio_bucket,
+                                 topology=topology)
         self.controller = controller
+        self.meter = (TrafficMeter(topology, profile.hidden_bytes_per_token)
+                      if topology is not None else None)
         self.n = spec.n
         self._pending: list = []       # heap of (arrival, seq, sim_req, h)
         self._seq = 0
@@ -297,6 +365,12 @@ class _SimBackend:
         one event)."""
         if not self._pending:
             return False
+        self.sim.start()
+        # residency BEFORE this event: the request's dispatch is routed
+        # under the incumbent plan even when serving it completes a staged
+        # migration, so its bytes must meter against the old links
+        res_before = (None if self.sim._res is None
+                      else self.sim._res.copy())
         arrival, _, sim_req, handle = heapq.heappop(self._pending)
         if sim_req.server < 0:
             # origin-less: the router assigns the server against the live
@@ -317,6 +391,11 @@ class _SimBackend:
             slo=slo,
             slo_met=(bool(rec["latency"] <= slo)
                      if slo is not None else None))
+        if self.meter is not None and res_before is not None:
+            # _dispatch_counts, not the controller's (possibly EMA-decayed,
+            # possibly pre-primed) ActivationStats: metering needs the true
+            # cumulative per-origin volumes
+            self.meter.observe(self.sim._dispatch_counts, res_before)
         return True
 
     def run(self) -> None:
@@ -330,6 +409,9 @@ class _SimBackend:
 
     def local_ratio(self) -> np.ndarray:
         return self.sim.local_ratio_by_server()
+
+    def _expert_bytes(self) -> float:
+        return self.profile.expert_bytes
 
 
 class EdgeCluster:
@@ -357,6 +439,19 @@ class EdgeCluster:
                     a controller).
     tasks:          sim backend — {name: TaskProfile} activation profiles
                     (unknown task names get a generated profile).
+    topology:       optional ``repro.serving.net.Topology`` — one shared
+                    link-cost model for both backends: per-(src, dst)
+                    dispatch byte metering (``metrics()["net"]``),
+                    bandwidth-aware *staged* migration on the shared
+                    controller, per-link comm pricing in the sim time
+                    model, and (``shared_runtime=False``) per-server KV
+                    pools sized by each ``ServerProfile``'s memory cap.
+                    The sim backend can derive ``spec`` from it. Defaults
+                    to the controller's topology when it carries one. The
+                    runtime backend's tick clock converts modeled transfer
+                    *seconds* via ``controller.clock_rate`` (seconds per
+                    tick, default 1.0) — set it on the controller when a
+                    decode round is far from one second.
     """
 
     def __init__(self, backend: str = "runtime", *,
@@ -366,32 +461,49 @@ class EdgeCluster:
                  spec: ClusterSpec | None = None,
                  profile: MoEProfile | None = None, plan=None,
                  tasks: dict | None = None, seed: int = 0,
-                 ratio_bucket: float = 60.0):
+                 ratio_bucket: float = 60.0,
+                 topology: Topology | None = None):
         router = as_router(router)
+        if controller is not None:
+            topology = controller.attach_topology(topology)   # one shared
+            #   link model between the cluster and the control plane
         if backend == "runtime":
             if engine is None:
                 raise ValueError("runtime backend needs engine=")
             if n_servers is None:
                 n_servers = (engine.rt.ep_spec.n_ep
                              if engine.rt.ep_spec is not None else 1)
+            if topology is not None and topology.n != n_servers:
+                raise ValueError(
+                    f"topology has {topology.n} servers, cluster has "
+                    f"{n_servers}")
             self.backend = _RuntimeBackend(engine, n_servers, router,
                                            controller, shared_runtime,
-                                           dict(runtime_opts or {}))
+                                           dict(runtime_opts or {}),
+                                           topology=topology)
         elif backend == "sim":
+            if spec is None and topology is not None:
+                spec = topology.to_cluster_spec()
             if spec is None or profile is None:
-                raise ValueError("sim backend needs spec= and profile=")
+                raise ValueError(
+                    "sim backend needs spec= (or topology=) and profile=")
             if n_servers is not None and n_servers != spec.n:
                 raise ValueError(
                     f"n_servers={n_servers} != spec.n={spec.n}")
+            if topology is not None and topology.n != spec.n:
+                raise ValueError(
+                    f"topology has {topology.n} servers, spec has {spec.n}")
             n_servers = spec.n
             self.backend = _SimBackend(spec, profile, plan, controller,
-                                       router, tasks, seed, ratio_bucket)
+                                       router, tasks, seed, ratio_bucket,
+                                       topology=topology)
         else:
             raise ValueError(
                 f"unknown backend {backend!r}: expected 'runtime' or 'sim'")
         self.backend_name = backend
         self.n_servers = n_servers
         self.controller = controller
+        self.topology = topology
         self.handles: list[RequestHandle] = []
 
     # -- the portable surface ------------------------------------------
@@ -414,10 +526,58 @@ class EdgeCluster:
     def migrations(self) -> list:
         return self.backend.migrations
 
+    @property
+    def events(self) -> list[Event]:
+        """Cluster-level structured events (``rid = -1``): the staged
+        migration lifecycle of the shared control plane, in clock order —
+        ``MIGRATION_STARTED`` when a review adopts a plan and schedules
+        its transfers, ``MIGRATION_COMPLETED`` when the transfers finish
+        and the plan becomes active."""
+        out: list[Event] = []
+        ctrl = self.controller
+        for e in (ctrl.events if ctrl is not None else []):
+            if e.get("staged"):
+                out.append(Event(EventType.MIGRATION_STARTED, -1,
+                                 e["time"], dict(e)))
+            elif e.get("reason") == "migration-complete":
+                out.append(Event(EventType.MIGRATION_COMPLETED, -1,
+                                 e["time"], dict(e)))
+        return out
+
+    def _net_metrics(self) -> dict | None:
+        """The ``metrics()["net"]`` payload: per-link dispatch bytes from
+        the traffic meter, staged-migration totals from the controller's
+        event log, and the heterogeneous per-server budget caps."""
+        meter = getattr(self.backend, "meter", None)
+        if meter is None:
+            return None
+        out = meter.summary()
+        eb = self.backend._expert_bytes()
+        out["per_server_mem_gb"] = [
+            round(p.mem_bytes / 1e9, 3) for p in self.topology.profiles]
+        out["per_server_expert_budget"] = [
+            int(b) for b in self.topology.expert_budgets(eb)]
+        ctrl_events = (self.controller.events
+                       if self.controller is not None else [])
+        staged = [e for e in ctrl_events if e.get("staged")]
+        comp = [e for e in ctrl_events
+                if e.get("reason") == "migration-complete"]
+        out["migrations"] = {
+            "staged": len(staged),
+            "completed": len(comp),
+            "transfer_seconds": round(
+                sum(e["transfer_seconds"] for e in comp), 6),
+            "transfer_bytes": round(
+                sum(e["transfer_bytes"] for e in comp), 3),
+        }
+        return out
+
     def metrics(self) -> dict:
         """Per-server serving metrics in one backend-agnostic shape:
         submitted/served/finished/redirected request counts, mean latency
-        by origin (backend clock units) and the local-compute ratio."""
+        by origin (backend clock units) and the local-compute ratio. With
+        a topology attached, a ``net`` section adds the per-link dispatch
+        bytes, staged-migration totals and per-server budget caps."""
         N = self.n_servers
         submitted = np.zeros(N, int)
         served = np.zeros(N, int)
@@ -441,7 +601,7 @@ class EdgeCluster:
                     lat_sum[oo] += lat
                     lat_n[oo] += 1
         mean_lat = np.where(lat_n > 0, lat_sum / np.maximum(lat_n, 1), 0.0)
-        return {
+        out = {
             "backend": self.backend_name,
             "clock": self.backend.clock,
             "n_servers": N,
@@ -456,6 +616,10 @@ class EdgeCluster:
             },
             "redirected_total": int(redirected.sum()),
         }
+        net = self._net_metrics()
+        if net is not None:
+            out["net"] = net
+        return out
 
 
 def requests_from_workload(workload) -> list[Request]:

@@ -224,6 +224,12 @@ class ServingRuntime:
                  universe at ``log2(max_slots)`` decode variants; the dense
                  pool always decodes full width (its KV rows are
                  positional).
+    compact_prefill: the same bucketing for the batched ``prefill_chunk``
+                 call (paged mode only): only the *prefilling* slots ride
+                 each chunk round, padded to the next power-of-two width,
+                 instead of the fixed ``max_slots`` batch. ``prefill_rows``
+                 counts the rows actually executed (the compaction metric,
+                 mirroring ``decode_rows``).
     """
 
     def __init__(self, engine: ServingEngine, max_slots: int = 4,
@@ -231,7 +237,7 @@ class ServingRuntime:
                  paged: bool | None = None, block_size: int = 16,
                  n_blocks: int | None = None, max_pages: int | None = None,
                  chunks_per_tick: int = 1, prefix_cache: bool = True,
-                 compact_decode: bool = True):
+                 compact_decode: bool = True, compact_prefill: bool = True):
         self.engine = engine
         self.max_slots = max_slots
         self.controller = controller
@@ -272,6 +278,7 @@ class ServingRuntime:
         else:
             self.pool = tr.init_cache(engine.rt, max_slots, engine.max_len)
         self.compact_decode = compact_decode
+        self.compact_prefill = compact_prefill
         self.slots: list[_Slot | None] = [None] * max_slots
         self.queue: collections.deque[GenRequest] = collections.deque()
         self.finished: dict[int, np.ndarray] = {}
@@ -281,6 +288,7 @@ class ServingRuntime:
         self.max_concurrency = 0      # peak active slots in one decode batch
         self.max_admitted = 0         # peak concurrently admitted requests
         self.decode_rows = 0          # batch rows decoded (compaction metric)
+        self.prefill_rows = 0         # chunk-call rows issued (compaction)
         self.finished_at: dict[int, int] = {}   # rid -> tick of completion
         self.deferrals = 0            # admissions deferred on free blocks
         self.prefix_hits = 0          # admissions that reused cached pages
@@ -598,42 +606,54 @@ class ServingRuntime:
     # ------------------------------------------------------------------
     def _prefill_round(self) -> None:
         """Advance every prefilling slot by one block-aligned chunk per
-        batched jitted call, ``chunks_per_tick`` times. All prefilling
-        slots ride one fixed-width ``[max_slots, block_size]`` call (rows
-        of idle slots write the null block and are masked out of the
-        gating statistics). When a slot's final chunk lands, its first
-        token is sampled, its block-aligned prefix enters the radix cache,
-        and it joins the decode batch from the next round on."""
+        batched jitted call, ``chunks_per_tick`` times. With
+        ``compact_prefill`` only the prefilling slots ride the call,
+        padded to the next power-of-two bucket width (mirroring
+        ``compact_decode``; one jit variant per bucket); otherwise all
+        ``max_slots`` rows do. Rows without a prefilling slot write the
+        null block and are masked out of the gating statistics. When a
+        slot's final chunk lands, its first token is sampled, its
+        block-aligned prefix enters the radix cache, and it joins the
+        decode batch from the next round on."""
         bs = self.block_size
         for _ in range(self.chunks_per_tick):
             act = [i for i, s in enumerate(self.slots)
                    if s is not None and s.prefilling]
             if not act:
                 return
-            N = self.max_slots
-            toks = np.zeros((N, bs), np.int32)
-            mask = np.zeros((N, bs), np.float32)
-            offs = np.zeros((N,), np.int32)
-            lidx = np.zeros((N,), np.int32)
-            wb = np.zeros((N,), np.int32)      # idle rows -> null block 0
-            tbl = np.zeros((N, self.max_pages), np.int32)
-            meta: dict[int, tuple[bool, int]] = {}
-            for i in act:
+            if self.compact_prefill:
+                B = min(self.max_slots,
+                        1 << max(len(act) - 1, 0).bit_length())
+                row_slots: list[int | None] = act + [None] * (B - len(act))
+            else:
+                B = self.max_slots
+                row_slots = [i if i in act else None for i in range(B)]
+            toks = np.zeros((B, bs), np.int32)
+            mask = np.zeros((B, bs), np.float32)
+            offs = np.zeros((B,), np.int32)
+            lidx = np.zeros((B,), np.int32)
+            wb = np.zeros((B,), np.int32)      # idle rows -> null block 0
+            tbl = np.zeros((B, self.max_pages), np.int32)
+            meta: dict[int, tuple[bool, int, int]] = {}  # slot -> (final,
+            #                                              valid, batch row)
+            for j, i in enumerate(row_slots):
+                if i is None:
+                    continue
                 s = self.slots[i]
                 T = len(s.prompt)
                 c0 = s.filled
                 valid = min(bs, T - c0)
-                toks[i, :valid] = s.prompt[c0:c0 + valid]
-                mask[i, :valid] = 1.0
-                offs[i] = c0
-                wb[i] = s.pages[c0 // bs]
-                tbl[i] = self.page_table[i]
+                toks[j, :valid] = s.prompt[c0:c0 + valid]
+                mask[j, :valid] = 1.0
+                offs[j] = c0
+                wb[j] = s.pages[c0 // bs]
+                tbl[j] = self.page_table[i]
                 final = c0 + valid >= T
-                lidx[i] = (T - 1 - c0) if final else bs - 1
-                meta[i] = (final, valid)
+                lidx[j] = (T - 1 - c0) if final else bs - 1
+                meta[i] = (final, valid, j)
             org = self._origin_arg(
-                self.slots[i].origin if i in meta else None
-                for i in range(N))
+                self.slots[i].origin if i is not None else None
+                for i in row_slots)
             logits, self.pool, mstats = self._chunk_fn(
                 self.engine.params, self.pool, jnp.asarray(toks),
                 jnp.asarray(tbl), jnp.asarray(wb), jnp.asarray(offs),
@@ -641,17 +661,18 @@ class ServingRuntime:
                 jnp.asarray(mask), org)
             self.engine._ingest(mstats)
             self.prefill_calls += 1
+            self.prefill_rows += B
             self.chunks_executed += len(act)
             lg = None
             for i in act:
-                final, valid = meta[i]
+                final, valid, j = meta[i]
                 s = self.slots[i]
                 s.filled += valid
                 if not final:
                     continue
                 if lg is None:
                     lg = np.asarray(logits)
-                row = lg[i]
+                row = lg[j]
                 first = int(np.argmax(row))
                 s.pos = len(s.prompt)
                 s.last = first

@@ -18,7 +18,12 @@ reused or swapped independently:
      dense-path time.
   5. ``Timeline``           — per-server FIFO occupancy plus asynchronous
      remote-compute load on target servers; migration adds per-server
-     weight-loading pauses (Eq. 3).
+     weight-loading pauses (Eq. 3) — unless a ``repro.serving.net
+     .Topology`` is attached, in which case remote invocations price
+     their actual (origin -> replica) link and adopted plans migrate via
+     the bandwidth-aware *staged* executor (transfers scheduled over the
+     modeled links, overlapped with serving; the plan switches only when
+     they complete).
 
 Placement and migration run through the unified control plane
 (``repro.core.policies.PlacementController``): the simulator feeds it
@@ -108,10 +113,19 @@ class Router:
 
 class TimeModel:
     """Components 3 + 4: the linear per-token-batch comm/comp estimator and
-    the Eq.-1 per-layer completion semantics."""
+    the Eq.-1 per-layer completion semantics.
 
-    def __init__(self, cluster: ClusterSpec, profile: MoEProfile):
+    ``topology`` (a ``repro.serving.net.Topology``) replaces the uniform
+    ``cluster.bandwidth``/``rtt`` interconnect with per-link costs: remote
+    expert invocations price the actual (origin -> replica) link and the
+    replica choice minimizes earliest completion (queue + link), so a slow
+    WAN-ish link is avoided when a nearer replica exists. Without it the
+    legacy uniform model is bit-identical to before."""
+
+    def __init__(self, cluster: ClusterSpec, profile: MoEProfile,
+                 topology=None):
         self.cluster, self.profile = cluster, profile
+        self.topology = topology
         self.speeds = np.array([s.compute_speed for s in cluster.servers])
         self.io = np.array([s.io_speed for s in cluster.servers])
 
@@ -142,9 +156,25 @@ class TimeModel:
         if remote.any():
             free_m = np.where(res_l.T[remote] > 0, timeline.free[None],
                               np.inf)                     # [R, N]
-            tgt = np.argmin(free_m, axis=-1)
-            comm = (2 * counts[remote] * pf.hidden_bytes_per_token
-                    / self.cluster.bandwidth + self.cluster.rtt)
+            if self.topology is not None:
+                # per-link pricing: candidate replica n costs its queue
+                # plus the (server -> n) dispatch and the (n -> server)
+                # return for this batch — each leg at its own link (they
+                # differ on asymmetric topologies)
+                per_tok = (pf.hidden_bytes_per_token
+                           / self.topology.bandwidth[server]
+                           + pf.hidden_bytes_per_token
+                           / self.topology.bandwidth[:, server])     # [N]
+                lat2 = (self.topology.latency[server]
+                        + self.topology.latency[:, server])          # [N]
+                comm_m = (counts[remote][:, None] * per_tok[None, :]
+                          + lat2[None, :])                           # [R, N]
+                tgt = np.argmin(free_m + comm_m, axis=-1)
+                comm = comm_m[np.arange(len(tgt)), tgt]
+            else:
+                tgt = np.argmin(free_m, axis=-1)
+                comm = (2 * counts[remote] * pf.hidden_bytes_per_token
+                        / self.cluster.bandwidth + self.cluster.rtt)
             comp = comp_b[remote] / self.speeds[tgt]
             timeline.add_async(tgt, comp)                 # async load
             worst = max(worst, float((comm + comp).max()))
@@ -238,7 +268,7 @@ class EdgeSimulator:
                  workload: Workload, plan: PlacementPlan | None = None,
                  controller=None, mode: str = "collab",
                  redirect: bool = False, seed: int = 0,
-                 ratio_bucket: float = 60.0, router=None):
+                 ratio_bucket: float = 60.0, router=None, topology=None):
         """mode: 'collab' (distributed expert calls under `plan`) or
         'offload' (each server caches its own top experts; misses load
         weights from host RAM — the MoE-Infinity-style baseline).
@@ -246,20 +276,30 @@ class EdgeSimulator:
         ``MigrationController`` shim).
         redirect: route each request to the least-loaded server first
         (sugar for ``router=LeastLoadedRouter()``).
-        router: a ``repro.serving.api.Router`` (overrides ``redirect``)."""
+        router: a ``repro.serving.api.Router`` (overrides ``redirect``).
+        topology: optional ``repro.serving.net.Topology`` — per-link
+        comm costs in the time model and bandwidth-aware *staged*
+        migration (an adopted plan activates only after its modeled
+        transfers finish, replacing the instantaneous Eq.-3 pause).
+        Defaults to the controller's topology when it has one."""
         assert mode in ("collab", "offload")
         if mode == "collab" and plan is None and controller is None:
             raise ValueError("collab mode needs a plan or a controller")
         self.cluster, self.profile, self.workload = cluster, profile, workload
         self.plan = plan
         self.controller = self._unwrap(controller)
+        if self.controller is not None:
+            # one shared link model; the profile knows m_e for transfers
+            topology = self.controller.attach_topology(
+                topology, expert_bytes=profile.expert_bytes)
+        self.topology = topology
         self.mode = mode
         self.rng = np.random.default_rng(seed)
         self.source = ArrivalSource(workload)
         self.router = (as_router(router) if router is not None
                        else LeastLoadedRouter() if redirect
                        else HomeRouter())
-        self.time_model = TimeModel(cluster, profile)
+        self.time_model = TimeModel(cluster, profile, topology=topology)
         self.ratio_bucket = ratio_bucket
         self._started = False
 
@@ -327,6 +367,11 @@ class EdgeSimulator:
         self._migrations: list = []
         self._hits_by_server = np.zeros(N)
         self._tot_by_server = np.zeros(N)
+        # plain cumulative per-origin activation counts for the traffic
+        # meter — deliberately NOT the controller's ActivationStats, which
+        # may be EMA-decayed (metering needs true volumes, and must not
+        # count pre-primed historical stats as dispatched traffic)
+        self._dispatch_counts = np.zeros((L, N, E))
         self._started = True
 
     def serve_request(self, r: Request) -> dict:
@@ -368,12 +413,33 @@ class EdgeSimulator:
         self._hits_by_server[n] += req_hits
         self._tot_by_server[n] += req_tot
         self._stats.update_server(r.server, layer_counts)
+        self._dispatch_counts[:, r.server, :] += layer_counts
         ratio.roll(done)
 
         migrated = False
         if ctrl is not None:
+            comp = ctrl.poll(done)
+            if comp is not None:
+                # staged transfers finished: switch plans with no stall —
+                # the link schedule already charged the move (overlapped
+                # with serving), replacing the instantaneous Eq.-3 pause
+                new_res = comp.plan.residency()
+                added = np.maximum(new_res - self._res, 0).sum(0).sum(-1)
+                self._migrations.append({
+                    "time": done, "completed": True,
+                    "staged_at": comp.started, "eta": comp.eta,
+                    "transfer_seconds": comp.seconds,
+                    "transfer_bytes": comp.nbytes,
+                    "added_per_server": added.tolist()})
+                self._plan, self._res = comp.plan, new_res
+                migrated = True
             dec = ctrl.review(done)
-            if dec.adopted:
+            if dec.adopted and dec.staged:
+                self._migrations.append({
+                    "time": done, "staged": True, "eta": dec.diag["eta"],
+                    "transfers": dec.diag["transfers"],
+                    "transfer_bytes": dec.diag["transfer_bytes"]})
+            elif dec.adopted and not dec.staged:
                 new_res = dec.plan.residency()
                 delays, added = tm.migration_pause(self._res, new_res)  # Eq.3
                 timeline.pause(delays)

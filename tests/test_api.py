@@ -383,13 +383,13 @@ def test_cluster_sim_slo_and_step():
 
 
 # ---------------------------------------------------------------------------
-# bench-serving/v2 schema (satellite): cluster section validation
+# bench-serving/v3 schema (satellite): cluster + net section validation
 # ---------------------------------------------------------------------------
 
-def _v2_doc():
+def _v3_doc():
     pair = {"cache": 2, "nocache": 1}
     return {
-        "schema": "bench-serving/v2", "mode": "smoke",
+        "schema": "bench-serving/v3", "mode": "smoke",
         "metrics": {
             "admitted_concurrency": dict(pair),
             "prefill_chunks_executed": dict(pair),
@@ -404,17 +404,29 @@ def _v2_doc():
                 "per_server_routed": [3, 4, 5],
                 "per_server_local_ratio": [0.5, 0.75, 1.0],
                 "redirected_total": 0,
+                "per_server_mem_gb": [12.0, 12.0, 24.0],
+            },
+            "net": {
+                "n_servers": 3,
+                "link_dispatch_bytes": [[0, 10, 20], [10, 0, 5],
+                                        [20, 5, 0]],
+                "cross_server_bytes": 70.0,
+                "migration_transfer_seconds": 1.5,
+                "migration_transfer_bytes": 3e6,
+                "migrations_completed": 1,
+                "per_server_mem_gb": [0.2, 0.2, 0.1],
+                "per_server_expert_budget": [64, 64, 32],
             },
         },
     }
 
 
-def test_schema_v2_accepts_and_rejects():
+def test_schema_v3_accepts_and_rejects():
     import sys
     import os
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     from benchmarks.schema import BenchSchemaError, validate_bench_serving
-    assert validate_bench_serving(_v2_doc())
+    assert validate_bench_serving(_v3_doc())
     for mutate in (
         lambda d: d["metrics"].pop("cluster"),
         lambda d: d["metrics"]["cluster"].pop("per_server_local_ratio"),
@@ -423,9 +435,19 @@ def test_schema_v2_accepts_and_rejects():
             per_server_local_ratio=[0.5, 0.75, 1.5]),            # ratio > 1
         lambda d: d["metrics"]["cluster"].update(
             per_server_admitted=[0, 0, 0]),                      # empty run
-        lambda d: d.update(schema="bench-serving/v1"),           # stale tag
+        lambda d: d["metrics"]["cluster"].pop("per_server_mem_gb"),  # v3
+        lambda d: d["metrics"].pop("net"),                       # v3
+        lambda d: d["metrics"]["net"].pop("link_dispatch_bytes"),
+        lambda d: d["metrics"]["net"].update(
+            link_dispatch_bytes=[[0, 1], [1, 0]]),               # not n x n
+        lambda d: d["metrics"]["net"].update(
+            link_dispatch_bytes=[[0, 1, -2], [1, 0, 1],
+                                 [1, 1, 0]]),                    # negative
+        lambda d: d["metrics"]["net"].update(cross_server_bytes=0),  # empty
+        lambda d: d["metrics"]["net"].pop("migration_transfer_seconds"),
+        lambda d: d.update(schema="bench-serving/v2"),           # stale tag
     ):
-        doc = _v2_doc()
+        doc = _v3_doc()
         mutate(doc)
         with pytest.raises(BenchSchemaError):
             validate_bench_serving(doc)

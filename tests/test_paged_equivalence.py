@@ -483,3 +483,29 @@ def test_submit_validates_against_pool_capacity():
     with pytest.raises(ValueError):
         rtm.enqueue(Request(prompt=src.sample(1, 126)[0],
                     max_new_tokens=8))        # 133 > 128 positions
+
+
+def test_compact_prefill_token_identity_and_row_savings():
+    """Satellite: bucketing the batched ``prefill_chunk`` call at
+    power-of-two occupied-slot widths (mirroring ``compact_decode``) is
+    output-invariant — and a staggered stream over a wide pool executes
+    strictly fewer batch rows than the fixed ``max_slots`` width. (The
+    randomized property suite above runs with the bucketing ON, so this
+    pins the OFF path and the savings.)"""
+    eng, src, refs = _engine(False)
+    jobs = [dict(prompt=src.sample(1, plen)[0], steps=3, arrival=a)
+            for plen, a in ((24, 0), (17, 0), (12, 3), (8, 5))]
+    outs, rows = {}, {}
+    for compact in (True, False):
+        rtm = ServingRuntime(eng, max_slots=8, block_size=BLOCK_SIZE,
+                             n_blocks=65, compact_prefill=compact)
+        outs[compact] = _drive(rtm, jobs)
+        rows[compact] = rtm.prefill_rows
+        assert rtm.chunks_executed == sum(-(-len(j["prompt"]) // BLOCK_SIZE)
+                                          for j in jobs)
+    for j in jobs:
+        ref = _reference(eng, refs, j["prompt"], j["steps"])
+        np.testing.assert_array_equal(outs[True][id(j)], ref)
+        np.testing.assert_array_equal(outs[False][id(j)], ref)
+    # <= 4 slots ever prefill together: buckets of 1/2/4 vs always 8
+    assert rows[True] < rows[False]
