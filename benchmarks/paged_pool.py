@@ -100,6 +100,24 @@ def main(csv: bool = False):
         print(f"paged_pool,paged_peak_admitted,{paged['peak_admitted']}")
         print(f"paged_pool,admitted_ratio,{ratio:.2f}")
 
+    # AOT-warmed zero-stall leg on the equal-memory pool: same stream, no
+    # mid-stream jit traces, decode rounds chained on device
+    warm_rtm = ServingRuntime(eng, max_slots=N_REQUESTS,
+                              block_size=BLOCK_SIZE, n_blocks=equal_blocks,
+                              warmup=True, warmup_origins="untagged")
+    warm = serve(warm_rtm, prompts, STEPS)
+    p = warm_rtm.perf_metrics()
+    print(f"warmed pool ({equal_blocks - 1}x{BLOCK_SIZE}): "
+          f"aot={p['executables_compiled']} exes in "
+          f"{p['warmup_seconds']:.1f}s "
+          f"retraces={p['traces_after_warmup']} stalls={p['host_syncs']} "
+          f"decode_round_ms p50={p['decode_round_ms']['p50']:.2f} "
+          f"mean_latency={warm['mean_latency_ticks']:.1f} ticks")
+    if csv:
+        print(f"paged_pool,warm_decode_round_ms_p50,"
+              f"{p['decode_round_ms']['p50']:.3f}")
+        print(f"paged_pool,warm_retraces,{p['traces_after_warmup']}")
+
     # latency-vs-blocks sweep: shrink the pool below the dense budget and
     # watch deferrals trade memory for queueing latency
     print("\n# latency vs pool size (paged, same request stream)")

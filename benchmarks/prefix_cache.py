@@ -21,7 +21,10 @@ admitted/locality/routing metrics of an ``EdgeCluster`` run
 DanceMoE controller — since v3 with the testbed lifted into a
 ``serving.net.Topology``, so the section also reports the heterogeneous
 per-server memory caps; the ``metrics.net`` link/migration section comes
-from ``benchmarks.topology``). The
+from ``benchmarks.topology``; since v4 a third serving leg runs with
+``warmup=True`` — AOT bucket-ladder compile + zero-stall loop — and fills
+``metrics.perf`` with the warmup cost, retrace/stall counters and
+decode-round/TTFT percentiles). The
 CPU test config (mixtral-8x7b reduced, dense MoE impl — identical
 attention/paging code paths, no shard_map overhead) runs anywhere tier-1
 runs.
@@ -84,7 +87,7 @@ def serve(rtm: ServingRuntime, prompts, steps: int) -> dict:
     submitted, tick_s = {}, []
     queue = list(prompts)
     tick = 0
-    while queue or rtm.queue or rtm.active:
+    while queue or rtm.queue or rtm.active or rtm._pending:
         for p in queue[:ARRIVALS_PER_TICK]:
             h = rtm.enqueue(Request(prompt=p, max_new_tokens=steps))
             submitted[h.rid] = tick
@@ -93,6 +96,7 @@ def serve(rtm: ServingRuntime, prompts, steps: int) -> dict:
         rtm.step()
         tick_s.append(time.perf_counter() - t0)
         tick += 1
+    rtm.flush()            # zero-stall loop: apply any still-pending round
     lat = [rtm.finished_at[r] - t0_tick for r, t0_tick in submitted.items()]
     return {
         "peak_admitted": rtm.max_admitted,
@@ -111,13 +115,21 @@ def serve(rtm: ServingRuntime, prompts, steps: int) -> dict:
 
 
 def measure(eng, n_requests: int, n_blocks: int, max_slots: int):
+    """cache-off / cache-on legs (the v1 comparison) plus the AOT-warmed
+    zero-stall leg whose perf counters fill ``metrics.perf`` (v4)."""
     prompts = build_stream(eng.rt.cfg.vocab_size, n_requests)
     out = {}
-    for label, cache_on in (("nocache", False), ("cache", True)):
+    for label, opts in (
+            ("nocache", {"prefix_cache": False}),
+            ("cache", {"prefix_cache": True}),
+            ("warm", {"prefix_cache": True, "warmup": True,
+                      "warmup_origins": "untagged"})):
         rtm = ServingRuntime(eng, max_slots=max_slots,
                              block_size=BLOCK_SIZE, n_blocks=n_blocks,
-                             prefix_cache=cache_on)
+                             **opts)
         out[label] = serve(rtm, prompts, STEPS)
+        if label == "warm":
+            out["perf"] = rtm.perf_metrics()
     return out
 
 
@@ -173,7 +185,7 @@ def to_bench_doc(r: dict, *, mode: str, n_requests: int,
     chunk_ratio = r["nocache"]["chunks_executed"] / max(
         r["cache"]["chunks_executed"], 1)
     return {
-        "schema": "bench-serving/v3",
+        "schema": "bench-serving/v4",
         "mode": mode,
         "config": {
             "arch": "mixtral-8x7b(reduced)",
@@ -210,6 +222,9 @@ def to_bench_doc(r: dict, *, mode: str, n_requests: int,
                 "nocache": r["nocache"]["mean_latency_ticks"],
             },
             "cluster": cluster,
+            # v4: AOT bucket-ladder warmup + zero-stall loop counters from
+            # the warmed serving leg
+            "perf": r["perf"],
         },
     }
 
@@ -242,6 +257,13 @@ def main(csv: bool = False):
               f"peak_admitted={s['peak_admitted']} "
               f"mean_latency={s['mean_latency_ticks']:.1f} ticks "
               f"deferrals={s['deferrals']}")
+    p = m["perf"]
+    print(f"warm    : aot={p['executables_compiled']} exes in "
+          f"{p['warmup_seconds']:.1f}s "
+          f"retraces={p['traces_after_warmup']} stalls={p['host_syncs']} "
+          f"decode_round_ms p50={p['decode_round_ms']['p50']:.2f} "
+          f"p99={p['decode_round_ms']['p99']:.2f} "
+          f"ttft_ms p50={p['ttft_ms']['p50']:.2f}")
     print(f"prefill-compute reduction: {ratio:.1f}x "
           f"({'>= 2x OK' if ratio >= 2 else 'BELOW TARGET'}); "
           f"admitted concurrency {m['admitted_concurrency']['nocache']} -> "

@@ -12,6 +12,7 @@ land in every CI run or the gate fails loudly.
   PYTHONPATH=src python -m benchmarks.run [--csv]
   PYTHONPATH=src python -m benchmarks.run --smoke [--out BENCH_serving.json]
 """
+
 from __future__ import annotations
 
 import json
@@ -26,30 +27,46 @@ def smoke(out_path: str) -> None:
 
     t0 = time.time()
     doc = prefix_cache.smoke()
-    doc["metrics"]["net"] = topology.smoke()    # v3: non-uniform-topology
+    doc["metrics"]["net"] = topology.smoke()  # v3: non-uniform-topology
     #   run (per-link dispatch bytes, staged-migration transfer totals)
     doc["elapsed_s"] = round(time.time() - t0, 2)
-    validate_bench_serving(doc)          # raises (non-zero exit) on breakage
+    validate_bench_serving(doc)  # raises (non-zero exit) on breakage
     with open(out_path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
         f.write("\n")
     m = doc["metrics"]
-    print(f"wrote {out_path} in {doc['elapsed_s']}s: "
-          f"chunk_reduction={m['prefill_chunk_reduction']:.2f}x "
-          f"admitted {m['admitted_concurrency']['nocache']} -> "
-          f"{m['admitted_concurrency']['cache']} "
-          f"decode_round={m['decode_round_latency_s']['mean'] * 1e3:.1f}ms")
+    print(
+        f"wrote {out_path} in {doc['elapsed_s']}s: "
+        f"chunk_reduction={m['prefill_chunk_reduction']:.2f}x "
+        f"admitted {m['admitted_concurrency']['nocache']} -> "
+        f"{m['admitted_concurrency']['cache']} "
+        f"decode_round={m['decode_round_latency_s']['mean'] * 1e3:.1f}ms"
+    )
     c = m["cluster"]
-    print(f"cluster[v2]: {int(c['n_servers'])} servers "
-          f"admitted={c['per_server_admitted']} "
-          f"local_ratio={c['per_server_local_ratio']} "
-          f"redirected={int(c['redirected_total'])}")
+    print(
+        f"cluster[v2]: {int(c['n_servers'])} servers "
+        f"admitted={c['per_server_admitted']} "
+        f"local_ratio={c['per_server_local_ratio']} "
+        f"redirected={int(c['redirected_total'])}"
+    )
     n = m["net"]
-    print(f"net[v3]: cross_server={n['cross_server_bytes']:.3g}B "
-          f"(uniform {n['cross_server_bytes_by_policy']['uniform']:.3g}B) "
-          f"migrations={int(n['migrations_completed'])} "
-          f"transfer={n['migration_transfer_seconds']:.3g}s "
-          f"mem_gb={n['per_server_mem_gb']}")
+    print(
+        f"net[v3]: cross_server={n['cross_server_bytes']:.3g}B "
+        f"(uniform {n['cross_server_bytes_by_policy']['uniform']:.3g}B) "
+        f"migrations={int(n['migrations_completed'])} "
+        f"transfer={n['migration_transfer_seconds']:.3g}s "
+        f"mem_gb={n['per_server_mem_gb']}"
+    )
+    p = m["perf"]
+    print(
+        f"perf[v4]: warmup={p['warmup_seconds']:.1f}s "
+        f"({int(p['executables_compiled'])} executables) "
+        f"retraces={int(p['traces_after_warmup'])} "
+        f"stalls={int(p['host_syncs'])} "
+        f"decode_round_ms p50={p['decode_round_ms']['p50']:.2f} "
+        f"p99={p['decode_round_ms']['p99']:.2f} "
+        f"ttft_ms p50={p['ttft_ms']['p50']:.2f}"
+    )
 
 
 def main() -> None:
@@ -63,8 +80,6 @@ def main() -> None:
         smoke(out)
         return
 
-    import benchmarks.table1 as table1
-    import benchmarks.table2 as table2
     import benchmarks.fig5 as fig5
     import benchmarks.fig6 as fig6
     import benchmarks.fig7 as fig7
@@ -72,6 +87,8 @@ def main() -> None:
     import benchmarks.paged_pool as paged_pool
     import benchmarks.prefix_cache as prefix_cache
     import benchmarks.roofline_table as roofline_table
+    import benchmarks.table1 as table1
+    import benchmarks.table2 as table2
     import benchmarks.topology as topology
 
     csv = "--csv" in sys.argv

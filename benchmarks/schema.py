@@ -6,24 +6,25 @@ The document is intentionally small and versioned: every CI run uploads
 one, so schema breaks show up as a failed gate — not as a silently empty
 perf history. Validation is dependency-free (no jsonschema install on the
 runner)."""
+
 from __future__ import annotations
 
-SCHEMA_NAME = "bench-serving/v3"
+SCHEMA_NAME = "bench-serving/v4"
 
 # metric key -> ("scalar" | "pair" | "stats") shape requirement.
 # v2 extended v1 (same keys, same shapes) with the EdgeCluster section;
 # v3 adds the heterogeneous-topology section (``metrics.net``) and the
-# per-server profile caps — extend, don't fork, when adding serving
-# metrics.
+# per-server profile caps; v4 adds the AOT warmup / zero-stall section
+# (``metrics.perf``) — extend, don't fork, when adding serving metrics.
 _REQUIRED_METRICS = {
-    "admitted_concurrency": "pair",        # {"cache": n, "nocache": n}
+    "admitted_concurrency": "pair",  # {"cache": n, "nocache": n}
     "prefill_chunks_executed": "pair",
     "prefill_chunk_reduction": "scalar",
     "prefix_hits": "scalar",
     "prefill_tokens_skipped": "scalar",
     "cow_copies": "scalar",
     "deferrals": "pair",
-    "decode_round_latency_s": "stats",     # {"mean": s, "p95": s}
+    "decode_round_latency_s": "stats",  # {"mean": s, "p95": s}
     "mean_latency_ticks": "pair",
 }
 
@@ -32,11 +33,11 @@ _REQUIRED_METRICS = {
 # v3 adds the heterogeneous profile caps each server ran under.
 _REQUIRED_CLUSTER = {
     "n_servers": "scalar",
-    "per_server_admitted": "list",         # requests admitted per origin
-    "per_server_routed": "list",           # requests routed to each server
-    "per_server_local_ratio": "list",      # local-compute ratio in [0, 1]
-    "redirected_total": "scalar",          # requests served off-origin
-    "per_server_mem_gb": "list",           # heterogeneous memory caps
+    "per_server_admitted": "list",  # requests admitted per origin
+    "per_server_routed": "list",  # requests routed to each server
+    "per_server_local_ratio": "list",  # local-compute ratio in [0, 1]
+    "redirected_total": "scalar",  # requests served off-origin
+    "per_server_mem_gb": "list",  # heterogeneous memory caps
 }
 
 # v3: metrics.net — the topology/communication section produced by
@@ -45,13 +46,26 @@ _REQUIRED_CLUSTER = {
 # non-negative numbers.
 _REQUIRED_NET = {
     "n_servers": "scalar",
-    "link_dispatch_bytes": "matrix",       # per-(src, dst) dispatch bytes
+    "link_dispatch_bytes": "matrix",  # per-(src, dst) dispatch bytes
     "cross_server_bytes": "scalar",
     "migration_transfer_seconds": "scalar",  # staged-migration link time
     "migration_transfer_bytes": "scalar",
     "migrations_completed": "scalar",
     "per_server_mem_gb": "list",
     "per_server_expert_budget": "list",
+}
+
+# v4: metrics.perf — AOT bucket-ladder warmup + zero-stall decode loop
+# ("p50p99" = {"p50": ms, "p99": ms}). Produced by the warmed serving leg
+# of ``benchmarks.prefix_cache``.
+_REQUIRED_PERF = {
+    "warmup_seconds": "scalar",  # wall time of the AOT compile pass
+    "executables_compiled": "scalar",  # bucket-ladder size
+    "traces_after_warmup": "scalar",  # jit retraces past warmup (want 0)
+    "host_syncs": "scalar",  # blocking host waits (stall count)
+    "rounds_timed": "scalar",  # decode rounds behind the percentiles
+    "decode_round_ms": "p50p99",  # per-round wall time, warmed loop
+    "ttft_ms": "p50p99",  # wall-clock time to first token
 }
 
 
@@ -75,7 +89,8 @@ def validate_bench_serving(doc) -> dict:
         raise BenchSchemaError("document must be a non-empty JSON object")
     if doc.get("schema") != SCHEMA_NAME:
         raise BenchSchemaError(
-            f"schema: expected {SCHEMA_NAME!r}, got {doc.get('schema')!r}")
+            f"schema: expected {SCHEMA_NAME!r}, got {doc.get('schema')!r}"
+        )
     if doc.get("mode") not in ("smoke", "full"):
         raise BenchSchemaError(f"mode: invalid {doc.get('mode')!r}")
     metrics = doc.get("metrics")
@@ -96,8 +111,10 @@ def validate_bench_serving(doc) -> dict:
                 raise BenchSchemaError(f"metrics.{key}.{f}: missing")
             _num(sub, f"metrics.{key}", f)
     # an all-zero serving run means the benchmark didn't actually serve
-    if metrics["admitted_concurrency"]["cache"] < 1 \
-            or metrics["prefill_chunks_executed"]["nocache"] < 1:
+    if (
+        metrics["admitted_concurrency"]["cache"] < 1
+        or metrics["prefill_chunks_executed"]["nocache"] < 1
+    ):
         raise BenchSchemaError("metrics: empty run (nothing was served)")
 
     # -- v2: the EdgeCluster per-server section ---------------------------
@@ -107,10 +124,12 @@ def validate_bench_serving(doc) -> dict:
     _validate_section(cluster, "metrics.cluster", _REQUIRED_CLUSTER)
     if any(x > 1.0 for x in cluster["per_server_local_ratio"]):
         raise BenchSchemaError(
-            "metrics.cluster.per_server_local_ratio: ratio > 1")
+            "metrics.cluster.per_server_local_ratio: ratio > 1"
+        )
     if sum(cluster["per_server_admitted"]) < 1:
         raise BenchSchemaError(
-            "metrics.cluster: empty cluster run (nothing was served)")
+            "metrics.cluster: empty cluster run (nothing was served)"
+        )
 
     # -- v3: the topology/communication section ---------------------------
     net = metrics.get("net")
@@ -120,7 +139,35 @@ def validate_bench_serving(doc) -> dict:
     if net["cross_server_bytes"] <= 0:
         raise BenchSchemaError(
             "metrics.net.cross_server_bytes: empty run (no dispatch "
-            "traffic was metered)")
+            "traffic was metered)"
+        )
+
+    # -- v4: the AOT warmup / zero-stall perf section ---------------------
+    perf = metrics.get("perf")
+    if not isinstance(perf, dict) or not perf:
+        raise BenchSchemaError("metrics.perf: missing or empty (v4)")
+    for key, kind in _REQUIRED_PERF.items():
+        if key not in perf:
+            raise BenchSchemaError(f"metrics.perf.{key}: missing")
+        if kind == "scalar":
+            _num(perf, "metrics.perf", key)
+            continue
+        sub = perf[key]
+        if not isinstance(sub, dict):
+            raise BenchSchemaError(f"metrics.perf.{key}: expected an object")
+        for f in ("p50", "p99"):
+            if f not in sub:
+                raise BenchSchemaError(f"metrics.perf.{key}.{f}: missing")
+            _num(sub, f"metrics.perf.{key}", f)
+    # an unwarmed or idle perf section means the warmed leg didn't run
+    if perf["executables_compiled"] < 1:
+        raise BenchSchemaError(
+            "metrics.perf.executables_compiled: empty (no AOT warmup ran)"
+        )
+    if perf["decode_round_ms"]["p50"] <= 0 or perf["rounds_timed"] < 1:
+        raise BenchSchemaError(
+            "metrics.perf.decode_round_ms: empty (no decode rounds timed)"
+        )
     return doc
 
 
@@ -136,10 +183,10 @@ def _validate_section(sec: dict, path: str, required: dict) -> None:
         if not isinstance(v, list) or len(v) != length:
             raise BenchSchemaError(
                 f"{path}.{key}: expected a list of {length} numbers, "
-                f"got {v!r}")
+                f"got {v!r}"
+            )
         for i, x in enumerate(v):
-            if not isinstance(x, (int, float)) or isinstance(x, bool) \
-                    or x < 0:
+            if not isinstance(x, (int, float)) or isinstance(x, bool) or x < 0:
                 raise BenchSchemaError(f"{path}.{key}[{i}]: invalid {x!r}")
 
     for key, kind in required.items():
@@ -153,6 +200,7 @@ def _validate_section(sec: dict, path: str, required: dict) -> None:
             rows = sec[key]
             if not isinstance(rows, list) or len(rows) != n:
                 raise BenchSchemaError(
-                    f"{path}.{key}: expected {n} rows, got {rows!r}")
+                    f"{path}.{key}: expected {n} rows, got {rows!r}"
+                )
             for r, row in enumerate(rows):
                 check_row(row, f"{key}[{r}]", n)

@@ -19,7 +19,7 @@ bytes (asserted — the acceptance gate for the topology subsystem).
   PYTHONPATH=src python -m benchmarks.topology [--csv]
 
 ``smoke()`` returns the ``metrics.net`` section of ``BENCH_serving.json``
-(``bench-serving/v3``) on a smaller stream for the CI ``bench-smoke`` job.
+(since ``bench-serving/v3``) on a smaller stream for the CI ``bench-smoke`` job.
 """
 from __future__ import annotations
 
@@ -139,7 +139,7 @@ def measure(n_requests: int, seed: int = 0) -> dict:
 
 
 def net_section(results: dict, topo: Topology) -> dict:
-    """The ``metrics.net`` section of ``bench-serving/v3``: the dancemoe
+    """The ``metrics.net`` section (since ``bench-serving/v3``): the dancemoe
     run's per-link/migration numbers plus the cross-policy comparison."""
     dm = results["dancemoe"]
     pf = BENCH_PROFILE

@@ -56,6 +56,10 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="tokens of system prompt shared by all requests "
                     "(demonstrates prefix-cache hits; 0 = disjoint prompts)")
+    ap.add_argument("--warmup", action="store_true",
+                    help="AOT-compile the full compaction bucket ladder "
+                    "before serving and run the zero-stall decode loop "
+                    "(paged pool only; pays compile time up front)")
     ap.add_argument("--policy", default="dancemoe", choices=list_policies())
     ap.add_argument("--review-rounds", type=int, default=16,
                     help="placement review period in decode rounds")
@@ -101,12 +105,19 @@ def main():
     engine = ServingEngine(rt=rt, params=params, placement=pls,
                            dense_master=dense_master,
                            max_len=args.prompt + args.steps + 8)
+    if args.warmup and args.dense_pool:
+        ap.error("--warmup needs the paged pool (drop --dense-pool)")
     runtime = ServingRuntime(engine, max_slots=args.slots,
                              controller=controller,
                              paged=False if args.dense_pool else None,
                              block_size=args.block_size,
                              n_blocks=args.blocks,
-                             prefix_cache=args.prefix_cache)
+                             prefix_cache=args.prefix_cache,
+                             warmup=args.warmup,
+                             warmup_origins="untagged")
+    if args.warmup:
+        print(f"warmup: {runtime.executables_compiled} executables in "
+              f"{runtime.warmup_seconds:.1f}s")
     src = TaskTokenSource("serve", cfg.vocab_size, seed=0)
     if cfg.frontend != "none":
         print(f"{cfg.name}: modality frontend is stubbed; serving over "
@@ -136,6 +147,13 @@ def main():
           f"deferrals={runtime.deferrals} "
           f"prefix_cache[{cache}] "
           f"migrations={len(runtime.migrations)}")
+    if args.warmup:
+        p = runtime.perf_metrics()
+        print(f"zero-stall: traces_after_warmup={p['traces_after_warmup']} "
+              f"host_syncs={p['host_syncs']} "
+              f"decode_round_ms p50={p['decode_round_ms']['p50']:.2f} "
+              f"p99={p['decode_round_ms']['p99']:.2f} "
+              f"ttft_ms p50={p['ttft_ms']['p50']:.2f}")
 
 
 if __name__ == "__main__":

@@ -389,6 +389,9 @@ def copy_pool_block(cache: dict, src, dst, block_axis: int = 0) -> dict:
     ``block_axis`` selects the blocks dimension: 0 for a single-layer pool
     ``[n_blocks, bs, KVH, *]``, 1 for the grouped stacks
     ``[n_groups, n_blocks, bs, KVH, *]``.
+
+    Same-shape functional update on every leaf — safe to compile with the
+    pool donated (the serving engine's AOT copy-block executable does).
     """
     pre = (slice(None),) * block_axis
 

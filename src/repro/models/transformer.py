@@ -401,7 +401,14 @@ def decode_step(rt: Runtime, params, cache, tokens, pos, placement=None,
     pool (``init_paged_cache``) and each row reads/writes through its pages.
     origin: optional [B] int32 originating EP rank per row (stats
     attribution).
-    Returns (logits [B, V], new_cache, moe_stats)."""
+    Returns (logits [B, V], new_cache, moe_stats).
+
+    Donation-safe: ``new_cache`` is a pure functional ``.at[].set()``
+    update of ``cache`` with identical shapes/dtypes per leaf, so callers
+    may jit/AOT-compile with the cache donated (``donate_argnums``) and
+    XLA aliases the update in place — the serving engine's zero-stall
+    decode path relies on this (no per-step pool allocation). Never return
+    a leaf whose shape/dtype differs from its input."""
     h = _embed(rt, params, tokens)
     paged = {"page_table": page_table} if page_table is not None else None
     h, new_cache, mstats = _run_stack(rt, params, h, mode="decode",
@@ -439,7 +446,11 @@ def prefill_chunk(rt: Runtime, params, cache, tokens, page_table,
     token_mask: optional [B, bs] float — 0 for padding tokens (excluded
     from the MoE gating statistics).
     origin: optional [B] int32 originating EP rank per row.
-    Returns (logits [B, V], new_cache, moe_stats)."""
+    Returns (logits [B, V], new_cache, moe_stats).
+
+    Donation-safe like ``decode_step``: every ``new_cache`` leaf is a
+    same-shape functional update of the input pool, so the chunked-prefill
+    executables compile with the pool donated."""
     h = _embed(rt, params, tokens)
     paged = {"page_table": page_table, "write_blocks": write_blocks}
     h, new_cache, mstats = _run_stack(rt, params, h, mode="chunk",
@@ -458,7 +469,9 @@ def copy_paged_block(pool, src, dst):
     """Copy one physical block across every layer of a paged pool (the
     serving-side copy-on-write primitive: clone a shared tail block before
     a sharer's first write). ``pool`` is the ``init_paged_cache`` pytree
-    (leading n_groups dim per layer); src/dst are scalar block ids."""
+    (leading n_groups dim per layer); src/dst are scalar block ids.
+    Donation-safe (same-shape functional update): the engine AOT-compiles
+    it with the pool donated so CoW clones allocate nothing."""
     return {k: attn.copy_pool_block(c, src, dst, block_axis=1)
             for k, c in pool.items()}
 

@@ -89,6 +89,12 @@ class Request:
                      backend serves in submission order).
     task:            task-profile name (sim backend: selects the activation
                      distribution its time model samples from).
+    eos:             optional stop-token id: generation ends early when the
+                     model emits it (the EOS token itself is kept in the
+                     output, matching ``max_new_tokens`` truncation of the
+                     same stream). Under the runtime's zero-stall loop the
+                     stop is detected at most one decode round late — the
+                     token stream is unaffected.
     """
     prompt: np.ndarray
     max_new_tokens: int
@@ -97,6 +103,7 @@ class Request:
     slo: float | None = None
     arrival: float | None = None
     task: str | None = None
+    eos: int | None = None
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -112,6 +119,8 @@ class Request:
             raise ValueError(f"slo must be positive (got {self.slo})")
         if self.origin is not None and self.origin < 0:
             raise ValueError(f"origin must be >= 0 (got {self.origin})")
+        if self.eos is not None and self.eos < 0:
+            raise ValueError(f"eos must be >= 0 (got {self.eos})")
 
 
 class RequestHandle:

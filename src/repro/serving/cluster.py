@@ -246,7 +246,8 @@ class _RuntimeBackend:
 
     @property
     def pending(self) -> bool:
-        return any(r.queue or r.active for r in self.runtimes)
+        return any(r.queue or r.active or r._pending
+                   for r in self.runtimes)
 
     def step(self) -> bool:
         had = self.pending
@@ -273,6 +274,36 @@ class _RuntimeBackend:
     def run(self) -> None:
         while self.pending:
             self.step()
+        for rtm in self.runtimes:
+            rtm.flush()
+
+    def perf(self) -> dict:
+        """Cluster-wide ``metrics.perf`` section: warmup cost and retrace/
+        stall counters summed over the member runtimes, decode-round and
+        TTFT wall-time percentiles pooled over every round they served."""
+        rounds: list[float] = []
+        ttft: list[float] = []
+        for r in self.runtimes:
+            rounds.extend(r.decode_round_s)
+            ttft.extend(r.ttft_s)
+
+        def pct(xs):
+            if not xs:
+                return {"p50": 0.0, "p99": 0.0}
+            return {"p50": round(float(np.percentile(xs, 50)) * 1e3, 6),
+                    "p99": round(float(np.percentile(xs, 99)) * 1e3, 6)}
+        return {
+            "warmup_seconds": round(sum(r.warmup_seconds
+                                        for r in self.runtimes), 6),
+            "executables_compiled": sum(r.executables_compiled
+                                        for r in self.runtimes),
+            "traces_after_warmup": sum(r.traces_after_warmup
+                                       for r in self.runtimes),
+            "host_syncs": sum(r.host_syncs for r in self.runtimes),
+            "rounds_timed": len(rounds),
+            "decode_round_ms": pct(rounds),
+            "ttft_ms": pct(ttft),
+        }
 
     def local_ratio(self) -> np.ndarray:
         """[N] observed local-compute ratio per origin server: activation
@@ -433,7 +464,10 @@ class EdgeCluster:
                     vs one ``ServingRuntime`` (own KV pool/decode batch)
                     per server.
     runtime_opts:   runtime backend — kwargs forwarded to each
-                    ``ServingRuntime`` (max_slots, block_size, ...).
+                    ``ServingRuntime`` (max_slots, block_size,
+                    ``warmup=True`` for the AOT bucket ladder + zero-stall
+                    loop, ...); ``metrics()["perf"]`` aggregates the
+                    members' warmup/retrace/stall/latency counters.
     spec/profile:   sim backend — ``ClusterSpec`` + ``MoEProfile``.
     plan:           sim backend — static ``PlacementPlan`` (alternative to
                     a controller).
@@ -616,6 +650,12 @@ class EdgeCluster:
             },
             "redirected_total": int(redirected.sum()),
         }
+        perf = getattr(self.backend, "perf", None)
+        if perf is not None:
+            # runtime backend only: AOT warmup cost, retrace/stall counters
+            # and decode-round / TTFT wall-time percentiles (the sim
+            # backend models time, so wall-clock perf is meaningless there)
+            out["perf"] = perf()
         net = self._net_metrics()
         if net is not None:
             out["net"] = net

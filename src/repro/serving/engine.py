@@ -2,10 +2,30 @@
 MoE layer, activation-stats collection, and zero-recompile placement
 migration (the placement tables are jit arguments; migrating re-gathers the
 EP weight slots from the dense master copy — the on-device analogue of the
-paper's expert transfer)."""
+paper's expert transfer).
+
+The paged step functions thread a device-resident *last-token buffer*
+(``last_buf``, ``[max_slots + 1]`` int32 — one entry per serving slot plus
+a trailing scratch entry that padding rows read and write) through every
+call: the decode argmax is computed on device and scattered back into the
+buffer, so the next round's inputs never depend on a host round-trip. The
+runtime's zero-stall loop (``ServingRuntime(warmup=True)``) only fetches
+the small ``[B]`` sampled-token vector, asynchronously, one round behind.
+
+``warmup_paged`` ahead-of-time compiles the full compaction bucket ladder
+(every power-of-two batch width the runtime's ``compact_decode`` /
+``compact_prefill`` bucketing can produce) via ``jax.jit(...).lower(...)
+.compile()`` with the pool and last-token buffer *donated*, so steady-state
+decode re-uses its own KV buffers instead of allocating. Executables are
+cached on the engine keyed like ``_paged_fns`` plus the batch width and
+origin mode, and ``self.traces`` counts Python traces so a runtime can
+assert the hot loop never traces after warmup.
+"""
+
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 import jax
@@ -20,9 +40,9 @@ from repro.models import transformer as tr
 @dataclasses.dataclass
 class ServingEngine:
     rt: tr.Runtime
-    params: Any                        # EP-layout params (jit arg)
-    placement: Any                     # stacked EPPlacement [G, ...]
-    dense_master: Any = None           # dense expert weights (for migration)
+    params: Any  # EP-layout params (jit arg)
+    placement: Any  # stacked EPPlacement [G, ...]
+    dense_master: Any = None  # dense expert weights (for migration)
     max_len: int = 256
 
     def __post_init__(self):
@@ -36,65 +56,274 @@ class ServingEngine:
         _, self.n_groups = cfg.layer_pattern()
         n_ep = rt.ep_spec.n_ep if rt.ep_spec else 1
         self.stats = ActivationStats(self.n_groups, n_ep, cfg.num_experts)
-        self.last_local_frac: float | None = None   # most recent step's
+        self.last_local_frac: float | None = None  # most recent step's
         #   mean local-dispatch fraction (serving-side locality signal)
+        self.traces = 0  # Python traces of the serving step fns: the
+        #   counter lives in the traced bodies, so compiled executables
+        #   (and cache hits) never move it — a zero delta across a serving
+        #   run proves the hot loop re-used compiled code throughout
 
         def _prefill(params, tokens, placement, origin=None):
-            return tr.prefill(rt, params, tokens=tokens, placement=placement,
-                              cache_len=self.max_len, origin=origin)
+            self.traces += 1
+            return tr.prefill(
+                rt,
+                params,
+                tokens=tokens,
+                placement=placement,
+                cache_len=self.max_len,
+                origin=origin,
+            )
 
-        def _decode(params, cache, tokens, pos, placement, token_mask=None,
-                    origin=None):
-            return tr.decode_step(rt, params, cache, tokens, pos, placement,
-                                  token_mask=token_mask, origin=origin)
+        def _decode(
+            params, cache, tokens, pos, placement, token_mask=None, origin=None
+        ):
+            self.traces += 1
+            return tr.decode_step(
+                rt,
+                params,
+                cache,
+                tokens,
+                pos,
+                placement,
+                token_mask=token_mask,
+                origin=origin,
+            )
 
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode)
-        self._copy_block = jax.jit(tr.copy_paged_block)
+
+        def _copy_block(pool, src, dst):
+            self.traces += 1
+            return tr.copy_paged_block(pool, src, dst)
+
+        self._copy_block = jax.jit(_copy_block)
+        self._copy_block_raw = _copy_block
         self._paged_fns: dict = {}
+        self._paged_raw: dict = {}
+        self._compiled: dict = {}  # (kind, block_size, max_pages, B,
+        #   tagged) -> AOT executable (kind: "chunk" | "dec"; "copy" is
+        #   keyed ("copy", n_blocks, block_size))
 
     # ------------------------------------------------------------------
     def paged_step_fns(self, block_size: int, max_pages: int):
         """Jitted (prefill_chunk, decode) pair for a paged KV pool. The
         chunk function consumes one block-aligned chunk of *every*
-        prefilling slot per call (batched multi-slot prefill). The
-        functions specialize on array shapes; the (block_size, max_pages)
-        key only keeps one cached pair per pool geometry."""
+        prefilling slot per call (batched multi-slot prefill). Both thread
+        the last-token buffer: ``rows`` maps batch row -> slot index (the
+        trailing scratch entry for padding rows), decode gathers its input
+        tokens from ``last_buf`` and both scatter their on-device argmax
+        back into it, so consecutive rounds chain without a host transfer.
+        The functions specialize on array shapes; the (block_size,
+        max_pages) key only keeps one cached pair per pool geometry."""
         key = (block_size, max_pages)
         if key not in self._paged_fns:
             rt = self.rt
 
-            def _chunk(params, pool, tokens, page_table, write_blocks,
-                       offset, last_idx, placement, token_mask, origin=None):
-                return tr.prefill_chunk(rt, params, pool, tokens, page_table,
-                                        write_blocks, offset, last_idx,
-                                        placement, token_mask=token_mask,
-                                        origin=origin)
+            def _chunk(
+                params,
+                pool,
+                last_buf,
+                rows,
+                tokens,
+                page_table,
+                write_blocks,
+                offset,
+                last_idx,
+                placement,
+                token_mask,
+                origin=None,
+            ):
+                self.traces += 1
+                logits, pool, mstats = tr.prefill_chunk(
+                    rt,
+                    params,
+                    pool,
+                    tokens,
+                    page_table,
+                    write_blocks,
+                    offset,
+                    last_idx,
+                    placement,
+                    token_mask=token_mask,
+                    origin=origin,
+                )
+                # seed the decode chain: rows whose final chunk just landed
+                # read their first token from last_buf next round (partial
+                # chunks scatter a value no decode round will ever gather)
+                first = jnp.argmax(logits, -1).astype(jnp.int32)
+                last_buf = last_buf.at[rows].set(first)
+                return last_buf, logits, pool, mstats
 
-            def _dec(params, pool, tokens, pos, page_table, placement,
-                     token_mask=None, origin=None):
-                return tr.decode_step(rt, params, pool, tokens, pos,
-                                      placement, token_mask=token_mask,
-                                      page_table=page_table, origin=origin)
+            def _dec(
+                params,
+                pool,
+                last_buf,
+                rows,
+                pos,
+                page_table,
+                placement,
+                token_mask,
+                origin=None,
+            ):
+                self.traces += 1
+                cur = last_buf[rows][:, None]
+                logits, pool, mstats = tr.decode_step(
+                    rt,
+                    params,
+                    pool,
+                    cur,
+                    pos,
+                    placement,
+                    token_mask=token_mask,
+                    page_table=page_table,
+                    origin=origin,
+                )
+                nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+                last_buf = last_buf.at[rows].set(nxt)
+                return last_buf, nxt, pool, mstats
 
             self._paged_fns[key] = (jax.jit(_chunk), jax.jit(_dec))
+            self._paged_raw[key] = (_chunk, _dec)
         return self._paged_fns[key]
+
+    # ------------------------------------------------------------------
+    def paged_executable(
+        self, kind: str, block_size: int, max_pages: int, B: int, tagged: bool
+    ):
+        """AOT executable for one (step kind, pool geometry, batch width,
+        origin mode) point of the warmed ladder, or None when that point
+        was not warmed (callers fall back to the lazy jit path)."""
+        return self._compiled.get((kind, block_size, max_pages, B, tagged))
+
+    def warmup_paged(
+        self,
+        *,
+        block_size: int,
+        max_pages: int,
+        max_slots: int,
+        pool,
+        last_buf,
+        origins: str = "both",
+    ) -> dict:
+        """Ahead-of-time compile the paged serving ladder for one pool
+        geometry: every compaction bucket width (powers of two up to
+        ``max_slots``, plus ``max_slots`` itself) x {prefill chunk, decode}
+        x the requested origin modes, plus the copy-on-write block clone.
+        ``pool``/``last_buf`` are the runtime's live buffers — lowering
+        only reads their avals; the compiled executables *donate* both, so
+        steady-state rounds update the KV pool in place.
+
+        origins: "both" (default), "tagged" (per-request origin arrays) or
+        "untagged" — a runtime that knows its stream mode can halve the
+        ladder.
+
+        Returns {"seconds": wall_time, "executables": ladder_size} —
+        the number of ladder executables this runtime serves from (cached
+        entries included). Already-compiled ladder points (same engine,
+        same geometry) are skipped, so a second runtime warms for free."""
+        t0 = time.perf_counter()
+        ladder = 0
+        geometry = (block_size, max_pages)
+        self.paged_step_fns(*geometry)  # ensure the raw fns exist
+        chunk_raw, dec_raw = self._paged_raw[geometry]
+        widths = []
+        w = 1
+        while w < max_slots:
+            widths.append(w)
+            w <<= 1
+        widths.append(max_slots)
+        tag_modes = {
+            "both": (False, True),
+            "tagged": (True,),
+            "untagged": (False,),
+        }[origins]
+        for B in widths:
+            rows = jnp.full((B,), max_slots, jnp.int32)
+            toks = jnp.zeros((B, block_size), jnp.int32)
+            cmask = jnp.zeros((B, block_size), jnp.float32)
+            vec = jnp.zeros((B,), jnp.int32)
+            tbl = jnp.zeros((B, max_pages), jnp.int32)
+            dmask = jnp.zeros((B,), jnp.float32)
+            for tagged in tag_modes:
+                org = jnp.zeros((B,), jnp.int32) if tagged else None
+                key = ("chunk", block_size, max_pages, B, tagged)
+                if key not in self._compiled:
+                    self._compiled[key] = (
+                        jax.jit(chunk_raw, donate_argnums=(1, 2))
+                        .lower(
+                            self.params,
+                            pool,
+                            last_buf,
+                            rows,
+                            toks,
+                            tbl,
+                            vec,
+                            vec,
+                            vec,
+                            self.placement,
+                            cmask,
+                            org,
+                        )
+                        .compile()
+                    )
+                ladder += 1
+                key = ("dec", block_size, max_pages, B, tagged)
+                if key not in self._compiled:
+                    self._compiled[key] = (
+                        jax.jit(dec_raw, donate_argnums=(1, 2))
+                        .lower(
+                            self.params,
+                            pool,
+                            last_buf,
+                            rows,
+                            vec,
+                            tbl,
+                            self.placement,
+                            dmask,
+                            org,
+                        )
+                        .compile()
+                    )
+                ladder += 1
+        n_blocks = self._pool_n_blocks(pool)
+        key = ("copy", n_blocks, block_size)
+        if key not in self._compiled:
+            self._compiled[key] = (
+                jax.jit(self._copy_block_raw, donate_argnums=0)
+                .lower(pool, jnp.int32(0), jnp.int32(0))
+                .compile()
+            )
+        ladder += 1
+        return {"seconds": time.perf_counter() - t0, "executables": ladder}
+
+    @staticmethod
+    def _pool_n_blocks(pool) -> int:
+        """Physical block count of an ``init_paged_cache`` pool (leaf
+        layout ``[n_groups, n_blocks, block_size, ...]``)."""
+        leaf = jax.tree.leaves(pool)[0]
+        return int(leaf.shape[1])
 
     # ------------------------------------------------------------------
     def copy_block(self, pool, src: int, dst: int):
         """Copy one physical block across every layer of a paged pool —
         the runtime's copy-on-write primitive (clone a shared tail block
-        before a sharer's first write)."""
-        return self._copy_block(pool, jnp.int32(src), jnp.int32(dst))
+        before a sharer's first write). Routed through the warmed donated
+        executable when the pool geometry was warmed."""
+        leaf = jax.tree.leaves(pool)[0]
+        exe = self._compiled.get(
+            ("copy", int(leaf.shape[1]), int(leaf.shape[2]))
+        )
+        fn = exe if exe is not None else self._copy_block
+        return fn(pool, jnp.int32(src), jnp.int32(dst))
 
     # ------------------------------------------------------------------
-    def generate(self, tokens: np.ndarray, steps: int = 16,
-                 greedy: bool = True):
+    def generate(self, tokens: np.ndarray, steps: int = 16, greedy: bool = True):
         """tokens: [B, T] prompt. Returns (generated [B, steps], stats)."""
         B, T = tokens.shape
         assert T + steps <= self.max_len
-        logits, cache, mstats = self._prefill(self.params, jnp.asarray(tokens),
-                                              self.placement)
+        logits, cache, mstats = self._prefill(
+            self.params, jnp.asarray(tokens), self.placement
+        )
         # counts_per_rank are raw token counts: a T-token prefill already
         # carries T x the mass of one decode step, so no extra weighting.
         self._ingest(mstats)
@@ -104,14 +333,16 @@ class ServingEngine:
         for i in range(steps):
             outs.append(cur)
             logits, cache, mstats = self._decode(
-                self.params, cache, cur, jnp.int32(T + i), self.placement)
+                self.params, cache, cur, jnp.int32(T + i), self.placement
+            )
             self._ingest(mstats)
             if mstats is not None:
                 local_fracs.append(float(mstats["local_frac"].mean()))
             cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         gen = jnp.concatenate(outs, axis=1)
         return np.asarray(gen), {
-            "local_frac": float(np.mean(local_fracs)) if local_fracs else 1.0}
+            "local_frac": float(np.mean(local_fracs)) if local_fracs else 1.0
+        }
 
     def _ingest(self, mstats, weight: float = 1.0):
         """Feed gating statistics to the scheduler-side tracker. ``weight``
@@ -124,20 +355,27 @@ class ServingEngine:
         self.stats.update(counts)
         if "local_frac" in mstats:
             self.last_local_frac = float(
-                np.asarray(mstats["local_frac"]).mean())
+                np.asarray(mstats["local_frac"]).mean()
+            )
 
     # ------------------------------------------------------------------
     def migrate(self, new_placement_stacked) -> None:
         """Adopt a new placement: re-gather EP expert slots from the dense
         master weights (if available) and swap the tables. No recompile —
-        placement tables and weights are both jit arguments."""
+        placement tables and weights are both jit arguments, and the AOT
+        executables stay valid because the re-gathered arrays keep their
+        shapes and dtypes."""
         self.placement = jax.tree.map(jnp.asarray, new_placement_stacked)
         if self.dense_master is None:
             return
         regathered = moe_mod.regather_ep_groups(
-            self.dense_master, self.placement, self.n_groups)
-        moe_groups = {k: v for k, v in regathered.items()
-                      if "router" in self.dense_master[k]}
+            self.dense_master, self.placement, self.n_groups
+        )
+        moe_groups = {
+            k: v
+            for k, v in regathered.items()
+            if "router" in self.dense_master[k]
+        }
         params = dict(self.params)
         params["groups"] = {**self.params["groups"], **moe_groups}
         self.params = params

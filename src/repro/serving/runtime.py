@@ -42,6 +42,28 @@ of ``max_len`` positions and prefills whole prompts in one call; it remains
 for architectures whose caches cannot be paged (SSM state, sliding-window
 rings) and as the reference implementation for the equivalence suite.
 
+``warmup=True`` (paged mode) turns on the **AOT-warmed zero-stall loop**:
+
+* at construction, ``engine.warmup_paged`` ahead-of-time compiles every
+  compaction bucket width of the decode and chunked-prefill ladders (with
+  the pool and the device-resident last-token buffer *donated*), so no
+  occupancy change ever pays a jit trace mid-stream — asserted via
+  ``traces_after_warmup``;
+* each decode round gathers its input tokens from the device-resident
+  last-token buffer and scatters its argmax back into it, so round ``k+1``
+  launches without waiting for round ``k``'s tokens to reach the host;
+* the host-side work — token events, EOS / ``max_new_tokens`` stop
+  detection, retirement, KV release, gating-stats ingestion — moves to a
+  **backlog** of pending round records, drained at the end of the *next*
+  tick from an async host copy started at launch, overlapped with the
+  in-flight device step. Length stops are enforced at launch (the
+  ``launched`` budget), so they never lag; EOS stops are detected at
+  drain, at most **one round late** — the single extra speculative decode
+  provably writes inside the slot's held pages and its token is never
+  emitted. Token streams and retirement/KV-release semantics are
+  identical to the synchronous loop; only their tick of emission may lag
+  by one. ``flush()`` force-drains the backlog (``run()`` ends drained).
+
 Outputs are token-identical to sequential ``generate()`` calls in both
 modes — with or without the prefix cache — as long as the EP dispatch
 capacities are not saturated (rows are independent in attention; the MoE
@@ -60,6 +82,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 import warnings
 
 import jax
@@ -81,6 +104,7 @@ class GenRequest:
     prompt: np.ndarray            # [T] int32
     max_new_tokens: int
     origin: int | None = None     # originating server (EP rank) for stats
+    eos: int | None = None        # stop token (truncates max_new_tokens)
 
 
 @dataclasses.dataclass
@@ -90,8 +114,12 @@ class _Slot:
     pos: int                      # next cache write position
     last: int                     # last emitted token (next decode input)
     tokens: list                  # emitted tokens so far
-    need: int                     # total tokens to emit
+    need: int                     # total tokens to emit (shrunk on EOS)
     origin: int | None = None     # originating server (stats attribution)
+    eos: int | None = None        # stop token (None = length stop only)
+    launched: int = 0             # tokens whose computation was launched;
+    #   drives decode-batch composition so length stops never need a
+    #   drained result (zero-stall loop: tokens lag launches by <= 1 round)
     # paged-mode state
     pages: list = dataclasses.field(default_factory=list)
     prompt: np.ndarray | None = None   # full prompt (kept for cache insert)
@@ -105,6 +133,25 @@ class _Slot:
     @property
     def prefilling(self) -> bool:
         return self.prompt is not None and self.filled < len(self.prompt)
+
+
+@dataclasses.dataclass
+class _Pending:
+    """One launched-but-undrained round (the zero-stall backlog record).
+
+    Holds the *device* result arrays of a decode round or a prefill chunk
+    call — their host copies are started at launch
+    (``copy_to_host_async``) and consumed one tick later, overlapped with
+    the next round's device step. ``rows`` maps batch row -> (slot index,
+    rid at launch); the rid guard makes drains robust to the slot having
+    retired (EOS lag) or been re-assigned meanwhile."""
+    kind: str                     # "decode" | "prefill"
+    tick: int                     # tick the round was launched on
+    rows: list                    # [(batch row, slot idx, rid)] — decode:
+    #   every live row; prefill: only rows whose final chunk landed
+    nxt: object = None            # decode: [B] int32 sampled tokens
+    logits: object = None         # prefill: [B, V] final-position logits
+    mstats: object = None         # gating stats (ingested at drain)
 
 
 class BlockAllocator:
@@ -230,6 +277,19 @@ class ServingRuntime:
                  instead of the fixed ``max_slots`` batch. ``prefill_rows``
                  counts the rows actually executed (the compaction metric,
                  mirroring ``decode_rows``).
+    warmup:      paged mode only — AOT-compile the full compaction bucket
+                 ladder at construction (``engine.warmup_paged``: donated
+                 pool + last-token buffer, one executable per bucket width
+                 x step kind x origin mode) and serve with the zero-stall
+                 round structure: decode rounds chain on device through
+                 the last-token buffer, host-side token/stop/retirement
+                 work drains from a one-round-lagged async backlog (see
+                 the module docstring). ``warmup_seconds`` /
+                 ``executables_compiled`` / ``traces_after_warmup`` /
+                 ``host_syncs`` and ``perf_metrics()`` expose the result.
+    warmup_origins: which origin modes to precompile ("both" — default —
+                 "tagged" or "untagged"): a caller that knows its stream
+                 is origin-tagged (or knows it is not) can halve warmup.
     """
 
     def __init__(self, engine: ServingEngine, max_slots: int = 4,
@@ -237,7 +297,8 @@ class ServingRuntime:
                  paged: bool | None = None, block_size: int = 16,
                  n_blocks: int | None = None, max_pages: int | None = None,
                  chunks_per_tick: int = 1, prefix_cache: bool = True,
-                 compact_decode: bool = True, compact_prefill: bool = True):
+                 compact_decode: bool = True, compact_prefill: bool = True,
+                 warmup: bool = False, warmup_origins: str = "both"):
         self.engine = engine
         self.max_slots = max_slots
         self.controller = controller
@@ -275,8 +336,28 @@ class ServingRuntime:
             self.page_table = np.zeros((max_slots, self.max_pages), np.int32)
             self._chunk_fn, self._decode_fn = engine.paged_step_fns(
                 block_size, self.max_pages)
+            # device-resident last-token buffer: one entry per slot plus a
+            # trailing scratch entry that padding batch rows read/write
+            self._last_buf = jnp.zeros((max_slots + 1,), jnp.int32)
         else:
             self.pool = tr.init_cache(engine.rt, max_slots, engine.max_len)
+        if warmup and not paged:
+            raise ValueError(
+                "warmup=True requires the paged pool (the AOT bucket "
+                "ladder and the zero-stall loop are paged-mode features)")
+        self.warmup = bool(warmup)
+        self.warmup_seconds = 0.0
+        self.executables_compiled = 0
+        if warmup:
+            w = engine.warmup_paged(
+                block_size=self.block_size, max_pages=self.max_pages,
+                max_slots=max_slots, pool=self.pool,
+                last_buf=self._last_buf, origins=warmup_origins)
+            self.warmup_seconds = w["seconds"]
+            self.executables_compiled = w["executables"]
+        # trace floor: traces_after_warmup counts engine traces past this
+        # point (for warmup=False runtimes: traces since construction)
+        self._traces_at_warmup = engine.traces
         self.compact_decode = compact_decode
         self.compact_prefill = compact_prefill
         self.slots: list[_Slot | None] = [None] * max_slots
@@ -296,7 +377,16 @@ class ServingRuntime:
         self.prefill_calls = 0        # jitted chunk calls issued
         self.chunks_executed = 0      # per-slot chunks consumed (compute)
         self.cow_copies = 0           # copy-on-write tail clones
+        self.host_syncs = 0           # blocking host waits on device data
+        #   (sync loop: one per decode round / final prefill chunk; the
+        #   zero-stall loop counts only drains whose async copy had not
+        #   finished — its steady-state value is the stall count)
+        self.decode_round_s: list[float] = []   # per-round wall time of
+        #   the decode segment (launch [+ backlog drain] [+ token fetch])
+        self.ttft_s: list[float] = []  # wall-clock time to first token
         self.migrations: list = []
+        self._pending: collections.deque[_Pending] = collections.deque()
+        self._t_enqueue: dict[int, float] = {}   # rid -> perf_counter()
         self._next_rid = 0
         self._origin_mode: str | None = None   # 'tagged' | 'untagged'
 
@@ -371,10 +461,12 @@ class ServingRuntime:
                 f"exceeds the pool's max_len={self.engine.max_len}")
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(GenRequest(rid, prompt, max_new_tokens, origin))
+        self.queue.append(GenRequest(rid, prompt, max_new_tokens, origin,
+                                     getattr(request, "eos", None)))
         handle = RequestHandle(rid, request, clock="ticks")
         handle.submitted_at = self.ticks
         self.handles[rid] = handle
+        self._t_enqueue[rid] = time.perf_counter()
         return handle
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int,
@@ -408,6 +500,34 @@ class ServingRuntime:
         """Fraction of admitted requests that reused cached prefix pages."""
         n = len(self.finished) + self.active
         return self.prefix_hits / n if n else 0.0
+
+    @property
+    def traces_after_warmup(self) -> int:
+        """Engine step-fn Python traces since this runtime finished its
+        warmup (since construction when ``warmup=False``). A warmed
+        runtime serving alone on its engine keeps this at 0 — the retrace
+        regression guard. Note the counter is engine-wide: concurrent
+        unwarmed runtimes sharing the engine move it too."""
+        return self.engine.traces - self._traces_at_warmup
+
+    def perf_metrics(self) -> dict:
+        """The ``metrics.perf`` section of the bench schema: warmup cost,
+        retrace/stall counters and decode-round / time-to-first-token
+        wall-time percentiles (milliseconds)."""
+        def pct(xs):
+            if not xs:
+                return {"p50": 0.0, "p99": 0.0}
+            return {"p50": round(float(np.percentile(xs, 50)) * 1e3, 6),
+                    "p99": round(float(np.percentile(xs, 99)) * 1e3, 6)}
+        return {
+            "warmup_seconds": round(self.warmup_seconds, 6),
+            "executables_compiled": self.executables_compiled,
+            "traces_after_warmup": self.traces_after_warmup,
+            "host_syncs": self.host_syncs,
+            "rounds_timed": len(self.decode_round_s),
+            "decode_round_ms": pct(self.decode_round_s),
+            "ttft_ms": pct(self.ttft_s),
+        }
 
     # ------------------------------------------------------------------
     def _free_slot_ids(self) -> list[int]:
@@ -496,8 +616,8 @@ class ServingRuntime:
         self.page_table[i] = 0
         self.page_table[i, :len(pages)] = pages
         slot = _Slot(rid=r.rid, pos=0, last=-1, tokens=[],
-                     need=r.max_new_tokens, origin=r.origin, pages=pages,
-                     prompt=r.prompt, filled=m.tokens,
+                     need=r.max_new_tokens, origin=r.origin, eos=r.eos,
+                     pages=pages, prompt=r.prompt, filled=m.tokens,
                      prefix_skipped=m.tokens)
         self.slots[i] = slot
         self._emit(r.rid, EventType.ADMITTED, slot=i, server=r.origin,
@@ -513,10 +633,12 @@ class ServingRuntime:
             # deterministic, so this is bit-equal to running prefill)
             first = int(np.argmax(m.logits))
             slot.pos = T
-            slot.last = first
-            slot.tokens = [first]
+            slot.launched = 1
             slot.final_logits = m.logits
-            self._emit(r.rid, EventType.TOKEN, token=first)
+            # seed the device decode chain too: the slot joins the decode
+            # batch before any chunk call scatters a token for its row
+            self._last_buf = self._last_buf.at[i].set(first)
+            self._append_token(slot, first)
             self._retire_if_done(i)
         return True
 
@@ -543,16 +665,33 @@ class ServingRuntime:
             self.pool = self._write_rows(self.pool, cache, idx)
             first = np.asarray(jnp.argmax(logits, -1), np.int32)   # [b]
             for j, r in enumerate(group):
-                slot = _Slot(rid=r.rid, pos=T, last=int(first[j]),
-                             tokens=[int(first[j])], need=r.max_new_tokens,
-                             origin=r.origin)
+                slot = _Slot(rid=r.rid, pos=T, last=-1, tokens=[],
+                             need=r.max_new_tokens, origin=r.origin,
+                             eos=r.eos, launched=1)
                 self.slots[free[j]] = slot
                 self._emit(r.rid, EventType.ADMITTED, slot=free[j],
                            server=r.origin)
-                self._emit(r.rid, EventType.TOKEN, token=int(first[j]))
+                self._append_token(slot, int(first[j]))
                 self._retire_if_done(free[j])
             admitted += len(group)
         return admitted
+
+    def _append_token(self, slot: _Slot, tok: int) -> None:
+        """Record one drained token: handle events, time-to-first-token,
+        and EOS stop detection (the stop shrinks ``need`` to the tokens
+        already emitted, so ``_retire_if_done`` fires and — in the
+        zero-stall loop — any extra already-launched speculative round is
+        dropped by the drain-side rid guard)."""
+        slot.last = tok
+        slot.tokens.append(tok)
+        if len(slot.tokens) == 1:
+            t0 = self._t_enqueue.pop(slot.rid, None)
+            if t0 is not None:
+                self.ttft_s.append(time.perf_counter() - t0)
+        self._emit(slot.rid, EventType.TOKEN, token=tok)
+        if (slot.eos is not None and tok == slot.eos
+                and len(slot.tokens) < slot.need):
+            slot.need = len(slot.tokens)
 
     def _retire_if_done(self, i: int) -> bool:
         slot = self.slots[i]
@@ -614,7 +753,10 @@ class ServingRuntime:
         null block and are masked out of the gating statistics. When a
         slot's final chunk lands, its first token is sampled, its
         block-aligned prefix enters the radix cache, and it joins the
-        decode batch from the next round on."""
+        decode batch from the next round on. One batched host transfer of
+        the final-position logits is issued per chunk call (lazily — only
+        when some slot finished); the zero-stall loop starts it
+        asynchronously and consumes it at the next tick's drain."""
         bs = self.block_size
         for _ in range(self.chunks_per_tick):
             act = [i for i, s in enumerate(self.slots)
@@ -628,18 +770,20 @@ class ServingRuntime:
             else:
                 B = self.max_slots
                 row_slots = [i if i in act else None for i in range(B)]
+            rows = np.full((B,), self.max_slots, np.int32)   # pad rows ->
+            #   the last-token buffer's trailing scratch entry
             toks = np.zeros((B, bs), np.int32)
             mask = np.zeros((B, bs), np.float32)
             offs = np.zeros((B,), np.int32)
             lidx = np.zeros((B,), np.int32)
             wb = np.zeros((B,), np.int32)      # idle rows -> null block 0
             tbl = np.zeros((B, self.max_pages), np.int32)
-            meta: dict[int, tuple[bool, int, int]] = {}  # slot -> (final,
-            #                                              valid, batch row)
+            finals: list[tuple[int, int, int]] = []   # (row, slot, rid)
             for j, i in enumerate(row_slots):
                 if i is None:
                     continue
                 s = self.slots[i]
+                rows[j] = i
                 T = len(s.prompt)
                 c0 = s.filled
                 valid = min(bs, T - c0)
@@ -650,37 +794,57 @@ class ServingRuntime:
                 tbl[j] = self.page_table[i]
                 final = c0 + valid >= T
                 lidx[j] = (T - 1 - c0) if final else bs - 1
-                meta[i] = (final, valid, j)
+                s.filled += valid
+                if final:
+                    # launch-side bookkeeping: the slot joins this tick's
+                    # decode batch (its first token is already seeded into
+                    # the device last-token buffer by the chunk call)
+                    s.pos = T
+                    s.launched = 1
+                    finals.append((j, i, s.rid))
             org = self._origin_arg(
                 self.slots[i].origin if i is not None else None
                 for i in row_slots)
-            logits, self.pool, mstats = self._chunk_fn(
-                self.engine.params, self.pool, jnp.asarray(toks),
-                jnp.asarray(tbl), jnp.asarray(wb), jnp.asarray(offs),
-                jnp.asarray(lidx), self.engine.placement,
-                jnp.asarray(mask), org)
-            self.engine._ingest(mstats)
+            exe = (self.engine.paged_executable(
+                       "chunk", bs, self.max_pages, B, org is not None)
+                   if self.warmup else None)
+            fn = exe if exe is not None else self._chunk_fn
+            self._last_buf, logits, self.pool, mstats = fn(
+                self.engine.params, self.pool, self._last_buf,
+                jnp.asarray(rows), jnp.asarray(toks), jnp.asarray(tbl),
+                jnp.asarray(wb), jnp.asarray(offs), jnp.asarray(lidx),
+                self.engine.placement, jnp.asarray(mask), org)
             self.prefill_calls += 1
             self.prefill_rows += B
             self.chunks_executed += len(act)
-            lg = None
-            for i in act:
-                final, valid, j = meta[i]
-                s = self.slots[i]
-                s.filled += valid
-                if not final:
-                    continue
-                if lg is None:
-                    lg = np.asarray(logits)
-                row = lg[j]
-                first = int(np.argmax(row))
-                s.pos = len(s.prompt)
-                s.last = first
-                s.tokens = [first]
-                s.final_logits = row
-                self._emit(s.rid, EventType.TOKEN, token=first)
-                self._cache_insert(i, row)
-                self._retire_if_done(i)
+            if self.warmup:
+                if finals:
+                    self._copy_async(logits)
+                self._copy_async(mstats)
+                self._pending.append(_Pending(
+                    "prefill", self.ticks, finals,
+                    logits=logits if finals else None, mstats=mstats))
+                continue
+            self.engine._ingest(mstats)
+            if finals:
+                self.host_syncs += 1
+                lg = np.asarray(logits)
+                for j, i, rid in finals:
+                    self._finish_prefill(i, rid, lg[j])
+
+    def _finish_prefill(self, i: int, rid: int, logits_row) -> None:
+        """Drain-side completion of one slot's prefill: first token (host
+        argmax of the final-position logits — bit-equal to the device
+        argmax already scattered into the last-token buffer), radix-cache
+        registration, and need==1 retirement."""
+        s = self.slots[i]
+        if s is None or s.rid != rid:
+            return
+        row = np.asarray(logits_row)
+        s.final_logits = row
+        self._append_token(s, int(np.argmax(row)))
+        self._cache_insert(i, row)
+        self._retire_if_done(i)
 
     def _cache_insert(self, i: int, logits_row: np.ndarray) -> None:
         """Register a freshly prefilled prompt's block-aligned prefix (and,
@@ -697,16 +861,21 @@ class ServingRuntime:
         if T % self.block_size == 0:
             self.prefix_cache.set_logits(s.prompt, logits_row)
 
-    def _decode_round(self) -> None:
+    def _decode_round(self) -> bool:
         """Advance every decoding slot one token in one shared decode
-        batch. With ``compact_decode`` (paged mode) only the occupied slots
-        ride the batch, padded up to the next power-of-two bucket — the
-        jitted decode fn specializes per bucket width, so a near-empty pool
-        stops paying for ``max_slots`` rows of garbage decode."""
+        batch; returns whether a round was launched. With
+        ``compact_decode`` (paged mode) only the occupied slots ride the
+        batch, padded up to the next power-of-two bucket — the decode fn
+        specializes per bucket width (AOT-compiled under ``warmup``), so a
+        near-empty pool stops paying for ``max_slots`` rows of garbage
+        decode. Composition is launch-driven: a slot rides while
+        ``launched < need``, so length stops never wait for a drained
+        token and EOS stops cost at most one speculative round."""
         act = [i for i, s in enumerate(self.slots)
-               if s is not None and not s.prefilling]
+               if s is not None and not s.prefilling
+               and s.launched < s.need]
         if not act:
-            return
+            return False
         self.max_concurrency = max(self.max_concurrency, len(act))
         if self.paged and self.compact_decode:
             B = min(self.max_slots, 1 << max(len(act) - 1, 0).bit_length())
@@ -714,15 +883,18 @@ class ServingRuntime:
         else:
             B = self.max_slots
             row_slots = [i if i in act else None for i in range(B)]
-        cur = np.zeros((B, 1), np.int32)
         pos = np.zeros((B,), np.int32)
         mask = np.zeros((B,), np.float32)
+        launched: list[tuple[int, int, int]] = []    # (row, slot, rid)
         for j, i in enumerate(row_slots):
             if i is None:
                 continue
-            cur[j, 0] = self.slots[i].last
-            pos[j] = self.slots[i].pos
+            s = self.slots[i]
+            pos[j] = s.pos
             mask[j] = 1.0
+            s.pos += 1
+            s.launched += 1
+            launched.append((j, i, s.rid))
         org = self._origin_arg(
             self.slots[i].origin if i is not None else None
             for i in row_slots)
@@ -731,38 +903,114 @@ class ServingRuntime:
         if self.paged:
             # non-decoding rows (padding, vacant OR still prefilling) get
             # an all-null page table so their garbage write lands in the
-            # reserved null block instead of a live page
+            # reserved null block instead of a live page; their last-token
+            # gathers/scatters hit the buffer's trailing scratch entry
+            rows = np.full((B,), self.max_slots, np.int32)
             tbl = np.zeros((B, self.max_pages), np.int32)
             for j, i in enumerate(row_slots):
                 if i is not None:
+                    rows[j] = i
                     tbl[j] = self.page_table[i]
-            logits, self.pool, mstats = self._decode_fn(
-                self.engine.params, self.pool, jnp.asarray(cur),
-                jnp.asarray(pos), jnp.asarray(tbl), self.engine.placement,
-                jnp.asarray(mask), org)
+            exe = (self.engine.paged_executable(
+                       "dec", self.block_size, self.max_pages, B,
+                       org is not None)
+                   if self.warmup else None)
+            fn = exe if exe is not None else self._decode_fn
+            self._last_buf, nxt, self.pool, mstats = fn(
+                self.engine.params, self.pool, self._last_buf,
+                jnp.asarray(rows), jnp.asarray(pos), jnp.asarray(tbl),
+                self.engine.placement, jnp.asarray(mask), org)
+            self.decode_rows += B
+            if self.warmup:
+                # zero-stall: round k+1 chains on device through the
+                # last-token buffer; the host copy of this round's tokens
+                # runs under the next device step and drains one tick late
+                self._copy_async(nxt)
+                self._copy_async(mstats)
+                self._pending.append(_Pending("decode", self.ticks,
+                                              launched, nxt=nxt,
+                                              mstats=mstats))
+                return True
+            self.engine._ingest(mstats)
+            self.host_syncs += 1
+            self._drain_tokens(launched, np.asarray(nxt))
         else:
+            cur = np.zeros((B, 1), np.int32)
+            for j, i in enumerate(row_slots):
+                if i is not None:
+                    cur[j, 0] = self.slots[i].last
             logits, self.pool, mstats = self.engine._decode(
                 self.engine.params, self.pool, jnp.asarray(cur),
                 jnp.asarray(pos), self.engine.placement, jnp.asarray(mask),
                 org)
-        self.engine._ingest(mstats)
-        self.decode_rows += B
+            self.decode_rows += B
+            self.engine._ingest(mstats)
+            self.host_syncs += 1
+            self._drain_tokens(launched,
+                               np.asarray(jnp.argmax(logits, -1), np.int32))
+        self.rounds += 1
+        self._maybe_review()
+        return True
+
+    # -- the zero-stall backlog ----------------------------------------
+    @staticmethod
+    def _copy_async(x) -> None:
+        """Start the device->host copy of every leaf of ``x`` without
+        blocking (the drain one tick later finds it already resident)."""
+        for leaf in jax.tree.leaves(x):
+            if hasattr(leaf, "copy_to_host_async"):
+                leaf.copy_to_host_async()
+
+    def _fetch(self, x) -> np.ndarray:
+        """Drain-side host materialization; counts a host-sync point when
+        the async copy has not finished (a genuine stall)."""
+        if hasattr(x, "is_ready") and not x.is_ready():
+            self.host_syncs += 1
+        return np.asarray(x)
+
+    def _drain_tokens(self, rows, nxt: np.ndarray) -> None:
+        """Apply one decode round's tokens to the slots that launched them
+        (rid-guarded: an EOS-retired or re-assigned slot drops its
+        speculative token)."""
         lf = self.engine.last_local_frac
-        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)         # [B]
-        for j, i in enumerate(row_slots):
-            if i is None:
-                continue
+        for j, i, rid in rows:
             slot = self.slots[i]
-            slot.pos += 1
-            slot.last = int(nxt[j])
-            slot.tokens.append(int(nxt[j]))
+            if slot is None or slot.rid != rid:
+                continue
+            if len(slot.tokens) >= slot.need:
+                continue
+            self._append_token(slot, int(nxt[j]))
             if lf is not None:
                 slot.lf_sum += lf
                 slot.lf_rounds += 1
-            self._emit(slot.rid, EventType.TOKEN, token=int(nxt[j]))
             self._retire_if_done(i)
-        self.rounds += 1
-        self._maybe_review()
+
+    def _drain_one(self, p: _Pending) -> None:
+        self.engine._ingest(p.mstats)
+        if p.kind == "decode":
+            self._drain_tokens(p.rows, self._fetch(p.nxt))
+            self.rounds += 1
+            self._maybe_review()
+        else:
+            if p.rows:
+                lg = self._fetch(p.logits)
+                for j, i, rid in p.rows:
+                    self._finish_prefill(i, rid, lg[j])
+
+    def _drain_backlog(self, before_tick: int | None = None) -> None:
+        """Drain pending round records in launch order — all of them, or
+        only those launched before ``before_tick`` (the steady-state call
+        leaves the current tick's in-flight round pending)."""
+        while self._pending and (before_tick is None
+                                 or self._pending[0].tick < before_tick):
+            self._drain_one(self._pending.popleft())
+
+    def flush(self) -> None:
+        """Force-drain the zero-stall backlog: after this, every launched
+        round's tokens/events/retirements are applied. No-op on the
+        synchronous loop. Call it before reading results when driving
+        ``step()`` by hand with ``warmup=True`` (``run()`` ends drained)."""
+        self._drain_backlog(None)
 
     def _maybe_review(self) -> None:
         ctrl = self.controller
@@ -801,7 +1049,9 @@ class ServingRuntime:
                 assert b in live, f"slot {i} references freed block {b}"
             if s.prefilling:
                 frontier = s.pages[s.filled // self.block_size]
-            elif len(s.tokens) < s.need:
+            elif s.launched < s.need:
+                # fully-launched slots awaiting drain are skipped: their
+                # pos may sit one past capacity (nothing writes there)
                 frontier = s.pages[s.pos // self.block_size]
             else:
                 continue
@@ -821,17 +1071,27 @@ class ServingRuntime:
 
     def step(self) -> bool:
         """One scheduler tick: admit what fits, advance chunked prefills,
-        then one decode round. Returns True while there is (or was) work."""
-        had_work = bool(self.queue) or self.active > 0
+        launch one decode round, then (warmup mode) drain the previous
+        tick's backlog while this tick's round runs on device. Returns
+        True while there is (or was) work."""
+        had_work = (bool(self.queue) or self.active > 0
+                    or bool(self._pending))
         self.ticks += 1
         self._admit()
         if self.paged:
             self._prefill_round()
-        self._decode_round()
+        t0 = time.perf_counter()
+        launched = self._decode_round()
+        if self.warmup:
+            self._drain_backlog(self.ticks)
+        if launched:
+            self.decode_round_s.append(time.perf_counter() - t0)
         return had_work
 
     def run(self) -> dict[int, np.ndarray]:
-        """Serve until queue and slots drain; returns {rid: tokens}."""
-        while self.queue or self.active:
+        """Serve until queue, slots and backlog drain; returns
+        {rid: tokens}."""
+        while self.queue or self.active or self._pending:
             self.step()
+        self.flush()
         return dict(self.finished)

@@ -383,13 +383,13 @@ def test_cluster_sim_slo_and_step():
 
 
 # ---------------------------------------------------------------------------
-# bench-serving/v3 schema (satellite): cluster + net section validation
+# bench-serving/v4 schema (satellite): cluster + net + perf validation
 # ---------------------------------------------------------------------------
 
-def _v3_doc():
+def _v4_doc():
     pair = {"cache": 2, "nocache": 1}
     return {
-        "schema": "bench-serving/v3", "mode": "smoke",
+        "schema": "bench-serving/v4", "mode": "smoke",
         "metrics": {
             "admitted_concurrency": dict(pair),
             "prefill_chunks_executed": dict(pair),
@@ -417,16 +417,25 @@ def _v3_doc():
                 "per_server_mem_gb": [0.2, 0.2, 0.1],
                 "per_server_expert_budget": [64, 64, 32],
             },
+            "perf": {
+                "warmup_seconds": 12.5,
+                "executables_compiled": 7,
+                "traces_after_warmup": 0,
+                "host_syncs": 0,
+                "rounds_timed": 40,
+                "decode_round_ms": {"p50": 3.5, "p99": 9.0},
+                "ttft_ms": {"p50": 120.0, "p99": 250.0},
+            },
         },
     }
 
 
-def test_schema_v3_accepts_and_rejects():
+def test_schema_v4_accepts_and_rejects():
     import sys
     import os
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     from benchmarks.schema import BenchSchemaError, validate_bench_serving
-    assert validate_bench_serving(_v3_doc())
+    assert validate_bench_serving(_v4_doc())
     for mutate in (
         lambda d: d["metrics"].pop("cluster"),
         lambda d: d["metrics"]["cluster"].pop("per_server_local_ratio"),
@@ -445,9 +454,17 @@ def test_schema_v3_accepts_and_rejects():
                                  [1, 1, 0]]),                    # negative
         lambda d: d["metrics"]["net"].update(cross_server_bytes=0),  # empty
         lambda d: d["metrics"]["net"].pop("migration_transfer_seconds"),
-        lambda d: d.update(schema="bench-serving/v2"),           # stale tag
+        lambda d: d.update(schema="bench-serving/v3"),           # stale tag
+        lambda d: d["metrics"].pop("perf"),                      # v4
+        lambda d: d["metrics"]["perf"].pop("decode_round_ms"),
+        lambda d: d["metrics"]["perf"]["decode_round_ms"].pop("p99"),
+        lambda d: d["metrics"]["perf"].update(
+            executables_compiled=0),                             # no warmup
+        lambda d: d["metrics"]["perf"].update(
+            decode_round_ms={"p50": 0.0, "p99": 0.0}),           # untimed
+        lambda d: d["metrics"]["perf"].update(warmup_seconds=-1),
     ):
-        doc = _v3_doc()
+        doc = _v4_doc()
         mutate(doc)
         with pytest.raises(BenchSchemaError):
             validate_bench_serving(doc)

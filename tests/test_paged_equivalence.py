@@ -114,18 +114,23 @@ def request_stream(draw):
 
 
 def _drive(rtm, jobs):
-    """Submit per arrival tick, step to drain; returns {rid: tokens}."""
+    """Submit per arrival tick, step to drain; returns {rid: tokens}.
+    Backlog-aware: a ``warmup=True`` runtime keeps stepping while pending
+    round records exist and force-drains at the end (both no-ops on the
+    synchronous loop)."""
     pending = sorted(jobs, key=lambda j: j["arrival"])
     t = 0
     rids = {}
-    while pending or rtm.queue or rtm.active:
+    while pending or rtm.queue or rtm.active or rtm._pending:
         while pending and pending[0]["arrival"] <= t:
             j = pending.pop(0)
             rids[id(j)] = rtm.enqueue(Request(prompt=j["prompt"],
-                                              max_new_tokens=j["steps"])).rid
+                                              max_new_tokens=j["steps"],
+                                              eos=j.get("eos"))).rid
         rtm.step()
         rtm.check_invariants()
         t += 1
+    rtm.flush()
     return {id(j): rtm.finished[rids[id(j)]] for j in jobs}
 
 
@@ -312,6 +317,84 @@ def test_identical_prompts_skip_prefill_entirely():
     assert rtm.cow_copies == 1                   # shared tail was cloned
     np.testing.assert_array_equal(out[r0], ref)
     np.testing.assert_array_equal(out[r1], ref)
+
+
+# ---------------------------------------------------------------------------
+# AOT warmup + zero-stall loop: warm == sync == sequential
+# ---------------------------------------------------------------------------
+
+# one pool geometry for every warmup leg below, so all legs (fp32 and int8
+# engines separately) share a single AOT bucket ladder per engine
+_WARM_SLOTS, _WARM_BLOCKS = 3, 33
+
+
+def _warm_vs_sync(kv_quant: bool, cache_on: bool):
+    """warmup-on == warmup-off == sequential ``generate()`` on a staggered
+    stream, and the warmed leg performs zero post-warmup jit traces."""
+    eng, src, refs = _engine(kv_quant)
+    jobs = [dict(prompt=src.sample(1, plen)[0], steps=s, arrival=a)
+            for plen, s, a in ((16, 6, 0), (12, 4, 0), (17, 5, 2),
+                               (8, 3, 4))]
+    outs = {}
+    for warm in (False, True):
+        rtm = ServingRuntime(eng, max_slots=_WARM_SLOTS,
+                             block_size=BLOCK_SIZE, n_blocks=_WARM_BLOCKS,
+                             prefix_cache=cache_on, warmup=warm,
+                             warmup_origins="untagged")
+        outs[warm] = _drive(rtm, jobs)
+        if warm:
+            assert rtm.traces_after_warmup == 0
+    for j in jobs:
+        ref = _reference(eng, refs, j["prompt"], j["steps"])
+        np.testing.assert_array_equal(outs[False][id(j)], ref)
+        np.testing.assert_array_equal(outs[True][id(j)], ref)
+
+
+def test_warm_equivalence_fp():
+    _warm_vs_sync(False, cache_on=False)
+
+
+def test_warm_equivalence_fp_prefix_cache():
+    _warm_vs_sync(False, cache_on=True)
+
+
+def test_warm_equivalence_int8():
+    _warm_vs_sync(True, cache_on=False)
+
+
+def test_warm_equivalence_int8_prefix_cache():
+    _warm_vs_sync(True, cache_on=True)
+
+
+def test_warm_eos_lagged_stop_detection():
+    """EOS-hitting requests: the zero-stall loop detects the stop at drain
+    (one round late) yet emits exactly the synchronous stream — the extra
+    speculative token is dropped by the rid guard, pages are released, and
+    the pool invariants hold throughout."""
+    eng, src, refs = _engine(False)
+    prompt = src.sample(1, 16)[0]
+    ref = np.asarray(_reference(eng, refs, prompt, 8))[-8:]
+    # stop on the first token that first appears mid-stream; fall back to
+    # the last token (stop == length stop) if the stream never branches
+    k = next((i for i in range(1, len(ref))
+              if ref[i] not in ref[:i]), len(ref) - 1)
+    eos = int(ref[k])
+    jobs = [dict(prompt=prompt, steps=8, arrival=0, eos=eos),
+            dict(prompt=src.sample(1, 12)[0], steps=5, arrival=1)]
+    outs = {}
+    for warm in (False, True):
+        rtm = ServingRuntime(eng, max_slots=_WARM_SLOTS,
+                             block_size=BLOCK_SIZE, n_blocks=_WARM_BLOCKS,
+                             warmup=warm, warmup_origins="untagged")
+        outs[warm] = _drive(rtm, jobs)
+        # EOS retirement returned the pages in both loop structures
+        rtm.drop_prefix_cache()
+        assert not rtm.allocator.live()
+    np.testing.assert_array_equal(outs[False][id(jobs[0])], ref[:k + 1])
+    np.testing.assert_array_equal(outs[True][id(jobs[0])], ref[:k + 1])
+    ref1 = _reference(eng, refs, jobs[1]["prompt"], 5)
+    np.testing.assert_array_equal(outs[False][id(jobs[1])], ref1)
+    np.testing.assert_array_equal(outs[True][id(jobs[1])], ref1)
 
 
 # ---------------------------------------------------------------------------

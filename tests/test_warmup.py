@@ -1,0 +1,139 @@
+"""AOT bucket-ladder warmup + zero-stall decode loop: ladder size, the
+zero-retrace guarantee over varying occupancy, token identity vs the
+synchronous loop, and the warmup-off path staying unchanged."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import TaskTokenSource
+from repro.launch.mesh import make_test_mesh
+from repro.models import moe as M
+from repro.models import transformer as tr
+from repro.serving.api import Request
+from repro.serving.engine import ServingEngine
+from repro.serving.runtime import ServingRuntime
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = get_config("mixtral-8x7b").reduced()
+    mesh = make_test_mesh(1, 1)
+    spec = M.EPSpec.build(
+        mesh,
+        cfg,
+        ep_axes=("model",),
+        slots=cfg.num_experts,
+        capacity=4096,
+        slot_capacity=8192,
+    )
+    _, n_groups = cfg.layer_pattern()
+    rt = tr.Runtime(cfg=cfg, mesh=mesh, moe_impl="ep", ep_spec=spec)
+    rt_dense = tr.Runtime(cfg=cfg, mesh=mesh, moe_impl="dense")
+    params_dense = tr.init_params(rt_dense, jax.random.PRNGKey(0))
+    pl = M.uniform_placement(spec.n_ep, spec.slots, cfg.num_experts)
+    pls = tr.stack_placement(pl, n_groups)
+    params = dict(params_dense)
+    params["groups"] = M.regather_ep_groups(params_dense["groups"], pls, n_groups)
+    eng = ServingEngine(
+        rt=rt,
+        params=params,
+        placement=pls,
+        dense_master=params_dense["groups"],
+        max_len=64,
+    )
+    src = TaskTokenSource("warm", cfg.vocab_size, seed=0)
+    return eng, src
+
+
+def _rtm(eng, **kw):
+    kw.setdefault("max_slots", 4)
+    kw.setdefault("block_size", 8)
+    return ServingRuntime(eng, **kw)
+
+
+def test_warmup_ladder_size_and_cache_reuse(engine_setup):
+    eng, src = engine_setup
+    rtm = _rtm(eng, warmup=True, warmup_origins="untagged")
+    # max_slots=4 untagged: widths {1, 2, 4} x {chunk, dec} + copy-block
+    assert rtm.executables_compiled == 7
+    assert rtm.warmup_seconds > 0
+    # a second runtime with the same geometry reuses the engine-level
+    # executable cache — its warmup is (near) free
+    rtm2 = _rtm(eng, warmup=True, warmup_origins="untagged")
+    assert rtm2.executables_compiled == 7
+    assert rtm2.warmup_seconds < rtm.warmup_seconds
+
+
+def test_zero_retraces_across_varying_occupancy(engine_setup):
+    """Mixed admit/decode/retire stream that shrinks and grows occupancy
+    through every compaction bucket — zero jit traces after warmup."""
+    eng, src = engine_setup
+    rtm = _rtm(eng, warmup=True, warmup_origins="untagged")
+    floor = rtm.traces_after_warmup  # 0 unless another test retraced first
+    # wave 1: fill all 4 slots (buckets 1 -> 2 -> 4), staggered arrivals
+    handles = []
+    for k in range(4):
+        req = Request(
+            prompt=src.sample(1, 8 + 8 * (k % 2))[0], max_new_tokens=3 + 2 * k
+        )
+        handles.append(rtm.enqueue(req))
+        rtm.step()
+    # drain to a single slot (bucket 4 -> 2 -> 1), then refill (1 -> 4)
+    while rtm.active > 1:
+        rtm.step()
+    for _ in range(3):
+        req = Request(prompt=src.sample(1, 16)[0], max_new_tokens=4)
+        handles.append(rtm.enqueue(req))
+    while rtm.queue or rtm.active or rtm._pending:
+        rtm.step()
+    rtm.flush()
+    rtm.check_invariants()
+    assert all(h.done for h in handles)
+    assert rtm.traces_after_warmup == floor == 0
+    assert rtm.perf_metrics()["traces_after_warmup"] == 0
+    assert rtm.perf_metrics()["rounds_timed"] > 0
+
+
+def test_warm_tokens_match_sync_loop(engine_setup):
+    eng, src = engine_setup
+    prompts = [src.sample(1, n)[0] for n in (16, 12, 16)]
+    needs = [6, 4, 5]
+    out = {}
+    for warm in (False, True):
+        rtm = _rtm(eng, warmup=warm, warmup_origins="untagged")
+        hs = [
+            rtm.enqueue(Request(prompt=p, max_new_tokens=s))
+            for p, s in zip(prompts, needs)
+        ]
+        res = rtm.run()
+        out[warm] = [res[h.rid] for h in hs]
+        if warm:
+            assert rtm.traces_after_warmup == 0
+            # host_syncs counts drains that actually had to wait on a
+            # device fetch — 0 on an idle machine, but copy readiness is
+            # timing-dependent, so only assert the loop never degenerates
+            # to the sync loop's one mandatory fetch per round
+            assert rtm.host_syncs < rtm.rounds
+    for a, b in zip(out[False], out[True]):
+        assert np.array_equal(a, b)
+
+
+def test_warmup_off_unchanged(engine_setup):
+    """warmup=False keeps the lazy-jit synchronous loop: traces happen,
+    no backlog forms, every round pays one host sync."""
+    eng, src = engine_setup
+    rtm = _rtm(eng)
+    assert rtm.warmup is False and rtm.executables_compiled == 0
+    h = rtm.enqueue(Request(prompt=src.sample(1, 16)[0], max_new_tokens=4))
+    rtm.run()
+    assert h.done and len(h.tokens) == 4
+    assert not rtm._pending
+    assert rtm.host_syncs >= rtm.rounds > 0
+
+
+def test_warmup_requires_paged_pool(engine_setup):
+    eng, _ = engine_setup
+    with pytest.raises(ValueError, match="paged"):
+        ServingRuntime(eng, max_slots=2, paged=False, warmup=True)
