@@ -1,0 +1,184 @@
+"""Failover under a mid-run server crash on the 3-server WAN topology.
+
+Edge clusters churn; the question the paper's placement machinery has to
+answer is what a crash *costs*. This benchmark serves the same typed
+request stream through the ``EdgeCluster`` sim backend twice under one
+deterministic ``FaultSchedule`` — the memory-poor WAN server crashes
+mid-run — and compares:
+
+* **failover** (default): the dead server's arrivals re-route through the
+  router, the controller force-reviews placement around the lost capacity
+  and stages the recovery transfers over the surviving links; requests
+  that need a not-yet-recovered expert stall until the migration lands.
+* **no-failover baseline**: the cluster is crash-oblivious — the dead
+  server's arrivals are dropped and every token they owed is lost.
+
+Reported: tokens lost and recovery time (crash -> recovery-migration eta)
+per leg, plus the deterministic-replay check (two runs of the same
+schedule must be *bit-identical* — the acceptance gate for the fault
+subsystem).
+
+  PYTHONPATH=src python -m benchmarks.failover [--csv]
+
+``smoke()`` returns the ``metrics.faults`` section of
+``BENCH_serving.json`` (since ``bench-serving/v5``) on a smaller stream
+for the CI ``bench-smoke`` job.
+"""
+
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from benchmarks.topology import (
+    BENCH_PROFILE,
+    _historical_stats,
+    build_requests,
+    wan_testbed,
+)
+from repro.core.policies import ClusterView, PlacementController, get_policy
+from repro.serving.cluster import EdgeCluster
+from repro.serving.faults import FaultSchedule
+from repro.serving.net import CommCostModel, Topology
+
+CRASH_TIME = 60.0
+# the WAN-linked memory-poor box: the two LAN survivors can still cover
+# every expert, so recovery is feasible
+DEAD_SERVER = 2
+
+
+def crash_schedule() -> FaultSchedule:
+    return FaultSchedule.server_crash(CRASH_TIME, DEAD_SERVER)
+
+
+def run_leg(
+    topo: Topology, requests, schedule: FaultSchedule, failover: bool, seed: int = 0
+) -> dict:
+    pf = BENCH_PROFILE
+    cm = CommCostModel(
+        topology=topo,
+        expert_bytes=pf.expert_bytes,
+        activation_bytes=pf.hidden_bytes_per_token,
+        tokens_per_horizon=1e5,
+    )
+    ctrl = PlacementController(
+        policy=get_policy("dancemoe"),
+        cost=cm,
+        cluster=ClusterView.from_topology(topo, pf),
+        interval=20.0,
+        topology=topo,
+        stats=_historical_stats(topo, pf, seed),
+    )
+    ec = EdgeCluster(
+        "sim",
+        topology=topo,
+        profile=pf,
+        controller=ctrl,
+        seed=seed,
+        fault_schedule=schedule,
+        failover=failover,
+    )
+    for r in requests:
+        ec.submit(r)
+    handles = ec.run()
+    done = [h for h in handles if h.done]
+    m = ec.metrics()
+    return {
+        "completed": len(done),
+        "n_requests": len(handles),
+        "mean_latency_s": float(np.mean([h.metrics["latency"] for h in done])),
+        "latencies": [h.metrics["latency"] for h in done],
+        "timeline": [(e.type, e.rid, e.time) for e in ec.events],
+        "faults": m["faults"],
+        "link_bytes": m["net"]["link_bytes"],
+    }
+
+
+def measure(n_requests: int, seed: int = 0) -> dict:
+    """Both legs plus the bit-identical replay of the failover leg."""
+    # a fresh Topology per leg: faults mutate its shared LinkState
+    reqs = build_requests(n_requests, 3, seed=seed)
+    fo = run_leg(wan_testbed(), reqs, crash_schedule(), True, seed)
+    fo2 = run_leg(wan_testbed(), reqs, crash_schedule(), True, seed)
+    base = run_leg(wan_testbed(), reqs, crash_schedule(), False, seed)
+    replay_identical = (
+        fo["latencies"] == fo2["latencies"]
+        and fo["timeline"] == fo2["timeline"]
+        and fo["link_bytes"] == fo2["link_bytes"]
+    )
+    return {"failover": fo, "baseline": base, "replay_identical": replay_identical}
+
+
+def faults_section(results: dict) -> dict:
+    """The ``metrics.faults`` section (since ``bench-serving/v5``): the
+    failover leg's recovery numbers plus the no-failover comparison."""
+    fo, base = results["failover"], results["baseline"]
+    return {
+        "injected": fo["faults"]["injected"],
+        "recovered": fo["faults"]["recovered"],
+        "tokens_lost": fo["faults"]["tokens_lost"],
+        "recovery_seconds": fo["faults"]["recovery_seconds"],
+        "requests_dropped": fo["faults"]["requests_dropped"],
+        "completed": fo["completed"],
+        "n_requests": fo["n_requests"],
+        "replay_identical": int(results["replay_identical"]),
+        "baseline_tokens_lost": base["faults"]["tokens_lost"],
+        "baseline_requests_dropped": base["faults"]["requests_dropped"],
+    }
+
+
+def smoke(n_requests: int = 40) -> dict:
+    """Small CI-gate measurement: the ``metrics.faults`` document
+    section, with the failover acceptance gates asserted."""
+    results = measure(n_requests)
+    fo, base = results["failover"], results["baseline"]
+    assert fo["completed"] == fo["n_requests"], (
+        "failover must complete every request after the mid-run crash "
+        f"({fo['completed']}/{fo['n_requests']})"
+    )
+    assert base["faults"]["requests_dropped"] >= 1, (
+        "the no-failover baseline should drop the dead server's arrivals "
+        "— the crash landed after the stream ended?"
+    )
+    assert fo["faults"]["tokens_lost"] < base["faults"]["tokens_lost"], (
+        "failover should lose fewer tokens than the drop-everything baseline"
+    )
+    assert results["replay_identical"], (
+        "two runs of the same FaultSchedule must be bit-identical "
+        "(event timelines, latencies, link-byte matrices)"
+    )
+    return faults_section(results)
+
+
+def main(csv: bool = False):
+    n_requests = 60
+    results = measure(n_requests)
+    fo, base = results["failover"], results["baseline"]
+    print(
+        f"# 3-server WAN topology, server {DEAD_SERVER} crashes at "
+        f"t={CRASH_TIME:.0f}s ({n_requests} requests)"
+    )
+    print(
+        f"{'leg':12s} {'completed':>10s} {'dropped':>8s} "
+        f"{'tokens lost':>12s} {'recovery (s)':>13s} {'latency (s)':>12s}"
+    )
+    for name, r in (("failover", fo), ("no-failover", base)):
+        f = r["faults"]
+        print(
+            f"{name:12s} {r['completed']:>7d}/{r['n_requests']:<2d} "
+            f"{f['requests_dropped']:8d} {f['tokens_lost']:12d} "
+            f"{f['recovery_seconds']:13.3f} {r['mean_latency_s']:12.4f}"
+        )
+    print(f"replay bit-identical: {results['replay_identical']}")
+    if csv:
+        for name, r in (("failover", fo), ("baseline", base)):
+            print(f"failover,{name}_tokens_lost,{r['faults']['tokens_lost']}")
+            print(f"failover,{name}_completed,{r['completed']}")
+        print(f"failover,recovery_seconds,{fo['faults']['recovery_seconds']:.6f}")
+    assert fo["completed"] == fo["n_requests"]
+    assert results["replay_identical"]
+
+
+if __name__ == "__main__":
+    main(csv="--csv" in sys.argv)

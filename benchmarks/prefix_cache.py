@@ -37,6 +37,7 @@ import time
 import jax
 import numpy as np
 
+from benchmarks.schema import SCHEMA_NAME
 from repro.configs import get_config
 from repro.data.pipeline import TaskTokenSource
 from repro.launch.mesh import make_test_mesh
@@ -185,7 +186,7 @@ def to_bench_doc(r: dict, *, mode: str, n_requests: int,
     chunk_ratio = r["nocache"]["chunks_executed"] / max(
         r["cache"]["chunks_executed"], 1)
     return {
-        "schema": "bench-serving/v4",
+        "schema": SCHEMA_NAME,
         "mode": mode,
         "config": {
             "arch": "mixtral-8x7b(reduced)",

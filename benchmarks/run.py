@@ -21,6 +21,7 @@ import time
 
 
 def smoke(out_path: str) -> None:
+    import benchmarks.failover as failover
     import benchmarks.prefix_cache as prefix_cache
     import benchmarks.topology as topology
     from benchmarks.schema import validate_bench_serving
@@ -29,6 +30,8 @@ def smoke(out_path: str) -> None:
     doc = prefix_cache.smoke()
     doc["metrics"]["net"] = topology.smoke()  # v3: non-uniform-topology
     #   run (per-link dispatch bytes, staged-migration transfer totals)
+    doc["metrics"]["faults"] = failover.smoke()  # v5: mid-run crash +
+    #   failover vs no-failover baseline, deterministic replay asserted
     doc["elapsed_s"] = round(time.time() - t0, 2)
     validate_bench_serving(doc)  # raises (non-zero exit) on breakage
     with open(out_path, "w") as f:
@@ -67,6 +70,15 @@ def smoke(out_path: str) -> None:
         f"p99={p['decode_round_ms']['p99']:.2f} "
         f"ttft_ms p50={p['ttft_ms']['p50']:.2f}"
     )
+    fl = m["faults"]
+    print(
+        f"faults[v5]: injected={int(fl['injected'])} "
+        f"recovered={int(fl['recovered'])} "
+        f"recovery={fl['recovery_seconds']:.3g}s "
+        f"tokens_lost={int(fl['tokens_lost'])} "
+        f"(baseline {int(fl['baseline_tokens_lost'])}) "
+        f"replay_identical={int(fl['replay_identical'])}"
+    )
 
 
 def main() -> None:
@@ -80,6 +92,7 @@ def main() -> None:
         smoke(out)
         return
 
+    import benchmarks.failover as failover
     import benchmarks.fig5 as fig5
     import benchmarks.fig6 as fig6
     import benchmarks.fig7 as fig7
@@ -103,6 +116,7 @@ def main() -> None:
         ("Paged KV pool (occupancy + latency-vs-blocks)", paged_pool.main),
         ("Prefix cache (chunk reduction + concurrency)", prefix_cache.main),
         ("Topology  (non-uniform links, staged migration)", topology.main),
+        ("Failover  (mid-run crash, recovery vs baseline)", failover.main),
     ]:
         t0 = time.time()
         print(f"\n##### {name}")

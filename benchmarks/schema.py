@@ -9,13 +9,14 @@ runner)."""
 
 from __future__ import annotations
 
-SCHEMA_NAME = "bench-serving/v4"
+SCHEMA_NAME = "bench-serving/v5"
 
 # metric key -> ("scalar" | "pair" | "stats") shape requirement.
 # v2 extended v1 (same keys, same shapes) with the EdgeCluster section;
 # v3 adds the heterogeneous-topology section (``metrics.net``) and the
 # per-server profile caps; v4 adds the AOT warmup / zero-stall section
-# (``metrics.perf``) — extend, don't fork, when adding serving metrics.
+# (``metrics.perf``); v5 adds the fault-injection/failover section
+# (``metrics.faults``) — extend, don't fork, when adding serving metrics.
 _REQUIRED_METRICS = {
     "admitted_concurrency": "pair",  # {"cache": n, "nocache": n}
     "prefill_chunks_executed": "pair",
@@ -66,6 +67,21 @@ _REQUIRED_PERF = {
     "rounds_timed": "scalar",  # decode rounds behind the percentiles
     "decode_round_ms": "p50p99",  # per-round wall time, warmed loop
     "ttft_ms": "p50p99",  # wall-clock time to first token
+}
+
+
+# v5: metrics.faults — the deterministic fault-injection/failover section
+# produced by ``benchmarks.failover`` (3-server WAN topology, mid-run
+# crash of the memory-poor server, failover vs crash-oblivious baseline).
+_REQUIRED_FAULTS = {
+    "injected": "scalar",  # fault events consumed from the schedule
+    "recovered": "scalar",  # crashes whose recovery review was adopted
+    "tokens_lost": "scalar",  # failover leg (want 0)
+    "recovery_seconds": "scalar",  # crash -> recovery-migration eta
+    "requests_dropped": "scalar",  # failover leg (want 0)
+    "baseline_tokens_lost": "scalar",  # no-failover comparison
+    "baseline_requests_dropped": "scalar",
+    "replay_identical": "scalar",  # 1 iff reruns were bit-identical
 }
 
 
@@ -167,6 +183,24 @@ def validate_bench_serving(doc) -> dict:
     if perf["decode_round_ms"]["p50"] <= 0 or perf["rounds_timed"] < 1:
         raise BenchSchemaError(
             "metrics.perf.decode_round_ms: empty (no decode rounds timed)"
+        )
+
+    # -- v5: the fault-injection / failover section -----------------------
+    faults = metrics.get("faults")
+    if not isinstance(faults, dict) or not faults:
+        raise BenchSchemaError("metrics.faults: missing or empty (v5)")
+    for key in _REQUIRED_FAULTS:
+        if key not in faults:
+            raise BenchSchemaError(f"metrics.faults.{key}: missing")
+        _num(faults, "metrics.faults", key)
+    if faults["injected"] < 1:
+        raise BenchSchemaError(
+            "metrics.faults.injected: empty run (no fault was injected)"
+        )
+    if faults["replay_identical"] != 1:
+        raise BenchSchemaError(
+            "metrics.faults.replay_identical: fault replay was not "
+            "bit-identical"
         )
     return doc
 

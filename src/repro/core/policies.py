@@ -306,8 +306,24 @@ class PlacementController:
         return self.stats
 
     # -- review ------------------------------------------------------------
+    def _effective_cluster(self) -> ClusterView | None:
+        """The policy's capacity view minus crashed servers: a dead
+        server's expert budget is 0, so no candidate plan places anything
+        there. With every server up (or no topology) this is ``cluster``
+        itself, so fault-free behavior is bit-identical."""
+        cv = self.cluster
+        if cv is None or self.topology is None:
+            return cv
+        up = np.asarray(self.topology.state.up)
+        if up.all():
+            return cv
+        slots = (None if cv.slots_cap is None
+                 else np.where(up, cv.slots_cap, 0))
+        return ClusterView(capacity=np.where(up, cv.capacity, 0),
+                           slots_cap=slots)
+
     def propose(self, freqs: np.ndarray) -> PlacementPlan:
-        return self.policy.propose(freqs, self.cluster)
+        return self.policy.propose(freqs, self._effective_cluster())
 
     def review_due(self, now: float) -> bool:
         if self.pending is not None:        # one migration in flight at a
@@ -377,6 +393,84 @@ class PlacementController:
         return PlacementDecision(self.plan, adopt, diag,
                                  staged=staged is not None)
 
+    # -- fault handling ----------------------------------------------------
+    def pending_affected(self) -> bool:
+        """True when the in-flight staged migration can no longer complete
+        as scheduled: a transfer task's source or destination server died,
+        or an inter-server task's link degraded after the schedule was
+        priced (its eta is now a lie). Such a migration must be aborted
+        and re-planned, never completed on a ghost server."""
+        p = self.pending
+        if p is None or self.topology is None:
+            return False
+        st = self.topology.state
+        for t in p.tasks:
+            if not st.up[t.src] or not st.up[t.dst]:
+                return True
+            if t.src != t.dst and st.bw_factor[t.src, t.dst] < 1.0:
+                return True
+        return False
+
+    def abort_pending(self, now: float, cause: str = "fault"):
+        """Drop the in-flight staged migration (its transfers are lost;
+        the incumbent plan stays active) and record a
+        ``migration-aborted`` event. Returns the aborted
+        ``net.StagedMigration`` (or None when nothing was pending)."""
+        p = self.pending
+        if p is None:
+            return None
+        self.pending = None
+        self.events.append({
+            "reason": "migration-aborted", "time": now, "adopted": False,
+            "abort_cause": cause, "staged_at": p.started, "eta": p.eta,
+            "transfers": len(p.tasks), "transfer_seconds": p.seconds,
+            "transfer_bytes": p.nbytes,
+        })
+        return p
+
+    def fault_review(self, now: float, freqs: np.ndarray | None = None, *,
+                     cause: str = "fault") -> PlacementDecision:
+        """Immediate, ungated re-placement after a capacity-changing
+        fault. Unlike ``review(force=True)`` this (a) aborts any pending
+        migration first — its candidate was computed against the
+        pre-fault fabric — and (b) skips the Eq.-4 gate: after a crash
+        the incumbent references capacity that no longer exists, so
+        ``should_migrate`` would be defending a ghost. The candidate is
+        proposed against the liveness-masked capacity view and staged
+        over the surviving links as usual."""
+        if self.pending is not None:
+            self.abort_pending(now, cause=cause)
+        if freqs is None:
+            freqs = self.freqs()
+        self.last_review = now
+        try:
+            candidate = self.propose(freqs)
+        except RuntimeError as e:
+            # the surviving capacity cannot cover every expert (Algorithm
+            # 1 coverage is infeasible): keep the incumbent plan rather
+            # than crash the control plane mid-failover — the uncovered
+            # experts stay unservable until capacity returns
+            diag = {"reason": cause, "time": now, "adopted": False,
+                    "fault_review": True, "infeasible": str(e)}
+            self.events.append(diag)
+            return PlacementDecision(self.plan, False, diag, staged=False)
+        diag = {"reason": cause, "time": now, "adopted": True,
+                "fault_review": True}
+        staged = None
+        if self.plan is not None and self.topology is not None:
+            staged = self._stage(now, candidate)
+            if staged is not None:
+                diag["staged"] = True
+                diag["eta"] = staged.eta
+                diag["transfers"] = len(staged.tasks)
+                diag["transfer_seconds"] = staged.seconds
+                diag["transfer_bytes"] = staged.nbytes
+        else:
+            self.plan = candidate
+        self.events.append(diag)
+        return PlacementDecision(self.plan, True, diag,
+                                 staged=staged is not None)
+
     def poll(self, now: float):
         """Complete the in-flight staged migration once its modeled
         transfers have finished: the pending plan becomes the active plan
@@ -409,6 +503,26 @@ class PlacementController:
             return self.cost.invocation_seconds()
         return self.topology.distance()
 
+    def _apply_plan(self, engine) -> bool:
+        """Push the active plan into a serving engine (EP slot re-gather
+        + table swap); returns False for engines without EP placement."""
+        if getattr(engine.rt, "ep_spec", None) is None:
+            return False
+        engine.migrate(build_ep_placement(
+            self.plan, engine.rt.ep_spec.slots,
+            mesh_distance=self._mesh_distance(engine)))
+        return True
+
+    def fault_review_and_apply(self, now: float, engine, *,
+                               cause: str = "fault") -> PlacementDecision:
+        """``fault_review`` + immediate engine apply when the adopted
+        plan is not staged (the runtime-backend analogue of
+        ``review_and_apply`` for the fault path)."""
+        dec = self.fault_review(now, cause=cause)
+        if dec.adopted and not dec.staged:
+            dec.applied = self._apply_plan(engine)
+        return dec
+
     def review_and_apply(self, now: float, engine) -> PlacementDecision | None:
         """Review on the caller's clock and apply an adopted plan to a
         serving engine (EP slot re-gather + table swap via
@@ -422,21 +536,14 @@ class PlacementController:
         completed = self.poll(now)
         if completed is not None:
             dec = PlacementDecision(self.plan, True, dict(self.events[-1]))
-            if getattr(engine.rt, "ep_spec", None) is not None:
-                engine.migrate(build_ep_placement(
-                    self.plan, engine.rt.ep_spec.slots,
-                    mesh_distance=self._mesh_distance(engine)))
-                dec.applied = True
+            dec.applied = self._apply_plan(engine)
             return dec
         if not self.review_due(now):
             return None
         dec = self.review(now)
-        if (dec.adopted and not dec.staged
-                and getattr(engine.rt, "ep_spec", None) is not None):
-            engine.migrate(build_ep_placement(
-                dec.plan, engine.rt.ep_spec.slots,
-                mesh_distance=self._mesh_distance(engine)))
-            dec.applied = True      # callers log migrations off this flag
+        if dec.adopted and not dec.staged:
+            dec.applied = self._apply_plan(engine)  # callers log migrations
+            #                                         off this flag
         return dec
 
     @property

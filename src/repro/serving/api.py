@@ -53,8 +53,20 @@ class EventType:
     MIGRATION_STARTED = "MIGRATION_STARTED"      # plan adopted, transfers
     #                                              scheduled on the links
     MIGRATION_COMPLETED = "MIGRATION_COMPLETED"  # transfers done, plan live
+    MIGRATION_ABORTED = "MIGRATION_ABORTED"      # in-flight transfers lost a
+    #                                              source/link; plan dropped
 
-    CLUSTER = (MIGRATION_STARTED, MIGRATION_COMPLETED)
+    # fault-injection lifecycle (rid = -1): one record per consumed
+    # FaultSchedule event (payload: the FaultEvent fields), plus the
+    # failover bookkeeping the backends attach (victims re-routed,
+    # tokens lost)
+    SERVER_DOWN = "SERVER_DOWN"          # server crashed; experts/KV lost
+    SERVER_JOINED = "SERVER_JOINED"      # server (re)joined empty
+    LINK_DEGRADED = "LINK_DEGRADED"      # link bandwidth multiplied down
+    LINK_RESTORED = "LINK_RESTORED"      # link back to profiled bandwidth
+
+    CLUSTER = (MIGRATION_STARTED, MIGRATION_COMPLETED, MIGRATION_ABORTED,
+               SERVER_DOWN, SERVER_JOINED, LINK_DEGRADED, LINK_RESTORED)
 
 
 @dataclasses.dataclass(frozen=True)

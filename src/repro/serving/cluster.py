@@ -32,6 +32,8 @@ import numpy as np
 
 from repro.serving.api import (Event, EventType, Request, RequestHandle,
                                as_router)
+from repro.serving.faults import (FaultSchedule, SERVER_DOWN, SERVER_JOINED,
+                                  LINK_DEGRADED, apply_fault)
 from repro.serving.net import Topology, TrafficMeter
 
 
@@ -135,7 +137,9 @@ class _RuntimeBackend:
 
     def __init__(self, engine, n_servers: int, router, controller,
                  shared_runtime: bool, runtime_opts: dict,
-                 topology: Topology | None = None):
+                 topology: Topology | None = None,
+                 fault_schedule: FaultSchedule | None = None,
+                 failover: bool = True):
         from repro.serving.runtime import ServingRuntime   # lazy: keeps the
         #   sim world (simulator.py imports this module) free of jax
         self.engine = engine
@@ -183,6 +187,38 @@ class _RuntimeBackend:
         self.rounds = 0
         self._rr = 0                 # round-robin cursor (shared mode)
         self.migrations: list = []
+        # -- satellite: metering must never fail silently --------------
+        self.meter_skips = 0         # observe() calls skipped on a shape
+        #   mismatch between the residency view and the engine's counts
+        self._meter_skip_streak = 0
+        self._meter_ok = 0           # successful observe() calls
+        # -- fault injection / failover --------------------------------
+        self.faults = fault_schedule
+        self.failover = failover
+        self.fault_events: list[Event] = []
+        self.faults_injected = 0
+        self.faults_recovered = 0    # crashes whose victims all finished
+        self.tokens_lost = 0         # emitted tokens discarded (+ undelivered
+        #                              remainder of dropped requests)
+        self.requests_dropped = 0    # victims abandoned (failover=False)
+        self.recovery_ticks = 0.0    # crash -> last-victim-finished, summed
+        self._recovering: list[tuple[float, list[RequestHandle]]] = []
+
+    def _alive(self) -> np.ndarray:
+        """[N] bool liveness (all-up without a topology)."""
+        if self.topology is None:
+            return np.ones(self.n, bool)
+        return np.asarray(self.topology.state.up, bool)
+
+    def _next_live_rr(self, alive: np.ndarray) -> int:
+        """Advance the shared-mode round-robin cursor to the next live
+        server (identical to the plain cursor while every server is up)."""
+        for _ in range(self.n):
+            s = self._rr
+            self._rr = (self._rr + 1) % self.n
+            if alive[s]:
+                return s
+        raise RuntimeError("no live servers in the cluster")
 
     def _expert_bytes(self) -> float:
         cfg = self.engine.rt.cfg
@@ -221,22 +257,33 @@ class _RuntimeBackend:
             # not as an IndexError in routing or metrics()
             raise ValueError(
                 f"origin {req.origin} out of range for {self.n} server(s)")
+        alive = self._alive()
         if self.shared:
             # one pool serves the whole cluster: there is no routing
             # decision to make, so record the origin (round-robin for
             # origin-less requests) rather than reporting a degenerate
-            # argmin-of-equal-loads that would pin metrics to server 0
-            if req.origin is not None:
+            # argmin-of-equal-loads that would pin metrics to server 0;
+            # a crashed origin falls back to the live round-robin
+            if req.origin is not None and alive[req.origin]:
                 server = req.origin
             else:
-                server = self._rr
-                self._rr = (self._rr + 1) % self.n
+                server = self._next_live_rr(alive)
             rtm = self.runtimes[0]
         else:
-            server = self.router.route(req.origin, self.loads())
+            loads = np.where(alive, self.loads(), np.inf)
+            origin = (req.origin
+                      if req.origin is not None and alive[req.origin]
+                      else None)
+            server = self.router.route(origin, loads)
+            if not alive[server]:
+                # a custom router ignored the inf load; never enqueue
+                # onto a dead server
+                server = int(np.argmin(loads))
             rtm = self.runtimes[server]
         if self.tag_origins:
-            origin = req.origin if req.origin is not None else server
+            origin = (req.origin
+                      if req.origin is not None and alive[req.origin]
+                      else server)
         else:
             origin = None
         handle = rtm.enqueue(dataclasses.replace(req, origin=origin))
@@ -251,6 +298,10 @@ class _RuntimeBackend:
 
     def step(self) -> bool:
         had = self.pending
+        now = self.rounds + 1          # the tick this call serves
+        if self.faults is not None:
+            for ev in self.faults.due(now):
+                self._apply_fault(ev, now)
         # residency BEFORE the round: this tick's dispatch rides the
         # incumbent tables even when the review below completes a staged
         # migration, so its bytes meter against the old links
@@ -263,13 +314,141 @@ class _RuntimeBackend:
             dec = ctrl.review_and_apply(self.rounds, self.engine)
             if dec is not None and dec.applied:
                 self.migrations.append(dec.diag)
-        if (self.meter is not None and res_before is not None
-                and res_before.shape == self.engine.stats.counts.shape):
-            # engine.stats is the engine's own plain accumulator (the
-            # meter needs true cumulative volumes, never a user-supplied
-            # EMA-decayed tracker)
-            self.meter.observe(self.engine.stats.counts, res_before)
+        if self.meter is not None and res_before is not None:
+            if res_before.shape == self.engine.stats.counts.shape:
+                # engine.stats is the engine's own plain accumulator (the
+                # meter needs true cumulative volumes, never a
+                # user-supplied EMA-decayed tracker)
+                self.meter.observe(self.engine.stats.counts, res_before)
+                self._meter_ok += 1
+                self._meter_skip_streak = 0
+            else:
+                # previously a silent pass: a persistently mismatched
+                # residency view meant metrics()["net"] reported zero
+                # dispatch bytes with no hint anything was wrong
+                self.meter_skips += 1
+                self._meter_skip_streak += 1
+                if self._meter_ok == 0 and self._meter_skip_streak >= 32:
+                    raise RuntimeError(
+                        f"traffic metering skipped {self._meter_skip_streak}"
+                        " consecutive ticks and never once succeeded: the "
+                        f"residency view {res_before.shape} cannot match "
+                        "the engine's activation counts "
+                        f"{self.engine.stats.counts.shape} — the "
+                        "controller's plan granularity does not fit this "
+                        "engine (metrics()['net'] would silently read 0)")
+        self._check_recovered()
         return had
+
+    # -- fault injection / failover ------------------------------------
+    def _apply_fault(self, ev, now: float) -> None:
+        """Consume one due ``FaultEvent``: flip the shared link state,
+        evict + re-route (or drop) the victims of a crash, and trigger
+        the controller's fault review around the capacity change."""
+        apply_fault(ev, self.topology)
+        self.faults_injected += 1
+        ctrl = self.controller
+        data = ev.payload()
+        if ev.kind == SERVER_DOWN:
+            data.update(self._fail_server(ev.server, now))
+            if ctrl is not None and self.failover:
+                dec = ctrl.fault_review_and_apply(now, self.engine,
+                                                  cause="server-down")
+                if dec.applied:
+                    self.migrations.append(dec.diag)
+        elif ev.kind == SERVER_JOINED:
+            # capacity appeared: re-review (gated on no in-flight
+            # migration — the next periodic review will expand otherwise)
+            if ctrl is not None and self.failover and ctrl.pending is None:
+                dec = ctrl.review(now, force=True)
+                if dec.adopted and not dec.staged:
+                    if ctrl._apply_plan(self.engine):
+                        self.migrations.append(dec.diag)
+        elif ev.kind == LINK_DEGRADED:
+            # an in-flight migration priced on the old bandwidth has a
+            # stale eta (or a dead link): abort and re-plan immediately
+            if (ctrl is not None and ctrl.pending is not None
+                    and ctrl.pending_affected()):
+                dec = ctrl.fault_review_and_apply(now, self.engine,
+                                                  cause="link-degraded")
+                if dec.applied:
+                    self.migrations.append(dec.diag)
+        self.fault_events.append(
+            Event(getattr(EventType, ev.kind), -1, now, data))
+
+    def _fail_server(self, server: int, now: float) -> dict:
+        """Evict every request the crashed server was serving. With
+        failover, victims re-route through the router (dead servers at
+        inf load) and re-prefill from scratch under their original
+        handles — cheap when the radix cache still holds their prefix
+        pages elsewhere; without it they are dropped (the no-failover
+        baseline). Returns the crash event's bookkeeping payload."""
+        victims: list[tuple] = []      # (runtime, rid, handle)
+        rtms = self.runtimes if self.shared else [self.runtimes[server]]
+        for rtm in rtms:
+            for rid, h in list(rtm.handles.items()):
+                if h.done or h.server != server:
+                    continue
+                victims.append((rtm, rid, h))
+        alive = self._alive()
+        lost = 0
+        reassigned: list[int] = []
+        recovering: list[RequestHandle] = []
+        for rtm, rid, h in victims:
+            done_tokens = rtm.evict(rid)
+            lost += done_tokens
+            req = h.request
+            if not self.failover:
+                self.requests_dropped += 1
+                lost += req.max_new_tokens - done_tokens   # never delivered
+                continue
+            loads = np.where(alive, self.loads(), np.inf)
+            origin = (req.origin
+                      if req.origin is not None and alive[req.origin]
+                      else None)
+            new_server = self.router.route(origin, loads)
+            if not alive[new_server]:
+                new_server = int(np.argmin(loads))
+            h._tokens.clear()          # the stream restarts from scratch
+            h.server = new_server
+            tagged = new_server if self.tag_origins else None
+            target = (self.runtimes[0] if self.shared
+                      else self.runtimes[new_server])
+            target.enqueue(dataclasses.replace(req, origin=tagged),
+                           handle=h)
+            h.request = req            # keep the caller's origin for metrics
+            reassigned.append(new_server)
+            recovering.append(h)
+        self.tokens_lost += lost
+        if recovering:
+            self._recovering.append((now, recovering))
+        return {"victims": len(victims), "tokens_lost": lost,
+                "reassigned": reassigned, "failover": self.failover}
+
+    def _check_recovered(self) -> None:
+        """A crash counts as recovered once every re-routed victim has
+        finished; the elapsed ticks are the crash's recovery time."""
+        for rec in self._recovering[:]:
+            t0, victims = rec
+            if all(h.done for h in victims):
+                self.faults_recovered += 1
+                self.recovery_ticks += self.rounds - t0
+                self._recovering.remove(rec)
+
+    def faults_metrics(self) -> dict | None:
+        """The ``metrics()["faults"]`` section (None without a schedule).
+        ``recovery_seconds`` converts ticks via the controller's
+        ``clock_rate`` (seconds per tick, default 1.0)."""
+        if self.faults is None:
+            return None
+        rate = (self.controller.clock_rate
+                if self.controller is not None else 1.0)
+        return {"injected": self.faults_injected,
+                "recovered": self.faults_recovered,
+                "tokens_lost": int(self.tokens_lost),
+                "recovery_seconds": round(self.recovery_ticks * rate, 6),
+                "requests_dropped": self.requests_dropped,
+                "failover": self.failover}
 
     def run(self) -> None:
         while self.pending:
@@ -300,7 +479,8 @@ class _RuntimeBackend:
             "traces_after_warmup": sum(r.traces_after_warmup
                                        for r in self.runtimes),
             "host_syncs": sum(r.host_syncs for r in self.runtimes),
-            "rounds_timed": len(rounds),
+            "rounds_timed": sum(r.decode_round_s.count
+                                for r in self.runtimes),
             "decode_round_ms": pct(rounds),
             "ttft_ms": pct(ttft),
         }
@@ -338,7 +518,9 @@ class _SimBackend:
 
     def __init__(self, spec: ClusterSpec, profile: MoEProfile, plan,
                  controller, router, tasks: dict | None, seed: int,
-                 ratio_bucket: float, topology: Topology | None = None):
+                 ratio_bucket: float, topology: Topology | None = None,
+                 fault_schedule: FaultSchedule | None = None,
+                 failover: bool = True):
         from repro.data.traces import Workload     # numpy-only
         from repro.serving.simulator import EdgeSimulator   # lazy: this
         #   module is imported by simulator.py (no import cycle at load)
@@ -357,6 +539,18 @@ class _SimBackend:
         self.n = spec.n
         self._pending: list = []       # heap of (arrival, seq, sim_req, h)
         self._seq = 0
+        self.faults = fault_schedule
+        self.failover = failover
+        # the no-failover baseline keeps serving survivors under the
+        # pre-crash time model (dead residency unmasked): its cost is the
+        # dropped requests, not an unserviceable-expert stall
+        self.sim.mask_dead_residency = failover
+        self.fault_events: list[Event] = []
+        self.faults_injected = 0
+        self.faults_recovered = 0      # crashes whose recovery plan landed
+        self.tokens_lost = 0           # undelivered tokens of dropped reqs
+        self.requests_dropped = 0
+        self.recovery_seconds = 0.0    # crash -> recovery-migration eta
 
     def _task_probs(self, name: str) -> None:
         from repro.data.traces import make_task_profile
@@ -391,23 +585,53 @@ class _SimBackend:
     def pending(self) -> bool:
         return bool(self._pending)
 
+    def _alive(self) -> np.ndarray:
+        if self.topology is None:
+            return np.ones(self.n, bool)
+        return np.asarray(self.topology.state.up, bool)
+
     def step(self) -> bool:
         """Serve the earliest pending arrival (event-driven: one request is
-        one event)."""
+        one event). Faults due at or before the arrival are applied first,
+        so a crash mid-workload re-routes (or drops) everything that
+        arrives after it."""
         if not self._pending:
             return False
         self.sim.start()
+        arrival, _, sim_req, handle = heapq.heappop(self._pending)
+        if self.faults is not None:
+            for ev in self.faults.due(arrival):
+                self._apply_fault(ev, ev.time)
+        ctrl = self.controller
+        if (ctrl is not None and ctrl.pending is not None
+                and self.sim.uncovered_live_experts()):
+            # a crash left experts with no live replica: requests stall
+            # until the recovery migration's transfers land (the modeled
+            # analogue of re-prefilling after the failover re-placement)
+            arrival = max(arrival, ctrl.pending.eta)
+            self.sim.poll_migration(arrival)
+            sim_req = dataclasses.replace(sim_req, arrival=arrival)
         # residency BEFORE this event: the request's dispatch is routed
         # under the incumbent plan even when serving it completes a staged
         # migration, so its bytes must meter against the old links
         res_before = (None if self.sim._res is None
                       else self.sim._res.copy())
-        arrival, _, sim_req, handle = heapq.heappop(self._pending)
+        alive = self._alive()
+        if sim_req.server >= 0 and not alive[sim_req.server]:
+            if not self.failover:
+                # no-failover baseline: the dead server's arrivals are
+                # abandoned — every token they owed is lost
+                self.requests_dropped += 1
+                self.tokens_lost += sim_req.decode_tokens
+                return True
+            sim_req = dataclasses.replace(sim_req, server=-1)
         if sim_req.server < 0:
-            # origin-less: the router assigns the server against the live
-            # timeline (HomeRouter/LeastLoadedRouter both fall back to the
-            # least-loaded server when origin is None)
-            n = self.sim.router.route(None, self.sim.loads(arrival))
+            # origin-less (or failed-over): the router assigns the server
+            # against the live timeline, dead servers at inf load
+            loads = np.where(alive, self.sim.loads(arrival), np.inf)
+            n = self.sim.router.route(None, loads)
+            if not alive[n]:
+                n = int(np.argmin(loads))
             sim_req = dataclasses.replace(sim_req, server=n)
         rec = self.sim.serve_request(sim_req)
         handle._emit(EventType.ADMITTED, rec["start"], server=rec["server"])
@@ -432,6 +656,56 @@ class _SimBackend:
     def run(self) -> None:
         while self.step():
             pass
+
+    # -- fault injection / failover ------------------------------------
+    def _apply_fault(self, ev, now: float) -> None:
+        """Consume one due ``FaultEvent``: flip the shared link state and
+        trigger the controller's recovery response. The no-failover
+        baseline skips the recovery (and the simulator keeps serving the
+        survivors under the pre-crash time model — only the dead server's
+        arrivals are lost)."""
+        apply_fault(ev, self.topology)
+        self.faults_injected += 1
+        ctrl = self.controller
+        data = ev.payload()
+        data["failover"] = self.failover
+        if ev.kind == SERVER_DOWN and self.failover and ctrl is not None:
+            dec = ctrl.fault_review(now, cause="server-down")
+            self._note_decision(dec, now)
+            if dec.staged:
+                self.recovery_seconds += float(dec.diag["eta"]) - now
+            if dec.adopted:
+                self.faults_recovered += 1
+        elif ev.kind == SERVER_JOINED and self.failover and ctrl is not None:
+            if ctrl.pending is None:
+                self._note_decision(ctrl.review(now, force=True), now)
+        elif ev.kind == LINK_DEGRADED and ctrl is not None:
+            if ctrl.pending is not None and ctrl.pending_affected():
+                self._note_decision(
+                    ctrl.fault_review(now, cause="link-degraded"), now)
+        self.fault_events.append(
+            Event(getattr(EventType, ev.kind), -1, now, data))
+
+    def _note_decision(self, dec, now: float) -> None:
+        if not dec.adopted:
+            return
+        if dec.staged:
+            self.sim._migrations.append({
+                "time": now, "staged": True, "eta": dec.diag["eta"],
+                "transfers": dec.diag["transfers"],
+                "transfer_bytes": dec.diag["transfer_bytes"]})
+        else:
+            self.sim.adopt_plan(dec.plan)
+
+    def faults_metrics(self) -> dict | None:
+        if self.faults is None:
+            return None
+        return {"injected": self.faults_injected,
+                "recovered": self.faults_recovered,
+                "tokens_lost": int(self.tokens_lost),
+                "recovery_seconds": round(self.recovery_seconds, 6),
+                "requests_dropped": self.requests_dropped,
+                "failover": self.failover}
 
     @property
     def migrations(self) -> list:
@@ -486,6 +760,22 @@ class EdgeCluster:
                     *seconds* via ``controller.clock_rate`` (seconds per
                     tick, default 1.0) — set it on the controller when a
                     decode round is far from one second.
+    fault_schedule: optional ``repro.serving.faults.FaultSchedule`` —
+                    deterministic timed server crashes / rejoins and link
+                    degradations, consumed from the backend's own clock
+                    (requires ``topology=``: faults mutate its shared
+                    ``LinkState``). ``metrics()["faults"]`` reports
+                    injected/recovered counts, tokens lost and recovery
+                    time; ``events`` carries one record per consumed
+                    fault. Two runs of the same schedule (``.copy()`` it —
+                    consumption advances a cursor) are bit-identical.
+    failover:       fault response (default True): a crashed server's
+                    in-flight requests re-route through the router and
+                    re-prefill under their original handles, and the
+                    controller force-reviews placement around the lost
+                    capacity. ``failover=False`` is the measurement
+                    baseline — victims are dropped and every token they
+                    owed counts as lost.
     """
 
     def __init__(self, backend: str = "runtime", *,
@@ -496,11 +786,19 @@ class EdgeCluster:
                  profile: MoEProfile | None = None, plan=None,
                  tasks: dict | None = None, seed: int = 0,
                  ratio_bucket: float = 60.0,
-                 topology: Topology | None = None):
+                 topology: Topology | None = None,
+                 fault_schedule: FaultSchedule | None = None,
+                 failover: bool = True):
         router = as_router(router)
         if controller is not None:
             topology = controller.attach_topology(topology)   # one shared
             #   link model between the cluster and the control plane
+        if fault_schedule is not None and topology is None:
+            # liveness/bandwidth state lives on the shared Topology; a
+            # schedule without one would silently do nothing
+            raise ValueError(
+                "fault_schedule= needs a topology= (the faults mutate the "
+                "shared Topology's LinkState)")
         if backend == "runtime":
             if engine is None:
                 raise ValueError("runtime backend needs engine=")
@@ -514,7 +812,9 @@ class EdgeCluster:
             self.backend = _RuntimeBackend(engine, n_servers, router,
                                            controller, shared_runtime,
                                            dict(runtime_opts or {}),
-                                           topology=topology)
+                                           topology=topology,
+                                           fault_schedule=fault_schedule,
+                                           failover=failover)
         elif backend == "sim":
             if spec is None and topology is not None:
                 spec = topology.to_cluster_spec()
@@ -530,7 +830,9 @@ class EdgeCluster:
             n_servers = spec.n
             self.backend = _SimBackend(spec, profile, plan, controller,
                                        router, tasks, seed, ratio_bucket,
-                                       topology=topology)
+                                       topology=topology,
+                                       fault_schedule=fault_schedule,
+                                       failover=failover)
         else:
             raise ValueError(
                 f"unknown backend {backend!r}: expected 'runtime' or 'sim'")
@@ -562,11 +864,15 @@ class EdgeCluster:
 
     @property
     def events(self) -> list[Event]:
-        """Cluster-level structured events (``rid = -1``): the staged
-        migration lifecycle of the shared control plane, in clock order —
+        """Cluster-level structured events (``rid = -1``) in clock order:
+        the staged migration lifecycle of the shared control plane —
         ``MIGRATION_STARTED`` when a review adopts a plan and schedules
-        its transfers, ``MIGRATION_COMPLETED`` when the transfers finish
-        and the plan becomes active."""
+        its transfers, ``MIGRATION_COMPLETED`` when the transfers finish,
+        ``MIGRATION_ABORTED`` when a fault invalidated them in flight —
+        merged with the consumed fault-injection events
+        (``SERVER_DOWN``/``SERVER_JOINED``/``LINK_DEGRADED``/
+        ``LINK_RESTORED``, payload: the fault fields plus the failover
+        bookkeeping — victims, tokens lost, reassignments)."""
         out: list[Event] = []
         ctrl = self.controller
         for e in (ctrl.events if ctrl is not None else []):
@@ -576,6 +882,11 @@ class EdgeCluster:
             elif e.get("reason") == "migration-complete":
                 out.append(Event(EventType.MIGRATION_COMPLETED, -1,
                                  e["time"], dict(e)))
+            elif e.get("reason") == "migration-aborted":
+                out.append(Event(EventType.MIGRATION_ABORTED, -1,
+                                 e["time"], dict(e)))
+        out.extend(getattr(self.backend, "fault_events", []))
+        out.sort(key=lambda e: e.time)     # stable: intra-source order kept
         return out
 
     def _net_metrics(self) -> dict | None:
@@ -586,6 +897,9 @@ class EdgeCluster:
         if meter is None:
             return None
         out = meter.summary()
+        # observe() calls skipped on a residency/counts shape mismatch
+        # (runtime backend; persistent mismatch raises in step())
+        out["meter_skips"] = int(getattr(self.backend, "meter_skips", 0))
         eb = self.backend._expert_bytes()
         out["per_server_mem_gb"] = [
             round(p.mem_bytes / 1e9, 3) for p in self.topology.profiles]
@@ -659,6 +973,10 @@ class EdgeCluster:
         net = self._net_metrics()
         if net is not None:
             out["net"] = net
+        fm = getattr(self.backend, "faults_metrics", None)
+        faults = fm() if fm is not None else None
+        if faults is not None:
+            out["faults"] = faults
         return out
 
 

@@ -75,6 +75,32 @@ class ServerProfile:
         return max(int(self.kv_mem_bytes // block_bytes), 1)
 
 
+@dataclasses.dataclass
+class LinkState:
+    """Mutable liveness/degradation overlay on a frozen :class:`Topology`.
+
+    The topology's profiled bandwidth/latency matrices describe the
+    *healthy* fabric and never change; fault injection flips these
+    switches instead (``repro.serving.faults.apply_fault``). Every cost
+    primitive below reads the overlay, so the controller, the transfer
+    planner and both backends see one consistent view of the fabric the
+    moment a fault lands.
+
+    up:        [N] bool — server liveness (False = crashed).
+    bw_factor: [N, N] in (0, 1] — per-link bandwidth multiplier
+               (1 = healthy, < 1 = degraded).
+    """
+    up: np.ndarray
+    bw_factor: np.ndarray
+
+    @staticmethod
+    def fresh(n: int) -> "LinkState":
+        return LinkState(np.ones(n, bool), np.ones((n, n)))
+
+    def copy(self) -> "LinkState":
+        return LinkState(self.up.copy(), self.bw_factor.copy())
+
+
 @dataclasses.dataclass(frozen=True)
 class Topology:
     """N servers + a per-link cost model.
@@ -86,6 +112,12 @@ class Topology:
     Both matrices may be asymmetric. Off-diagonal bandwidth must be finite
     and positive so every remote link costs strictly more than local
     compute (nearest-replica routing then never prefers a remote tie).
+
+    ``state`` is the mutable :class:`LinkState` overlay (server liveness,
+    link degradation). It is attached at construction and *shared*: the
+    ``PlacementController`` enforces one Topology object per cluster, so
+    a fault applied by a backend is immediately visible to every cost
+    computation.
     """
     profiles: tuple[ServerProfile, ...]
     bandwidth: np.ndarray
@@ -107,10 +139,20 @@ class Topology:
             raise ValueError("link latency must be >= 0")
         object.__setattr__(self, "bandwidth", bw)
         object.__setattr__(self, "latency", lat)
+        object.__setattr__(self, "state", LinkState.fresh(n))
 
     @property
     def n(self) -> int:
         return len(self.profiles)
+
+    @property
+    def alive(self) -> np.ndarray:
+        """[N] bool server-liveness view (the LinkState overlay)."""
+        return self.state.up
+
+    def effective_bandwidth(self) -> np.ndarray:
+        """[N, N] profiled bandwidth x the degradation overlay."""
+        return self.bandwidth * self.state.bw_factor
 
     # -- constructors --------------------------------------------------
     @staticmethod
@@ -161,18 +203,21 @@ class Topology:
         return ClusterSpec(servers=servers, bandwidth=bw, rtt=rtt)
 
     # -- link costs ----------------------------------------------------
+    # All three primitives price against the *effective* bandwidth
+    # (profiled x degradation overlay), so a LINK_DEGRADED fault is
+    # reflected in migration planning and Eq.-4 costs the moment it lands.
     def transfer_seconds(self, src: int, dst: int, nbytes: float) -> float:
         """Modeled seconds to move ``nbytes`` over the src -> dst link
         (0 for local)."""
         if src == dst:
             return 0.0
-        return float(nbytes / self.bandwidth[src, dst]
-                     + self.latency[src, dst])
+        bw = self.bandwidth[src, dst] * self.state.bw_factor[src, dst]
+        return float(nbytes / bw + self.latency[src, dst])
 
     def link_seconds(self, nbytes: float) -> np.ndarray:
         """[N, N] one-way transfer seconds for ``nbytes`` on every link
         (diag 0) — bulk weight moves, which only ride the forward link."""
-        out = nbytes / self.bandwidth + self.latency
+        out = nbytes / self.effective_bandwidth() + self.latency
         np.fill_diagonal(out, 0.0)
         return out
 
@@ -182,7 +227,7 @@ class Topology:
         (diag 0). The invocation-cost primitive — on asymmetric
         topologies the slow return leg prices at ITS OWN link, not the
         forward one."""
-        one_way = nbytes / self.bandwidth + self.latency
+        one_way = nbytes / self.effective_bandwidth() + self.latency
         out = one_way + one_way.T
         np.fill_diagonal(out, 0.0)
         return out
@@ -260,7 +305,6 @@ class TrafficMeter:
             self.link_bytes = np.zeros((n, n))
         if self.link_invocations is None:
             self.link_invocations = np.zeros((n, n))
-        self._cost = self.topology.round_trip_seconds(self.hidden_bytes)
 
     def seed(self, total_counts: np.ndarray) -> None:
         """Set the ``observe`` baseline to an existing cumulative counts
@@ -285,8 +329,12 @@ class TrafficMeter:
                 f"the {self.topology.n}-server topology")
         tokens = np.zeros((N, N))
         src_idx = np.repeat(np.arange(N), E)
+        # per-call, not cached at construction: the topology's LinkState
+        # overlay is mutable (fault injection), and replica choice must
+        # track the fabric the dispatch actually crossed
+        cost = self.topology.round_trip_seconds(self.hidden_bytes)
         for l in range(L):
-            tgt = route_targets(res[l], self._cost)           # [N, E]
+            tgt = route_targets(res[l], cost)                 # [N, E]
             np.add.at(tokens, (src_idx, tgt.reshape(-1)),
                       delta[l].reshape(-1))
         np.fill_diagonal(tokens, 0.0)                         # local = free
@@ -355,13 +403,18 @@ def plan_transfers(old: PlacementPlan, new: PlacementPlan,
                    ) -> list[TransferTask]:
     """Per-expert transfer tasks realizing ``new`` from ``old``: every
     newly placed (layer, server, expert) entry fetches the weights from
-    the cheapest *current* holder's link (local IO when nowhere resident).
-    Removals are free (weights are dropped, not moved)."""
+    the cheapest *live* current holder's link (local IO when no live
+    holder exists — a crashed server cannot source a copy, and its
+    resident replicas are lost with it). Degraded links are not excluded,
+    but ``link_seconds`` prices them at effective bandwidth, so a healthy
+    holder wins whenever one exists. Removals are free (weights are
+    dropped, not moved)."""
     res_old = old.residency()                       # [L, N, E]
     cost = topology.link_seconds(expert_bytes)
+    up = topology.state.up
     tasks: list[TransferTask] = []
     for l, n, e in iter_added_experts(old, new):
-        holders = np.where(res_old[l, :, e] > 0)[0]
+        holders = np.where((res_old[l, :, e] > 0) & up)[0]
         if len(holders):
             src = int(holders[np.argmin(cost[holders, n])])
         else:

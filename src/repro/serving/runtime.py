@@ -238,6 +238,49 @@ class BlockAllocator:
         return dict(self._rc)
 
 
+class Reservoir:
+    """Bounded, deterministic subsample of an append-only float stream.
+
+    The runtime's wall-time series (``decode_round_s``, ``ttft_s``)
+    previously grew one entry per decode round / request forever — a
+    leak on long-running serving. The reservoir keeps a *systematic*
+    1-in-``2^k`` subsample instead: it records every ``stride``-th
+    append, and when the kept list would exceed ``cap`` it drops every
+    other kept sample and doubles the stride. Survivors stay evenly
+    spaced over the whole stream (indices ``0, stride, 2*stride, ...``),
+    so percentiles remain representative of the full history at bounded
+    memory. No RNG — a replayed fault schedule stays bit-identical.
+
+    ``count`` is the total number of appends (the true observation
+    count); ``len()``/iteration expose the kept samples.
+    """
+
+    def __init__(self, cap: int = 4096):
+        if cap < 2:
+            raise ValueError(f"cap must be >= 2 (got {cap})")
+        self.cap = cap
+        self.count = 0            # total appends ever
+        self.stride = 1           # keep one sample per this many appends
+        self._data: list[float] = []
+
+    def append(self, x: float) -> None:
+        if self.count % self.stride == 0:
+            self._data.append(float(x))
+            if len(self._data) > self.cap:
+                self._data = self._data[::2]
+                self.stride *= 2
+        self.count += 1
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __iter__(self):
+        return iter(self._data)
+
+    def __bool__(self) -> bool:
+        return bool(self._data)
+
+
 class ServingRuntime:
     """Continuous batching over a shared KV pool.
 
@@ -381,9 +424,11 @@ class ServingRuntime:
         #   (sync loop: one per decode round / final prefill chunk; the
         #   zero-stall loop counts only drains whose async copy had not
         #   finished — its steady-state value is the stall count)
-        self.decode_round_s: list[float] = []   # per-round wall time of
-        #   the decode segment (launch [+ backlog drain] [+ token fetch])
-        self.ttft_s: list[float] = []  # wall-clock time to first token
+        self.decode_round_s = Reservoir()   # per-round wall time of the
+        #   decode segment (launch [+ backlog drain] [+ token fetch]);
+        #   bounded: a systematic subsample survives long runs
+        self.ttft_s = Reservoir()      # wall-clock time to first token
+        self._finished_total = 0       # results drained via pop_finished()
         self.migrations: list = []
         self._pending: collections.deque[_Pending] = collections.deque()
         self._t_enqueue: dict[int, float] = {}   # rid -> perf_counter()
@@ -412,13 +457,20 @@ class ServingRuntime:
             return self.allocator.capacity_blocks * self.block_size
         return self.max_slots * self.engine.max_len
 
-    def enqueue(self, request: Request) -> RequestHandle:
+    def enqueue(self, request: Request,
+                handle: RequestHandle | None = None) -> RequestHandle:
         """Enqueue one typed :class:`Request`; returns its
         :class:`RequestHandle` (structured ADMITTED/DEFERRED/PREFIX_HIT/
         TOKEN/FINISHED events, tokens, per-request metrics).
 
         ``request.origin`` is the EP rank / edge server the request arrived
         at — gating statistics are attributed to it (Algorithm 1's f_n(e)).
+
+        ``handle=`` re-admits a request under an *existing* handle (cluster
+        failover: a victim evicted from a crashed server keeps one
+        observable lifecycle across servers). The handle is re-bound to a
+        fresh internal rid; its original ``submitted_at`` is preserved so
+        end-to-end latency spans the crash.
 
         Paged mode validates against the *total pool capacity* (a request
         merely larger than the legacy ``max_len`` is admissible — it just
@@ -463,8 +515,14 @@ class ServingRuntime:
         self._next_rid += 1
         self.queue.append(GenRequest(rid, prompt, max_new_tokens, origin,
                                      getattr(request, "eos", None)))
-        handle = RequestHandle(rid, request, clock="ticks")
-        handle.submitted_at = self.ticks
+        if handle is None:
+            handle = RequestHandle(rid, request, clock="ticks")
+            handle.submitted_at = self.ticks
+        else:
+            handle.rid = rid
+            handle.request = request
+            if handle.submitted_at is None:
+                handle.submitted_at = self.ticks
         self.handles[rid] = handle
         self._t_enqueue[rid] = time.perf_counter()
         return handle
@@ -498,8 +556,52 @@ class ServingRuntime:
     @property
     def prefix_hit_rate(self) -> float:
         """Fraction of admitted requests that reused cached prefix pages."""
-        n = len(self.finished) + self.active
+        n = self._finished_total + len(self.finished) + self.active
         return self.prefix_hits / n if n else 0.0
+
+    def pop_finished(self) -> dict[int, np.ndarray]:
+        """Drain completed results: returns ``{rid: tokens}`` for every
+        finished request and releases their bookkeeping (result arrays,
+        completion ticks, handles). Long-running callers (the cluster
+        backends) call this periodically so the runtime's footprint is
+        bounded by the *live* request set, not the full serve history —
+        ``finished`` / ``finished_at`` / ``handles`` previously grew one
+        entry per request forever. Callers that never pop keep the old
+        read-after-``run()`` behavior unchanged."""
+        out = dict(self.finished)
+        self.finished.clear()
+        self._finished_total += len(out)
+        for rid in out:
+            self.finished_at.pop(rid, None)
+            self.handles.pop(rid, None)
+        return out
+
+    def evict(self, rid: int) -> int:
+        """Remove one request — queued or in flight — and return the
+        number of tokens it had already emitted (the cluster's failover
+        bookkeeping: tokens a re-routed victim must regenerate). An
+        in-flight slot's pages are released (cache-shared blocks survive
+        via their refcounts) and any still-pending backlog drain for the
+        old slot is dropped by the rid guard — the same mechanism that
+        absorbs EOS-lagged speculative rounds. The handle stays with the
+        caller, who may re-submit it elsewhere (``enqueue(handle=...)``);
+        unknown/finished rids are a no-op returning 0."""
+        for k, r in enumerate(self.queue):
+            if r.rid == rid:
+                del self.queue[k]
+                self.handles.pop(rid, None)
+                self._t_enqueue.pop(rid, None)
+                return 0
+        for i, s in enumerate(self.slots):
+            if s is not None and s.rid == rid:
+                if self.paged and s.pages:
+                    self.allocator.release(s.pages)
+                    self.page_table[i] = 0
+                self.slots[i] = None
+                self.handles.pop(rid, None)
+                self._t_enqueue.pop(rid, None)
+                return len(s.tokens)
+        return 0
 
     @property
     def traces_after_warmup(self) -> int:
@@ -515,6 +617,7 @@ class ServingRuntime:
         retrace/stall counters and decode-round / time-to-first-token
         wall-time percentiles (milliseconds)."""
         def pct(xs):
+            xs = list(xs)
             if not xs:
                 return {"p50": 0.0, "p99": 0.0}
             return {"p50": round(float(np.percentile(xs, 50)) * 1e3, 6),
@@ -524,7 +627,7 @@ class ServingRuntime:
             "executables_compiled": self.executables_compiled,
             "traces_after_warmup": self.traces_after_warmup,
             "host_syncs": self.host_syncs,
-            "rounds_timed": len(self.decode_round_s),
+            "rounds_timed": self.decode_round_s.count,
             "decode_round_ms": pct(self.decode_round_s),
             "ttft_ms": pct(self.ttft_s),
         }
@@ -933,7 +1036,8 @@ class ServingRuntime:
                 return True
             self.engine._ingest(mstats)
             self.host_syncs += 1
-            self._drain_tokens(launched, np.asarray(nxt))
+            self._drain_tokens(launched, np.asarray(nxt),
+                               self._round_local_frac(mstats))
         else:
             cur = np.zeros((B, 1), np.int32)
             for j, i in enumerate(row_slots):
@@ -947,7 +1051,8 @@ class ServingRuntime:
             self.engine._ingest(mstats)
             self.host_syncs += 1
             self._drain_tokens(launched,
-                               np.asarray(jnp.argmax(logits, -1), np.int32))
+                               np.asarray(jnp.argmax(logits, -1), np.int32),
+                               self._round_local_frac(mstats))
         self.rounds += 1
         self._maybe_review()
         return True
@@ -968,11 +1073,24 @@ class ServingRuntime:
             self.host_syncs += 1
         return np.asarray(x)
 
-    def _drain_tokens(self, rows, nxt: np.ndarray) -> None:
+    @staticmethod
+    def _round_local_frac(mstats) -> float | None:
+        """The launch round's mean local-dispatch fraction, computed from
+        that round's *own* gating stats. Drains previously read the
+        engine's mutable ``last_local_frac`` instead — any sharer of the
+        engine (another runtime, a ``generate()`` call) that ingests stats
+        between launch and drain would have its round's locality
+        misattributed to this one's slots."""
+        if mstats is None or "local_frac" not in mstats:
+            return None
+        return float(np.asarray(mstats["local_frac"]).mean())
+
+    def _drain_tokens(self, rows, nxt: np.ndarray,
+                      lf: float | None) -> None:
         """Apply one decode round's tokens to the slots that launched them
         (rid-guarded: an EOS-retired or re-assigned slot drops its
-        speculative token)."""
-        lf = self.engine.last_local_frac
+        speculative token). ``lf`` is the round's own local fraction,
+        captured from its gating stats at launch (``_round_local_frac``)."""
         for j, i, rid in rows:
             slot = self.slots[i]
             if slot is None or slot.rid != rid:
@@ -988,7 +1106,8 @@ class ServingRuntime:
     def _drain_one(self, p: _Pending) -> None:
         self.engine._ingest(p.mstats)
         if p.kind == "decode":
-            self._drain_tokens(p.rows, self._fetch(p.nxt))
+            self._drain_tokens(p.rows, self._fetch(p.nxt),
+                               self._round_local_frac(p.mstats))
             self.rounds += 1
             self._maybe_review()
         else:

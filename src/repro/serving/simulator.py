@@ -302,6 +302,12 @@ class EdgeSimulator:
         self.time_model = TimeModel(cluster, profile, topology=topology)
         self.ratio_bucket = ratio_bucket
         self._started = False
+        # fault model: with a topology attached, crashed servers (its
+        # LinkState's ``up`` flags) are dropped from the serving residency
+        # so their experts stop being dispatch targets. The no-failover
+        # measurement baseline turns this off — it models a cluster
+        # oblivious to the crash (see EdgeCluster ``failover=``).
+        self.mask_dead_residency = True
 
     @staticmethod
     def _unwrap(controller) -> PlacementController | None:
@@ -396,10 +402,11 @@ class EdgeSimulator:
             ratio.add(hits, tot)
             req_hits, req_tot = hits, tot
         else:
+            res = self._effective_res()
             service = 0.0
             for l in range(L):
                 worst, hits, tot = tm.collab_layer(layer_counts[l],
-                                                   self._res[l], n, timeline)
+                                                   res[l], n, timeline)
                 ratio.add(hits, tot)
                 req_hits += hits
                 req_tot += tot
@@ -418,21 +425,7 @@ class EdgeSimulator:
 
         migrated = False
         if ctrl is not None:
-            comp = ctrl.poll(done)
-            if comp is not None:
-                # staged transfers finished: switch plans with no stall —
-                # the link schedule already charged the move (overlapped
-                # with serving), replacing the instantaneous Eq.-3 pause
-                new_res = comp.plan.residency()
-                added = np.maximum(new_res - self._res, 0).sum(0).sum(-1)
-                self._migrations.append({
-                    "time": done, "completed": True,
-                    "staged_at": comp.started, "eta": comp.eta,
-                    "transfer_seconds": comp.seconds,
-                    "transfer_bytes": comp.nbytes,
-                    "added_per_server": added.tolist()})
-                self._plan, self._res = comp.plan, new_res
-                migrated = True
+            migrated = self.poll_migration(done)
             dec = ctrl.review(done)
             if dec.adopted and dec.staged:
                 self._migrations.append({
@@ -451,10 +444,70 @@ class EdgeSimulator:
                 "done": done, "latency": done - r.arrival,
                 "hits": req_hits, "tot": req_tot, "migrated": migrated}
 
-    def loads(self, arrival: float = 0.0) -> np.ndarray:
-        """[N] earliest-start estimate per server (the router's input)."""
+    def poll_migration(self, now: float) -> bool:
+        """Complete the controller's in-flight staged migration once its
+        transfers have landed (``now >= eta``): the pending plan becomes
+        the serving residency with no stall — the link schedule already
+        charged the move, overlapped with serving, replacing the
+        instantaneous Eq.-3 pause. Called per served request and by the
+        fault path (which fast-forwards stalled requests to the recovery
+        plan's eta). Returns whether a switch happened."""
+        ctrl = self.controller
+        if ctrl is None:
+            return False
+        comp = ctrl.poll(now)
+        if comp is None:
+            return False
+        new_res = comp.plan.residency()
+        added = np.maximum(new_res - self._res, 0).sum(0).sum(-1)
+        self._migrations.append({
+            "time": now, "completed": True,
+            "staged_at": comp.started, "eta": comp.eta,
+            "transfer_seconds": comp.seconds,
+            "transfer_bytes": comp.nbytes,
+            "added_per_server": added.tolist()})
+        self._plan, self._res = comp.plan, new_res
+        return True
+
+    def adopt_plan(self, plan) -> None:
+        """Switch the serving residency to ``plan`` immediately (the fault
+        path's instant adoption, when recovery needs no transfers)."""
         self.start()
-        return np.maximum(self._timeline.free, arrival)
+        self._plan, self._res = plan, plan.residency()
+
+    def _effective_res(self) -> np.ndarray:
+        """The serving residency minus crashed servers: a dead server's
+        experts are not dispatch targets. Bit-identical to ``_res`` while
+        every server is up (or without a topology / with
+        ``mask_dead_residency`` off)."""
+        res = self._res
+        if (res is None or not self.mask_dead_residency
+                or self.topology is None):
+            return res
+        up = np.asarray(self.topology.state.up)
+        if up.all():
+            return res
+        return res * up.astype(res.dtype)[None, :, None]
+
+    def uncovered_live_experts(self) -> bool:
+        """True when some expert has no replica on any live server — a
+        crash amputated its only holder(s); requests stall until the
+        recovery migration restores coverage."""
+        res = self._effective_res()
+        if res is None or res is self._res:
+            return False
+        return bool((res.sum(1) <= 0).any())
+
+    def loads(self, arrival: float = 0.0) -> np.ndarray:
+        """[N] earliest-start estimate per server (the router's input);
+        crashed servers report ``inf`` so no router picks them."""
+        self.start()
+        loads = np.maximum(self._timeline.free, arrival)
+        if self.topology is not None:
+            up = np.asarray(self.topology.state.up)
+            if not up.all():
+                loads = np.where(up, loads, np.inf)
+        return loads
 
     def local_ratio_by_server(self) -> np.ndarray:
         """[N] local-compute ratio of the traffic each server has served so

@@ -1,0 +1,96 @@
+"""Per-request ``local_frac`` attribution: warm (zero-stall, drains one
+tick late) vs sync loop on 2 EP ranks, where dispatch locality is a real
+signal (a single rank reports local_frac = 1.0 trivially).
+
+With ``max_slots >= n_requests`` nothing queues, so both loops serve
+identical batch compositions round for round — tokens AND the per-request
+local_frac attribution must then match exactly. The warm loop drains each
+round one tick after launching it; before the launch-round-stats fix
+(``_round_local_frac``), the drain read the engine's mutable
+``last_local_frac``, which by then held the *next* round's value — the
+attribution drifted whenever compositions changed between rounds.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=2")
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import TaskTokenSource
+from repro.launch.mesh import make_test_mesh
+from repro.models import moe as M
+from repro.models import transformer as tr
+from repro.serving.api import Request
+from repro.serving.engine import ServingEngine
+from repro.serving.runtime import ServingRuntime
+
+N_REQUESTS = 6
+
+
+def build_engine():
+    cfg = get_config("mixtral-8x7b").reduced()
+    mesh = make_test_mesh(1, 2)
+    spec = M.EPSpec.build(
+        mesh, cfg, ep_axes=("model",), slots=2, capacity=4096, slot_capacity=8192
+    )
+    _, n_groups = cfg.layer_pattern()
+    rt = tr.Runtime(cfg=cfg, mesh=mesh, moe_impl="ep", ep_spec=spec)
+    rt_dense = tr.Runtime(cfg=cfg, mesh=mesh, moe_impl="dense")
+    params_dense = tr.init_params(rt_dense, jax.random.PRNGKey(0))
+    pl0 = M.uniform_placement(spec.n_ep, spec.slots, cfg.num_experts)
+    pls0 = tr.stack_placement(pl0, n_groups)
+    params = dict(params_dense)
+    params["groups"] = M.regather_ep_groups(params_dense["groups"], pls0, n_groups)
+    engine = ServingEngine(
+        rt=rt,
+        params=params,
+        placement=pls0,
+        dense_master=params_dense["groups"],
+        max_len=64,
+    )
+    return cfg, engine
+
+
+def build_requests(cfg):
+    reqs = []
+    for k in range(N_REQUESTS):
+        src = TaskTokenSource(f"t{k}", cfg.vocab_size, seed=20 + k)
+        prompt = src.sample(1, 12)[0]
+        # varying lengths: requests retire at different rounds, so the
+        # batch composition (and with it the round's local_frac) changes
+        # between consecutive rounds — exactly the window the stale
+        # drain-time read used to misattribute across
+        reqs.append(Request(prompt=prompt, max_new_tokens=3 + 2 * k, origin=k % 2))
+    return reqs
+
+
+def run(engine, requests, warm: bool):
+    rtm = ServingRuntime(
+        engine, max_slots=N_REQUESTS, block_size=8, warmup=warm, prefix_cache=False
+    )
+    hs = [rtm.enqueue(r) for r in requests]
+    rtm.run()
+    return [(h.metrics.get("local_frac"), h.result().tolist()) for h in hs]
+
+
+def main():
+    cfg, engine = build_engine()
+    requests = build_requests(cfg)
+    sync = run(engine, requests, warm=False)
+    warm = run(engine, requests, warm=True)
+    for k, ((lf_s, tok_s), (lf_w, tok_w)) in enumerate(zip(sync, warm)):
+        assert tok_s == tok_w, f"request {k}: tokens differ warm vs sync"
+        assert lf_s is not None and 0.0 <= lf_s <= 1.0, (k, lf_s)
+        assert lf_s == lf_w, (
+            f"request {k}: local_frac differs — sync {lf_s} vs warm "
+            f"{lf_w}; the warm drain attributed another round's stats"
+        )
+    print("warm-vs-sync local_frac identity OK:", [round(lf, 6) for lf, _ in sync])
+    print("ALL OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -383,13 +383,13 @@ def test_cluster_sim_slo_and_step():
 
 
 # ---------------------------------------------------------------------------
-# bench-serving/v4 schema (satellite): cluster + net + perf validation
+# bench-serving/v5 schema (satellite): cluster + net + perf + faults
 # ---------------------------------------------------------------------------
 
-def _v4_doc():
+def _v5_doc():
     pair = {"cache": 2, "nocache": 1}
     return {
-        "schema": "bench-serving/v4", "mode": "smoke",
+        "schema": "bench-serving/v5", "mode": "smoke",
         "metrics": {
             "admitted_concurrency": dict(pair),
             "prefill_chunks_executed": dict(pair),
@@ -426,16 +426,26 @@ def _v4_doc():
                 "decode_round_ms": {"p50": 3.5, "p99": 9.0},
                 "ttft_ms": {"p50": 120.0, "p99": 250.0},
             },
+            "faults": {
+                "injected": 1,
+                "recovered": 1,
+                "tokens_lost": 0,
+                "recovery_seconds": 0.25,
+                "requests_dropped": 0,
+                "baseline_tokens_lost": 200,
+                "baseline_requests_dropped": 10,
+                "replay_identical": 1,
+            },
         },
     }
 
 
-def test_schema_v4_accepts_and_rejects():
+def test_schema_v5_accepts_and_rejects():
     import sys
     import os
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     from benchmarks.schema import BenchSchemaError, validate_bench_serving
-    assert validate_bench_serving(_v4_doc())
+    assert validate_bench_serving(_v5_doc())
     for mutate in (
         lambda d: d["metrics"].pop("cluster"),
         lambda d: d["metrics"]["cluster"].pop("per_server_local_ratio"),
@@ -454,7 +464,7 @@ def test_schema_v4_accepts_and_rejects():
                                  [1, 1, 0]]),                    # negative
         lambda d: d["metrics"]["net"].update(cross_server_bytes=0),  # empty
         lambda d: d["metrics"]["net"].pop("migration_transfer_seconds"),
-        lambda d: d.update(schema="bench-serving/v3"),           # stale tag
+        lambda d: d.update(schema="bench-serving/v4"),           # stale tag
         lambda d: d["metrics"].pop("perf"),                      # v4
         lambda d: d["metrics"]["perf"].pop("decode_round_ms"),
         lambda d: d["metrics"]["perf"]["decode_round_ms"].pop("p99"),
@@ -463,8 +473,14 @@ def test_schema_v4_accepts_and_rejects():
         lambda d: d["metrics"]["perf"].update(
             decode_round_ms={"p50": 0.0, "p99": 0.0}),           # untimed
         lambda d: d["metrics"]["perf"].update(warmup_seconds=-1),
+        lambda d: d["metrics"].pop("faults"),                    # v5
+        lambda d: d["metrics"]["faults"].pop("recovery_seconds"),
+        lambda d: d["metrics"]["faults"].update(injected=0),     # no fault
+        lambda d: d["metrics"]["faults"].update(
+            replay_identical=0),                                 # not bit-id
+        lambda d: d["metrics"]["faults"].update(tokens_lost=-1),
     ):
-        doc = _v4_doc()
+        doc = _v5_doc()
         mutate(doc)
         with pytest.raises(BenchSchemaError):
             validate_bench_serving(doc)

@@ -213,3 +213,202 @@ def test_prefill_stats_weighted_by_tokens(engine_setup):
     prefill_mass = mass1 - decode_step_mass
     assert decode_step_mass > 0
     assert prefill_mass / decode_step_mass == pytest.approx(T, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# PR 7 satellites: bounded metrics reservoirs, pop_finished, failover
+# eviction/re-admission, launch-round local_frac attribution, metering
+# that never fails silently
+# ---------------------------------------------------------------------------
+
+from repro.serving.cluster import EdgeCluster  # noqa: E402
+from repro.serving.net import ServerProfile, Topology  # noqa: E402
+from repro.serving.runtime import Reservoir, _Pending  # noqa: E402
+
+
+def test_reservoir_decimation_bounded_and_deterministic():
+    r = Reservoir(cap=64)
+    for k in range(10_000):
+        r.append(float(k))
+    assert r.count == 10_000            # true observation count survives
+    assert 2 <= len(r) <= 64            # kept samples stay bounded
+    kept = list(r)
+    # systematic decimation: survivors are exactly the consecutive
+    # multiples of the final stride (evenly spaced over the full stream)
+    assert kept == [float(k * r.stride) for k in range(len(kept))]
+    # percentiles stay representative of the full history
+    assert np.percentile(kept, 50) == pytest.approx(
+        float(np.percentile(np.arange(10_000), 50)), rel=0.05)
+    # no RNG: an identical stream decimates identically (fault-schedule
+    # reruns must stay bit-identical)
+    r2 = Reservoir(cap=64)
+    for k in range(10_000):
+        r2.append(float(k))
+    assert list(r2) == kept and r2.stride == r.stride
+    with pytest.raises(ValueError, match="cap"):
+        Reservoir(cap=1)
+
+
+def test_perf_metrics_bounded_by_reservoir(engine_setup):
+    """decode_round_s / ttft_s previously grew one entry per round/request
+    forever; they are reservoirs now, and the perf section reports the
+    true round count, not the kept-sample count."""
+    cfg, spec, n_groups, eng, src = engine_setup
+    rtm = ServingRuntime(eng, max_slots=2)
+    assert rtm.decode_round_s.cap >= 2 and rtm.ttft_s.cap >= 2
+    rtm.enqueue(Request(prompt=src.sample(1, 8)[0], max_new_tokens=4))
+    rtm.run()
+    pm = rtm.perf_metrics()
+    assert pm["rounds_timed"] == rtm.decode_round_s.count > 0
+    assert pm["decode_round_ms"]["p50"] > 0
+
+
+def test_pop_finished_releases_bookkeeping(engine_setup):
+    cfg, spec, n_groups, eng, src = engine_setup
+    rtm = ServingRuntime(eng, max_slots=4)
+    h1 = rtm.enqueue(Request(prompt=src.sample(1, 8)[0], max_new_tokens=4))
+    h2 = rtm.enqueue(Request(prompt=src.sample(1, 12)[0], max_new_tokens=3))
+    out = rtm.run()
+    hit_rate = rtm.prefix_hit_rate
+    popped = rtm.pop_finished()
+    assert set(popped) == {h1.rid, h2.rid}
+    np.testing.assert_array_equal(popped[h1.rid], out[h1.rid])
+    # the per-request bookkeeping is released...
+    assert not rtm.finished and not rtm.finished_at and not rtm.handles
+    # ...but the rate denominators survive the pop
+    assert rtm.prefix_hit_rate == hit_rate
+    # a later pop returns only the newer results
+    h3 = rtm.enqueue(Request(prompt=src.sample(1, 8)[0], max_new_tokens=2))
+    rtm.run()
+    assert set(rtm.pop_finished()) == {h3.rid}
+    assert rtm.pop_finished() == {}
+
+
+def test_evict_and_readmit_under_same_handle(engine_setup):
+    """The cluster failover path: evict an in-flight request (pages
+    recycled, invariants hold), then re-admit it under its original
+    handle — the regenerated stream matches sequential generate()."""
+    cfg, spec, n_groups, eng, src = engine_setup
+    p1 = src.sample(1, 16)[0]
+    ref1 = _reference(eng, p1, 6)
+    rtm = ServingRuntime(eng, max_slots=2, prefix_cache=False)
+    h1 = rtm.enqueue(Request(prompt=p1, max_new_tokens=6))
+    h2 = rtm.enqueue(Request(prompt=src.sample(1, 12)[0], max_new_tokens=6))
+    h3 = rtm.enqueue(Request(prompt=src.sample(1, 8)[0], max_new_tokens=2))
+    for _ in range(3):                 # h1/h2 in flight, h3 still queued
+        rtm.step()
+    assert not h1.done
+    emitted = rtm.evict(h1.rid)
+    assert emitted == len(h1._tokens)  # tokens the victim must regenerate
+    assert h1.rid not in rtm.handles
+    assert rtm.evict(h3.rid) == 0      # queued victim: nothing emitted yet
+    assert rtm.evict(999_999) == 0     # unknown rid: no-op
+    rtm.check_invariants()
+    old_rid = h1.rid
+    h1._tokens.clear()                 # the stream restarts from scratch
+    rtm.enqueue(Request(prompt=p1, max_new_tokens=6), handle=h1)
+    assert h1.rid != old_rid           # re-bound to a fresh internal rid
+    out = rtm.run()
+    assert h1.done
+    np.testing.assert_array_equal(out[h1.rid], ref1)
+    np.testing.assert_array_equal(h1.result(), ref1)
+    rtm.check_invariants()
+    if rtm.paged:
+        assert rtm.allocator.n_free == rtm.allocator.capacity_blocks
+
+
+def test_drain_attributes_launch_round_local_frac(engine_setup):
+    """Regression (pre-PR bug): ``_drain_tokens`` read the engine's
+    mutable ``last_local_frac`` at *drain* time, so a round whose gating
+    stats carried no local_frac — or any engine sharer ingesting between
+    launch and drain — mis-credited a stale value to the draining slots.
+    The round's own stats, captured at launch, are authoritative."""
+    cfg, spec, n_groups, eng, src = engine_setup
+    rtm = ServingRuntime(eng, max_slots=2, prefix_cache=False)
+    h = rtm.enqueue(Request(prompt=src.sample(1, 8)[0], max_new_tokens=6))
+    rtm.step()                          # prefill (+ first decode rounds)
+    rtm.step()
+    i, slot = next((i, s) for i, s in enumerate(rtm.slots)
+                   if s is not None and s.rid == h.rid)
+    assert not slot.prefilling and len(slot.tokens) < slot.need
+    zero_counts = np.zeros((n_groups, spec.n_ep, cfg.num_experts))
+    eng.last_local_frac = 0.25          # a sharer's stale value
+    # a legal round record whose stats carry no local_frac: nothing may
+    # be attributed (pre-PR code credited the stale 0.25 here)
+    before = (slot.lf_sum, slot.lf_rounds)
+    rtm._drain_one(_Pending(
+        kind="decode", tick=rtm.ticks, rows=[(0, i, h.rid)],
+        nxt=np.array([3], np.int32),
+        mstats={"counts_per_rank": zero_counts}))
+    assert (slot.lf_sum, slot.lf_rounds) == before
+    assert slot.tokens[-1] == 3         # the token itself still lands
+    # a round that does carry local_frac attributes its own value
+    eng.last_local_frac = 0.25
+    rtm._drain_one(_Pending(
+        kind="decode", tick=rtm.ticks, rows=[(0, i, h.rid)],
+        nxt=np.array([4], np.int32),
+        mstats={"counts_per_rank": zero_counts,
+                "local_frac": np.array([0.5])}))
+    assert slot.lf_rounds == before[1] + 1
+    assert slot.lf_sum == pytest.approx(before[0] + 0.5)
+    eng.stats.reset()
+
+
+def _solo_topology() -> Topology:
+    return Topology((ServerProfile("solo", mem_bytes=8e9),),
+                    np.array([[500e6 / 8]]), np.array([[0.0]]))
+
+
+def test_meter_mismatch_raises_when_it_never_succeeded(engine_setup):
+    """Regression (pre-PR bug): a persistently mismatched residency view
+    made ``step()`` skip metering silently forever — ``metrics()['net']``
+    read zero dispatch bytes with no hint anything was wrong."""
+    cfg, spec, n_groups, eng, src = engine_setup
+    ec = EdgeCluster("runtime", engine=eng, n_servers=1,
+                     topology=_solo_topology(),
+                     runtime_opts=dict(max_slots=2))
+    ec.backend._residency = lambda: np.zeros((1, 1, 1))   # wrong shape
+    with pytest.raises(RuntimeError, match="metering"):
+        for _ in range(40):
+            ec.step()
+    assert ec.backend.meter_skips >= 32
+    assert ec.metrics()["net"]["meter_skips"] >= 32
+
+
+def test_meter_transient_mismatch_is_tolerated(engine_setup):
+    """A mismatch window after metering has worked (e.g. plan granularity
+    churn mid-migration) is counted and surfaced, never fatal."""
+    cfg, spec, n_groups, eng, src = engine_setup
+    ec = EdgeCluster("runtime", engine=eng, n_servers=1,
+                     topology=_solo_topology(),
+                     runtime_opts=dict(max_slots=2))
+    ec.submit(Request(prompt=src.sample(1, 8)[0], max_new_tokens=2))
+    ec.run()
+    assert ec.backend._meter_ok > 0 and ec.backend.meter_skips == 0
+    ec.backend._residency = lambda: np.zeros((1, 1, 1))
+    for _ in range(40):                 # far past the streak threshold
+        ec.step()
+    assert ec.backend.meter_skips == 40
+    assert ec.metrics()["net"]["meter_skips"] == 40
+
+
+def test_local_frac_warm_vs_sync_subprocess():
+    """Satellite regression: per-request local_frac attribution must be
+    identical between the sync and warm (zero-stall) loops when nothing
+    queues. Runs on 2 fake EP ranks in a subprocess (locality on a single
+    rank is trivially 1.0; the fake device count must not leak into this
+    process — the tier-1 convention, see test_multidevice)."""
+    import os
+    import subprocess
+    import sys
+    from pathlib import Path
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = str(Path(__file__).parent.parent / "src")
+    r = subprocess.run(
+        [sys.executable, str(Path(__file__).parent / "md_scripts"
+                             / "local_frac_warm_sync.py")],
+        env=env, capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, \
+        f"local_frac_warm_sync.py failed:\n{r.stdout}\n{r.stderr}"
+    assert "ALL OK" in r.stdout
