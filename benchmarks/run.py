@@ -11,6 +11,9 @@ land in every CI run or the gate fails loudly.
 
   PYTHONPATH=src python -m benchmarks.run [--csv]
   PYTHONPATH=src python -m benchmarks.run --smoke [--out BENCH_serving.json]
+
+Field-by-field documentation of every ``metrics.*`` section in the
+emitted document lives in docs/benchmarks.md.
 """
 
 from __future__ import annotations
@@ -23,6 +26,7 @@ import time
 def smoke(out_path: str) -> None:
     import benchmarks.failover as failover
     import benchmarks.prefix_cache as prefix_cache
+    import benchmarks.tiers as tiers
     import benchmarks.topology as topology
     from benchmarks.schema import validate_bench_serving
 
@@ -32,6 +36,8 @@ def smoke(out_path: str) -> None:
     #   run (per-link dispatch bytes, staged-migration transfer totals)
     doc["metrics"]["faults"] = failover.smoke()  # v5: mid-run crash +
     #   failover vs no-failover baseline, deterministic replay asserted
+    doc["metrics"]["tiers"] = tiers.smoke()  # v6: oversized model over
+    #   host-RAM expert tiers, prefetch vs frozen residency
     doc["elapsed_s"] = round(time.time() - t0, 2)
     validate_bench_serving(doc)  # raises (non-zero exit) on breakage
     with open(out_path, "w") as f:
@@ -79,9 +85,22 @@ def smoke(out_path: str) -> None:
         f"(baseline {int(fl['baseline_tokens_lost'])}) "
         f"replay_identical={int(fl['replay_identical'])}"
     )
+    t = m["tiers"]
+    print(
+        f"tiers[v6]: gpu_slots={t['per_server_gpu_slots']} "
+        f"promotions={int(t['promotions'])} "
+        f"hit_ratio={t['prefetch_hit_ratio']:.3f} "
+        f"stall={t['on_demand_stall_seconds']:.3g}s "
+        f"(no-prefetch {t['prefetch_off_stall_seconds']:.3g}s) "
+        f"latency={t['mean_latency_s']:.4f}s "
+        f"(no-prefetch {t['prefetch_off_mean_latency_s']:.4f}s)"
+    )
 
 
 def main() -> None:
+    if "--help" in sys.argv or "-h" in sys.argv:
+        print(__doc__)
+        return
     if "--smoke" in sys.argv:
         out = "BENCH_serving.json"
         if "--out" in sys.argv:
@@ -102,6 +121,7 @@ def main() -> None:
     import benchmarks.roofline_table as roofline_table
     import benchmarks.table1 as table1
     import benchmarks.table2 as table2
+    import benchmarks.tiers as tiers
     import benchmarks.topology as topology
 
     csv = "--csv" in sys.argv
@@ -117,6 +137,7 @@ def main() -> None:
         ("Prefix cache (chunk reduction + concurrency)", prefix_cache.main),
         ("Topology  (non-uniform links, staged migration)", topology.main),
         ("Failover  (mid-run crash, recovery vs baseline)", failover.main),
+        ("Tiers     (oversized model, host-RAM expert tiers)", tiers.main),
     ]:
         t0 = time.time()
         print(f"\n##### {name}")

@@ -9,14 +9,16 @@ runner)."""
 
 from __future__ import annotations
 
-SCHEMA_NAME = "bench-serving/v5"
+SCHEMA_NAME = "bench-serving/v6"
 
 # metric key -> ("scalar" | "pair" | "stats") shape requirement.
 # v2 extended v1 (same keys, same shapes) with the EdgeCluster section;
 # v3 adds the heterogeneous-topology section (``metrics.net``) and the
 # per-server profile caps; v4 adds the AOT warmup / zero-stall section
 # (``metrics.perf``); v5 adds the fault-injection/failover section
-# (``metrics.faults``) — extend, don't fork, when adding serving metrics.
+# (``metrics.faults``); v6 adds the expert tier hierarchy section
+# (``metrics.tiers``) — extend, don't fork, when adding serving metrics.
+# Field-by-field documentation: docs/benchmarks.md.
 _REQUIRED_METRICS = {
     "admitted_concurrency": "pair",  # {"cache": n, "nocache": n}
     "prefill_chunks_executed": "pair",
@@ -82,6 +84,28 @@ _REQUIRED_FAULTS = {
     "baseline_tokens_lost": "scalar",  # no-failover comparison
     "baseline_requests_dropped": "scalar",
     "replay_identical": "scalar",  # 1 iff reruns were bit-identical
+}
+
+
+# v6: metrics.tiers — the expert tier hierarchy / oversized-model section
+# produced by ``benchmarks.tiers`` (aggregate expert set > aggregate GPU
+# memory; host-RAM tiers behind each GPU; activation-aware prefetch vs a
+# frozen-residency baseline).
+_REQUIRED_TIERS = {
+    "n_servers": "scalar",
+    "per_server_gpu_slots": "list",  # GPU-tier expert slots (whole server)
+    "per_server_host_slots": "list",  # deepest-tier slots (cumulative)
+    "per_server_gpu_resident": "list",  # experts GPU-resident at run end
+    "per_server_host_resident": "list",  # experts parked in back tiers
+    "promotions": "scalar",  # host->GPU prefetch fetches that landed
+    "demotions": "scalar",  # GPU->back-tier moves (free: inclusive tiers)
+    "prefetch_hit_ratio": "scalar",  # GPU-resident activation fraction
+    "on_demand_fetches": "scalar",  # cold-expert fetch events
+    "on_demand_stall_seconds": "scalar",  # modeled stall total
+    "mean_latency_s": "scalar",  # prefetch leg, modeled seconds
+    "prefetch_off_mean_latency_s": "scalar",  # frozen-residency baseline
+    "prefetch_off_fetches": "scalar",
+    "prefetch_off_stall_seconds": "scalar",
 }
 
 
@@ -202,6 +226,19 @@ def validate_bench_serving(doc) -> dict:
             "metrics.faults.replay_identical: fault replay was not "
             "bit-identical"
         )
+
+    # -- v6: the expert tier hierarchy / oversized-model section ----------
+    tiers = metrics.get("tiers")
+    if not isinstance(tiers, dict) or not tiers:
+        raise BenchSchemaError("metrics.tiers: missing or empty (v6)")
+    _validate_section(tiers, "metrics.tiers", _REQUIRED_TIERS)
+    if tiers["promotions"] < 1:
+        raise BenchSchemaError(
+            "metrics.tiers.promotions: empty run (the prefetcher never "
+            "promoted an expert)"
+        )
+    if tiers["prefetch_hit_ratio"] > 1.0:
+        raise BenchSchemaError("metrics.tiers.prefetch_hit_ratio: ratio > 1")
     return doc
 
 

@@ -175,14 +175,24 @@ class PlacementPlan:
     counts: np.ndarray                # [L, N]
     num_experts: int
 
-    def slot_tables(self, slots: int) -> np.ndarray:
-        """[L, N, slots] int32 slot_to_expert (-1 = empty)."""
+    def slot_tables(self, slots: int,
+                    priority: np.ndarray | None = None) -> np.ndarray:
+        """[L, N, slots] int32 slot_to_expert (-1 = empty).
+
+        ``priority`` ([L, N, E], lower = hotter — e.g. the tier table from
+        ``repro.serving.tiers``) reorders each server's assignment before
+        the slot truncation, so when a tiered plan assigns more experts
+        than the engine has physical slots, the GPU-tier subset is what
+        actually lands in the tables."""
         L = len(self.assign)
         N = len(self.assign[0])
         out = -np.ones((L, N, slots), np.int32)
         for l in range(L):
             for n in range(N):
-                ex = self.assign[l][n][:slots]
+                ex = self.assign[l][n]
+                if priority is not None:
+                    ex = sorted(ex, key=lambda e: (priority[l, n, e], e))
+                ex = ex[:slots]
                 out[l, n, :len(ex)] = ex
         return out
 
@@ -269,12 +279,15 @@ def effective_dispatch_bytes(plan: PlacementPlan, freqs: np.ndarray,
         * tokens_per_server_layer * hidden_bytes
 
 
-def build_ep_placement(plan: PlacementPlan, slots: int, mesh_distance=None):
+def build_ep_placement(plan: PlacementPlan, slots: int, mesh_distance=None,
+                       priority: np.ndarray | None = None):
     """Convert a PlacementPlan into stacked per-layer EPPlacement tables
-    ([L, n_ep, ...]) for the SPMD runtime."""
+    ([L, n_ep, ...]) for the SPMD runtime. ``priority`` (see
+    ``PlacementPlan.slot_tables``) keeps GPU-tier experts in the physical
+    slots when the plan over-assigns against a tier hierarchy."""
     import jax
     from repro.models.moe import placement_from_tables
-    tables = plan.slot_tables(slots)                # [L, N, S]
+    tables = plan.slot_tables(slots, priority=priority)   # [L, N, S]
     per_layer = [placement_from_tables(tables[l], mesh_distance,
                                        num_experts=plan.num_experts)
                  for l in range(tables.shape[0])]

@@ -67,11 +67,21 @@ class ClusterView:
             slots_cap=np.full(spec.n_ep, spec.slots))
 
     @staticmethod
-    def from_topology(topology, profile) -> "ClusterView":
+    def from_topology(topology, profile, tiered: bool = False
+                      ) -> "ClusterView":
         """From a ``repro.serving.net.Topology`` + ``MoEProfile``: each
         server's expert budget comes from its own :class:`ServerProfile`
-        memory cap (the heterogeneous analogue of ``from_cluster``)."""
-        cap = topology.expert_budgets(profile.expert_bytes)
+        memory cap (the heterogeneous analogue of ``from_cluster``).
+
+        ``tiered=True`` budgets each server at its *deepest* expert tier
+        (host RAM / modeled disk) instead of its GPU memory, so Algorithm
+        1 may legally assign more experts than the GPU holds — the
+        ``repro.serving.tiers.TierManager`` decides which subset is
+        GPU-resident at any moment."""
+        if tiered:
+            cap = topology.tiered_expert_budgets(profile.expert_bytes)
+        else:
+            cap = topology.expert_budgets(profile.expert_bytes)
         slots = np.minimum(np.maximum(cap // profile.num_layers, 1),
                            profile.num_experts)
         return ClusterView(capacity=cap, slots_cap=slots)
@@ -83,6 +93,9 @@ class ClusterView:
 
 @runtime_checkable
 class PlacementPolicy(Protocol):
+    """What every placement strategy implements: a pure function from
+    observed activation statistics + cluster budgets to a plan."""
+
     def propose(self, freqs: np.ndarray,
                 cluster: ClusterView) -> PlacementPlan:
         """freqs: [L, N, E] normalized activation frequencies."""
@@ -93,6 +106,8 @@ _REGISTRY: dict[str, type] = {}
 
 
 def register_policy(name: str):
+    """Class decorator: register a policy under ``name`` (its
+    ``get_policy`` / ``as_policy`` lookup key) and set ``cls.name``."""
     def deco(cls):
         _REGISTRY[name] = cls
         cls.name = name
@@ -101,6 +116,8 @@ def register_policy(name: str):
 
 
 def get_policy(name: str, **kwargs) -> PlacementPolicy:
+    """Instantiate the registered policy ``name`` (kwargs go to its
+    constructor); raises ``KeyError`` listing the known names."""
     if name not in _REGISTRY:
         raise KeyError(f"unknown placement policy {name!r}; "
                        f"available: {sorted(_REGISTRY)}")
@@ -108,6 +125,7 @@ def get_policy(name: str, **kwargs) -> PlacementPolicy:
 
 
 def list_policies() -> tuple[str, ...]:
+    """All registered policy names, sorted."""
     return tuple(sorted(_REGISTRY))
 
 
@@ -195,6 +213,11 @@ def as_policy(policy) -> PlacementPolicy:
 
 @dataclasses.dataclass
 class PlacementDecision:
+    """One review's outcome: the candidate ``plan``, whether Eq. (4)
+    ``adopted`` it, and the pricing diagnostics (``diag``: modeled costs
+    in seconds, or ``{"infeasible": ...}`` when Algorithm 1 had no
+    feasible assignment)."""
+
     plan: PlacementPlan
     adopted: bool
     diag: dict
@@ -236,7 +259,10 @@ class PlacementController:
     #                                          or repro.serving.net
     #                                          .CommCostModel (link-aware)
     cluster: ClusterView | None = None
-    interval: float = 300.0
+    interval: float = 300.0                  # caller clock units between
+    #                                          reviews: seconds on the sim
+    #                                          clock, decode rounds (ticks)
+    #                                          on the runtime clock
     stats: ActivationStats | None = None
     plan: PlacementPlan | None = None
     last_review: float | None = None
@@ -246,9 +272,21 @@ class PlacementController:
     expert_bytes: float | None = None        # transfer sizing fallback when
     #                                          cost= carries no expert_bytes
     pending: "object | None" = None          # net.StagedMigration in flight
+    tiers: "object | None" = None            # serving.tiers.TierManager —
+    #                                          rebinds tier residency on
+    #                                          every plan switch
 
     def __post_init__(self):
         self.policy = as_policy(self.policy)
+
+    def _set_plan(self, plan: PlacementPlan) -> None:
+        """The one plan-switch point: every adoption path (instant,
+        staged completion, fault review) funnels through here so an
+        attached :class:`~repro.serving.tiers.TierManager` re-splits the
+        new assignments across its tiers in lockstep."""
+        self.plan = plan
+        if self.tiers is not None:
+            self.tiers.bind(plan)
 
     def _expert_bytes(self) -> float:
         b = self.expert_bytes
@@ -339,7 +377,7 @@ class PlacementController:
         tasks = _net.plan_transfers(self.plan, candidate, self.topology,
                                     self._expert_bytes())
         if not tasks:
-            self.plan = candidate
+            self._set_plan(candidate)
             return None
         seconds = _net.schedule_transfers(tasks, self.topology)
         staged = _net.StagedMigration(
@@ -388,7 +426,7 @@ class PlacementController:
                     diag["transfer_seconds"] = staged.seconds
                     diag["transfer_bytes"] = staged.nbytes
             else:
-                self.plan = candidate
+                self._set_plan(candidate)
         self.events.append(diag)
         return PlacementDecision(self.plan, adopt, diag,
                                  staged=staged is not None)
@@ -466,7 +504,7 @@ class PlacementController:
                 diag["transfer_seconds"] = staged.seconds
                 diag["transfer_bytes"] = staged.nbytes
         else:
-            self.plan = candidate
+            self._set_plan(candidate)
         self.events.append(diag)
         return PlacementDecision(self.plan, True, diag,
                                  staged=staged is not None)
@@ -481,7 +519,7 @@ class PlacementController:
         if p is None or now < p.eta:
             return None
         self.pending = None
-        self.plan = p.plan
+        self._set_plan(p.plan)
         self.events.append({
             "reason": "migration-complete", "time": now, "adopted": False,
             "staged_at": p.started, "eta": p.eta,
@@ -505,12 +543,18 @@ class PlacementController:
 
     def _apply_plan(self, engine) -> bool:
         """Push the active plan into a serving engine (EP slot re-gather
-        + table swap); returns False for engines without EP placement."""
+        + table swap); returns False for engines without EP placement.
+        With a :class:`TierManager` attached, GPU-tier experts fill the
+        engine's physical slots first (back-tier assignments overflow the
+        slot budget and are served via fetch/remote instead)."""
         if getattr(engine.rt, "ep_spec", None) is None:
             return False
+        priority = (self.tiers.slot_priority()
+                    if self.tiers is not None else None)
         engine.migrate(build_ep_placement(
             self.plan, engine.rt.ep_spec.slots,
-            mesh_distance=self._mesh_distance(engine)))
+            mesh_distance=self._mesh_distance(engine),
+            priority=priority))
         return True
 
     def fault_review_and_apply(self, now: float, engine, *,

@@ -175,6 +175,7 @@ class RequestHandle:
     # -- consumer side -----------------------------------------------------
     @property
     def done(self) -> bool:
+        """True once the FINISHED event has been recorded."""
         return self._finished is not None
 
     @property
@@ -190,6 +191,7 @@ class RequestHandle:
         return dict(self._finished) if self._finished is not None else {}
 
     def result(self) -> np.ndarray:
+        """The full generated token array; raises if not ``done`` yet."""
         if not self.done:
             raise RuntimeError(
                 f"request {self.rid} has not finished; drive the runtime or "

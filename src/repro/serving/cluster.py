@@ -39,6 +39,13 @@ from repro.serving.net import Topology, TrafficMeter
 
 @dataclasses.dataclass(frozen=True)
 class ServerSpec:
+    """One simulated edge server's resource envelope (legacy scalar-link
+    form; ``repro.serving.net.ServerProfile`` is the topology-aware
+    successor). All fields are absolute units, not GB/GHz:
+    ``mem_bytes`` is usable GPU memory for expert weights in **bytes**,
+    ``compute_speed`` effective expert-matmul throughput in **FLOP/s**,
+    ``io_speed`` local weight-load bandwidth in **bytes/s**."""
+
     name: str
     gpus: int = 1
     mem_bytes: float = 16e9            # usable GPU memory for experts
@@ -48,6 +55,11 @@ class ServerSpec:
 
 @dataclasses.dataclass(frozen=True)
 class ClusterSpec:
+    """A uniform-interconnect cluster: N ``ServerSpec``s joined by one
+    scalar link (``bandwidth`` in **bytes/s**, ``rtt`` per remote call in
+    **seconds**). ``Topology.from_cluster_spec`` lifts this into the
+    per-link matrix form the net subsystem uses."""
+
     servers: tuple[ServerSpec, ...]
     bandwidth: float = 500e6 / 8       # bytes/s between servers (500 Mbps)
     rtt: float = 2e-3                  # per-remote-call latency (s)
@@ -64,7 +76,13 @@ class ClusterSpec:
 
 @dataclasses.dataclass(frozen=True)
 class MoEProfile:
-    """Analytic per-token costs for one MoE model (drives the time model)."""
+    """Analytic per-token costs for one MoE model (drives the time model).
+
+    Dimensionless architecture counts plus ``bytes_per_param`` (bytes per
+    weight, 2.0 = bf16); everything derived is in absolute bytes/FLOPs so
+    it divides cleanly by ``ServerProfile`` bandwidths (bytes/s) and
+    compute speeds (FLOP/s)."""
+
     num_layers: int
     num_experts: int
     top_k: int
@@ -74,10 +92,12 @@ class MoEProfile:
 
     @property
     def expert_bytes(self) -> float:
+        """Weight bytes of ONE expert FFN (gate/up/down projections)."""
         return 3 * self.d_model * self.d_ff * self.bytes_per_param
 
     @property
     def expert_flops_per_token(self) -> float:
+        """FLOPs one token costs in one expert (fwd matmuls only)."""
         return 2 * 3 * self.d_model * self.d_ff
 
     @property
@@ -87,10 +107,12 @@ class MoEProfile:
 
     @property
     def hidden_bytes_per_token(self) -> float:
+        """Bytes of one token's hidden-state activation (one link leg)."""
         return self.d_model * self.bytes_per_param
 
     @staticmethod
     def from_config(cfg) -> "MoEProfile":
+        """Derive the profile from a ``repro.configs`` model config."""
         return MoEProfile(num_layers=cfg.num_layers,
                           num_experts=cfg.num_experts, top_k=cfg.top_k,
                           d_model=cfg.d_model, d_ff=cfg.d_ff)
@@ -139,7 +161,7 @@ class _RuntimeBackend:
                  shared_runtime: bool, runtime_opts: dict,
                  topology: Topology | None = None,
                  fault_schedule: FaultSchedule | None = None,
-                 failover: bool = True):
+                 failover: bool = True, prefetch: bool = True):
         from repro.serving.runtime import ServingRuntime   # lazy: keeps the
         #   sim world (simulator.py imports this module) free of jax
         self.engine = engine
@@ -160,6 +182,19 @@ class _RuntimeBackend:
                 controller.last_review = 0.0       # full first interval
             controller.attach_topology(topology,
                                        expert_bytes=self._expert_bytes())
+        # -- expert tier hierarchy (host-RAM / modeled disk) ------------
+        self.tiers = None
+        if (topology is not None and topology.tiered
+                and controller is not None):
+            from repro.serving.tiers import TierManager
+            eb = getattr(controller.cost, "expert_bytes", None)
+            self.tiers = TierManager(
+                topology, float(eb) if eb else self._expert_bytes(),
+                prefetch=prefetch, clock_rate=controller.clock_rate)
+            controller.tiers = self.tiers
+            if controller.plan is not None:
+                self.tiers.bind(controller.plan)   # pre-set plans (e.g.
+                #   ctrl.plan = uniform_plan(...)) bypass _set_plan
         itemsize = np.dtype(engine.rt.dtype).itemsize
         self.meter = (TrafficMeter(topology,
                                    engine.rt.cfg.d_model * itemsize)
@@ -314,6 +349,17 @@ class _RuntimeBackend:
             dec = ctrl.review_and_apply(self.rounds, self.engine)
             if dec is not None and dec.applied:
                 self.migrations.append(dec.diag)
+        tm = self.tiers
+        if tm is not None:
+            landed = tm.promotions
+            tm.poll(self.rounds)
+            if (tm.promotions != landed and ctrl is not None
+                    and ctrl.plan is not None):
+                # promotions change which experts are GPU-resident: refresh
+                # the engine's slot tables under the new tier priority
+                ctrl._apply_plan(self.engine)
+            tm.observe(self.engine.stats.counts)
+            tm.prefetch_step(self.rounds)
         if self.meter is not None and res_before is not None:
             if res_before.shape == self.engine.stats.counts.shape:
                 # engine.stats is the engine's own plain accumulator (the
@@ -351,6 +397,10 @@ class _RuntimeBackend:
         data = ev.payload()
         if ev.kind == SERVER_DOWN:
             data.update(self._fail_server(ev.server, now))
+            if self.tiers is not None:
+                # the crash loses the server's host/disk tiers too; the
+                # fault review below rebinds tiered residency on survivors
+                self.tiers.drop_server(ev.server)
             if ctrl is not None and self.failover:
                 dec = ctrl.fault_review_and_apply(now, self.engine,
                                                   cause="server-down")
@@ -520,7 +570,7 @@ class _SimBackend:
                  controller, router, tasks: dict | None, seed: int,
                  ratio_bucket: float, topology: Topology | None = None,
                  fault_schedule: FaultSchedule | None = None,
-                 failover: bool = True):
+                 failover: bool = True, prefetch: bool = True):
         from repro.data.traces import Workload     # numpy-only
         from repro.serving.simulator import EdgeSimulator   # lazy: this
         #   module is imported by simulator.py (no import cycle at load)
@@ -534,6 +584,19 @@ class _SimBackend:
                                  seed=seed, ratio_bucket=ratio_bucket,
                                  topology=topology)
         self.controller = controller
+        # -- expert tier hierarchy (host-RAM / modeled disk) ------------
+        self.tiers = None
+        if (topology is not None and topology.tiered
+                and controller is not None):
+            from repro.serving.tiers import TierManager
+            eb = getattr(controller.cost, "expert_bytes", None)
+            self.tiers = TierManager(
+                topology, float(eb) if eb else profile.expert_bytes,
+                prefetch=prefetch, clock_rate=1.0)   # seconds clock
+            controller.tiers = self.tiers
+            if controller.plan is not None:
+                self.tiers.bind(controller.plan)
+            self.sim.time_model.tiers = self.tiers   # fetch-stall pricing
         self.meter = (TrafficMeter(topology, profile.hidden_bytes_per_token)
                       if topology is not None else None)
         self.n = spec.n
@@ -651,6 +714,11 @@ class _SimBackend:
             # possibly pre-primed) ActivationStats: metering needs the true
             # cumulative per-origin volumes
             self.meter.observe(self.sim._dispatch_counts, res_before)
+        if self.tiers is not None:
+            done = rec["done"]
+            self.tiers.poll(done)
+            self.tiers.observe(self.sim._dispatch_counts)
+            self.tiers.prefetch_step(done)
         return True
 
     def run(self) -> None:
@@ -669,6 +737,10 @@ class _SimBackend:
         ctrl = self.controller
         data = ev.payload()
         data["failover"] = self.failover
+        if ev.kind == SERVER_DOWN and self.failover and self.tiers is not None:
+            # host/disk tiers die with the box (the crash-oblivious
+            # no-failover baseline keeps its pre-crash model instead)
+            self.tiers.drop_server(ev.server)
         if ev.kind == SERVER_DOWN and self.failover and ctrl is not None:
             dec = ctrl.fault_review(now, cause="server-down")
             self._note_decision(dec, now)
@@ -776,6 +848,17 @@ class EdgeCluster:
                     capacity. ``failover=False`` is the measurement
                     baseline — victims are dropped and every token they
                     owed counts as lost.
+    prefetch:       expert-tier prefetching (default True). When the
+                    topology carries tiered ``ServerProfile``s (host-RAM /
+                    modeled-disk capacities behind the GPU) and a
+                    controller is attached, a ``repro.serving.tiers
+                    .TierManager`` splits each server's assigned experts
+                    across its tiers and — with ``prefetch=True`` —
+                    promotes hot back-tier experts into GPU residency
+                    overlapped with decode. ``prefetch=False`` freezes the
+                    bind-time split (cold experts keep paying on-demand
+                    fetch stalls — the baseline leg of the oversized-model
+                    benchmark). Surfaced as ``metrics()["tiers"]``.
     """
 
     def __init__(self, backend: str = "runtime", *,
@@ -788,7 +871,7 @@ class EdgeCluster:
                  ratio_bucket: float = 60.0,
                  topology: Topology | None = None,
                  fault_schedule: FaultSchedule | None = None,
-                 failover: bool = True):
+                 failover: bool = True, prefetch: bool = True):
         router = as_router(router)
         if controller is not None:
             topology = controller.attach_topology(topology)   # one shared
@@ -814,7 +897,8 @@ class EdgeCluster:
                                            dict(runtime_opts or {}),
                                            topology=topology,
                                            fault_schedule=fault_schedule,
-                                           failover=failover)
+                                           failover=failover,
+                                           prefetch=prefetch)
         elif backend == "sim":
             if spec is None and topology is not None:
                 spec = topology.to_cluster_spec()
@@ -832,7 +916,8 @@ class EdgeCluster:
                                        router, tasks, seed, ratio_bucket,
                                        topology=topology,
                                        fault_schedule=fault_schedule,
-                                       failover=failover)
+                                       failover=failover,
+                                       prefetch=prefetch)
         else:
             raise ValueError(
                 f"unknown backend {backend!r}: expected 'runtime' or 'sim'")
@@ -844,6 +929,8 @@ class EdgeCluster:
 
     # -- the portable surface ------------------------------------------
     def submit(self, request: Request) -> RequestHandle:
+        """Route a typed ``Request`` to a server and enqueue it; returns
+        its ``RequestHandle`` (events, tokens, per-request metrics)."""
         h = self.backend.submit(request)
         self.handles.append(h)
         return h
@@ -860,6 +947,8 @@ class EdgeCluster:
 
     @property
     def migrations(self) -> list:
+        """Adopted-plan records from the shared controller, oldest first
+        (each: the review time on the backend clock plus the Eq.-4 diag)."""
         return self.backend.migrations
 
     @property
@@ -973,6 +1062,11 @@ class EdgeCluster:
         net = self._net_metrics()
         if net is not None:
             out["net"] = net
+        tm = getattr(self.backend, "tiers", None)
+        if tm is not None:
+            # per-server per-tier residency, promotion/demotion counts,
+            # prefetch-hit ratio and on-demand-fetch stalls
+            out["tiers"] = tm.summary()
         fm = getattr(self.backend, "faults_metrics", None)
         faults = fm() if fm is not None else None
         if faults is not None:

@@ -9,7 +9,10 @@ budgets are first-class objects here instead of two scalars on
   memory fields *bound* what the rest of the stack may allocate there:
   ``expert_budget(expert_bytes)`` caps the placement algorithms
   (Algorithm 1's M_n / m_e) and ``kv_block_budget(block_bytes)`` caps the
-  serving runtime's paged KV pool on that server.
+  serving runtime's paged KV pool on that server. Optional
+  ``host_mem_bytes``/``disk_mem_bytes`` open a host-RAM (and modeled
+  disk) **expert tier** behind the GPU residency, priced by
+  ``host_bw``/``disk_bw`` (see ``repro.serving.tiers``).
 * :class:`Topology` — N profiles plus a per-link ``[N, N]`` bandwidth
   (bytes/s) and latency (seconds) matrix. Links may be asymmetric (an
   uplink-constrained WAN hop) and non-uniform (the testbed's 500 Mbps LAN
@@ -55,20 +58,90 @@ from repro.core.placement import PlacementPlan, iter_added_experts
 class ServerProfile:
     """One edge server's capacity caps (the heterogeneity unit).
 
-    ``mem_bytes`` is the expert-weight budget (Algorithm 1's M_n);
-    ``kv_mem_bytes`` the KV-cache budget the serving runtime may page into;
-    ``compute_speed`` effective FLOP/s; ``io_speed`` local weight-load
-    bytes/s (NVMe/host RAM — the migration fallback when an expert is
-    resident nowhere)."""
+    ``mem_bytes`` is the GPU expert-weight budget in bytes (Algorithm 1's
+    M_n); ``kv_mem_bytes`` the KV-cache budget (bytes) the serving runtime
+    may page into; ``compute_speed`` effective FLOP/s; ``io_speed`` local
+    weight-load bytes/s (NVMe/host RAM — the migration fallback when an
+    expert is resident nowhere).
+
+    **Expert tiers** (optional, all ``None`` = flat GPU-only server):
+    ``host_mem_bytes`` / ``disk_mem_bytes`` open a host-RAM (and modeled
+    disk) expert tier *behind* the GPU residency. Tier capacities are
+    **inclusive**: host must be >= ``mem_bytes`` and disk >= host — the
+    deeper tier always holds a superset, so demotion is free (the host
+    copy still exists) and only promotion moves bytes. ``host_bw`` /
+    ``disk_bw`` price the host<->device and disk<->host links in bytes/s
+    (PCIe-ish vs NVMe-ish); a tiered server must carry them so the cost
+    model can compare "fetch from my host tier" against "invoke the
+    remote replica"."""
     name: str
     mem_bytes: float = 16e9
     kv_mem_bytes: float = 4e9
     compute_speed: float = 60e12
     io_speed: float = 8e9
+    host_mem_bytes: float | None = None
+    disk_mem_bytes: float | None = None
+    host_bw: float | None = None
+    disk_bw: float | None = None
+
+    def __post_init__(self):
+        for field in ("host_mem_bytes", "disk_mem_bytes"):
+            v = getattr(self, field)
+            if v is not None and v <= 0:
+                raise ValueError(
+                    f"{self.name}: {field}={v} — a tier is either absent "
+                    "(None) or has positive capacity; zero-capacity tiers "
+                    "are not allowed")
+        if self.disk_mem_bytes is not None and self.host_mem_bytes is None:
+            raise ValueError(
+                f"{self.name}: a disk tier requires a host tier "
+                "(disk_mem_bytes set but host_mem_bytes is None)")
+        if (self.host_mem_bytes is not None
+                and self.host_mem_bytes < self.mem_bytes):
+            raise ValueError(
+                f"{self.name}: tier capacities must nest — host_mem_bytes "
+                f"({self.host_mem_bytes:.3g}) < GPU mem_bytes "
+                f"({self.mem_bytes:.3g}); the host tier holds a superset "
+                "of GPU residency")
+        if (self.disk_mem_bytes is not None
+                and self.disk_mem_bytes < self.host_mem_bytes):
+            raise ValueError(
+                f"{self.name}: tier capacities must nest — disk_mem_bytes "
+                f"({self.disk_mem_bytes:.3g}) < host_mem_bytes "
+                f"({self.host_mem_bytes:.3g})")
+
+    @property
+    def tiered(self) -> bool:
+        """True when this server has a host-RAM expert tier."""
+        return self.host_mem_bytes is not None
 
     def expert_budget(self, expert_bytes: float) -> int:
-        """Expert slots this server's weight memory can hold (M_n / m_e)."""
+        """Expert slots this server's GPU weight memory can hold
+        (M_n / m_e)."""
         return int(self.mem_bytes // expert_bytes)
+
+    def tiered_expert_budget(self, expert_bytes: float) -> int:
+        """Expert slots the *deepest* tier can hold. On a tiered server a
+        placement plan may legally assign this many experts; only
+        ``expert_budget`` of them are GPU-resident at any moment."""
+        deepest = self.mem_bytes
+        if self.host_mem_bytes is not None:
+            deepest = self.host_mem_bytes
+        if self.disk_mem_bytes is not None:
+            deepest = self.disk_mem_bytes
+        return int(deepest // expert_bytes)
+
+    def tier_slots(self, expert_bytes: float) -> tuple[int, int, int]:
+        """(gpu, host, disk) *cumulative* expert-slot capacities. Tiers
+        are inclusive, so each entry is the total number of experts that
+        tier and everything above it can hold (0-size for absent tiers
+        means "same as the tier above")."""
+        gpu = self.expert_budget(expert_bytes)
+        host = (int(self.host_mem_bytes // expert_bytes)
+                if self.host_mem_bytes is not None else gpu)
+        disk = (int(self.disk_mem_bytes // expert_bytes)
+                if self.disk_mem_bytes is not None else host)
+        return gpu, host, disk
 
     def kv_block_budget(self, block_bytes: float) -> int:
         """Paged KV blocks this server's cache memory can hold (>= 1)."""
@@ -137,6 +210,19 @@ class Topology:
                 "off-diagonal link bandwidth must be finite and positive")
         if (lat < 0).any():
             raise ValueError("link latency must be >= 0")
+        for p in self.profiles:
+            if p.tiered and not (p.host_bw is not None
+                                 and np.isfinite(p.host_bw)
+                                 and p.host_bw > 0):
+                raise ValueError(
+                    f"{p.name}: tiered profile must price the host<->device "
+                    f"link — host_bw={p.host_bw} is not finite and positive")
+            if p.disk_mem_bytes is not None and not (
+                    p.disk_bw is not None and np.isfinite(p.disk_bw)
+                    and p.disk_bw > 0):
+                raise ValueError(
+                    f"{p.name}: disk tier must price the disk<->host link — "
+                    f"disk_bw={p.disk_bw} is not finite and positive")
         object.__setattr__(self, "bandwidth", bw)
         object.__setattr__(self, "latency", lat)
         object.__setattr__(self, "state", LinkState.fresh(n))
@@ -249,6 +335,39 @@ class Topology:
         """[N] per-server paged-KV block budgets."""
         return np.array([p.kv_block_budget(block_bytes)
                          for p in self.profiles])
+
+    @property
+    def tiered(self) -> bool:
+        """True when any profile carries a host-RAM expert tier."""
+        return any(p.tiered for p in self.profiles)
+
+    def tiered_expert_budgets(self, expert_bytes: float) -> np.ndarray:
+        """[N] per-server deepest-tier expert budgets — what Algorithm 1
+        may assign when the tier hierarchy backs GPU residency."""
+        return np.array([p.tiered_expert_budget(expert_bytes)
+                         for p in self.profiles])
+
+    def tier_slot_capacities(self, expert_bytes: float) -> np.ndarray:
+        """[N, 3] cumulative (gpu, host, disk) expert-slot capacities."""
+        return np.array([p.tier_slots(expert_bytes)
+                         for p in self.profiles])
+
+    def host_fetch_seconds(self, server: int, nbytes: float) -> float:
+        """Modeled seconds to pull ``nbytes`` from ``server``'s host tier
+        into its GPU (the on-demand-fetch / promotion cost). Falls back to
+        ``io_speed`` for untiered servers (plain local load)."""
+        p = self.profiles[server]
+        bw = p.host_bw if p.host_bw is not None else p.io_speed
+        return float(nbytes / bw)
+
+    def disk_fetch_seconds(self, server: int, nbytes: float) -> float:
+        """Modeled seconds to stage ``nbytes`` disk -> host -> GPU on
+        ``server`` (both legs, serialized)."""
+        p = self.profiles[server]
+        if p.disk_bw is None:
+            return self.host_fetch_seconds(server, nbytes)
+        return float(nbytes / p.disk_bw) + self.host_fetch_seconds(
+            server, nbytes)
 
 
 def route_targets(residency_l: np.ndarray, link_cost: np.ndarray
@@ -388,7 +507,12 @@ class TrafficMeter:
 class TransferTask:
     """One expert's weights moving to one server (src == dst: local IO
     load — the expert was resident nowhere). ``start``/``end`` are modeled
-    seconds relative to the migration's adoption."""
+    seconds relative to the migration's adoption.
+
+    ``via`` selects the link the bytes ride: ``None`` infers the classic
+    behavior (inter-server link, or local ``io_speed`` load when
+    src == dst); ``"host"`` is a tier promotion over the destination's
+    host<->device link; ``"disk"`` stages disk -> host -> GPU."""
     layer: int
     expert: int
     src: int
@@ -396,6 +520,7 @@ class TransferTask:
     nbytes: float
     start: float = 0.0
     end: float = 0.0
+    via: str | None = None
 
 
 def plan_transfers(old: PlacementPlan, new: PlacementPlan,
@@ -431,14 +556,21 @@ def schedule_transfers(tasks: list[TransferTask], topology: Topology,
     Mutates each task's ``start``/``end``; returns the makespan's finish
     time. Deterministic: tasks are processed in (layer, dst, expert)
     order and nothing consults a clock or RNG."""
-    link_free: dict[tuple[int, int], float] = {}
+    link_free: dict[tuple, float] = {}
     finish = start
     for t in sorted(tasks, key=lambda t: (t.layer, t.dst, t.expert)):
-        if t.src == t.dst:
+        if t.via == "host":
+            dur = topology.host_fetch_seconds(t.dst, t.nbytes)
+            key = ("host", t.dst)
+        elif t.via == "disk":
+            dur = topology.disk_fetch_seconds(t.dst, t.nbytes)
+            key = ("host", t.dst)
+        elif t.src == t.dst:
             dur = t.nbytes / topology.profiles[t.dst].io_speed
+            key = (t.src, t.dst)
         else:
             dur = topology.transfer_seconds(t.src, t.dst, t.nbytes)
-        key = (t.src, t.dst)
+            key = (t.src, t.dst)
         t.start = max(start, link_free.get(key, start))
         t.end = t.start + dur
         link_free[key] = t.end

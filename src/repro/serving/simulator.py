@@ -128,6 +128,11 @@ class TimeModel:
         self.topology = topology
         self.speeds = np.array([s.compute_speed for s in cluster.servers])
         self.io = np.array([s.io_speed for s in cluster.servers])
+        # optional repro.serving.tiers.TierManager: experts parked in a
+        # back tier pay a modeled host/disk fetch stall (locally and as a
+        # surcharge on remote candidates). None = flat GPU pricing,
+        # bit-identical to the pre-tier model.
+        self.tiers = None
 
     def sample_layer_counts(self, rng, probs, tokens: int) -> np.ndarray:
         """Component 2: per-layer expert activations for one request."""
@@ -137,20 +142,47 @@ class TimeModel:
         return tokens * self.profile.dense_flops_per_token \
             / self.speeds[server]
 
+    def _tier_table(self, layer: int | None) -> np.ndarray | None:
+        """[N, E] tier assignment for this layer, or None when no
+        TierManager is attached (flat pricing)."""
+        tm = self.tiers
+        if (tm is None or layer is None or tm.tier is None
+                or layer >= tm.tier.shape[0]):
+            return None
+        return tm.tier[layer]
+
     def collab_layer(self, counts: np.ndarray, res_l: np.ndarray,
-                     server: int, timeline: Timeline
+                     server: int, timeline: Timeline,
+                     layer: int | None = None
                      ) -> tuple[float, float, float]:
         """Eq. 1 for one layer under a placement residency ``res_l``
         [N, E]: local experts compute at the home server; remote experts go
         to the nearest-idle replica (comm + comp, async load on the
-        target). Returns (layer time, local hits, total activations)."""
+        target). With a :class:`~repro.serving.tiers.TierManager` attached
+        (``layer=`` identifies the row of its tier table), an expert a
+        server holds only in a back tier pays that tier's on-demand fetch
+        stall before computing — locally and, as a surcharge, on remote
+        replica candidates. Returns (layer time, local hits, total
+        activations)."""
         pf = self.profile
+        tier_l = self._tier_table(layer)
         active = counts > 0
         local = active & (res_l[server] > 0)
         remote = active & ~local
         comp_b = counts * pf.expert_flops_per_token
         worst = float((comp_b * local).max() / self.speeds[server]) \
             if local.any() else 0.0
+        if tier_l is not None and local.any():
+            back = local & (tier_l[server] > 0)
+            if back.any():
+                if tier_l[server][back].max() > 1:
+                    stall = self.topology.disk_fetch_seconds(
+                        server, pf.expert_bytes)
+                else:
+                    stall = self.topology.host_fetch_seconds(
+                        server, pf.expert_bytes)
+                worst = max(worst, float(comp_b[back].max()
+                                         / self.speeds[server]) + stall)
         hits = float(counts[local].sum())
         tot = float(counts[active].sum())
         if remote.any():
@@ -169,6 +201,21 @@ class TimeModel:
                         + self.topology.latency[:, server])          # [N]
                 comm_m = (counts[remote][:, None] * per_tok[None, :]
                           + lat2[None, :])                           # [R, N]
+                if tier_l is not None:
+                    # a candidate holding the expert only in a back tier
+                    # must fetch it first — surcharge its column
+                    t_re = tier_l.T[remote]                          # [R, N]
+                    fetch_n = np.array([
+                        self.topology.host_fetch_seconds(
+                            i, pf.expert_bytes)
+                        for i in range(res_l.shape[0])])
+                    disk_n = np.array([
+                        self.topology.disk_fetch_seconds(
+                            i, pf.expert_bytes)
+                        for i in range(res_l.shape[0])])
+                    comm_m = comm_m + np.where(
+                        t_re == 1, fetch_n[None, :],
+                        np.where(t_re == 2, disk_n[None, :], 0.0))
                 tgt = np.argmin(free_m + comm_m, axis=-1)
                 comm = comm_m[np.arange(len(tgt)), tgt]
             else:
@@ -406,7 +453,8 @@ class EdgeSimulator:
             service = 0.0
             for l in range(L):
                 worst, hits, tot = tm.collab_layer(layer_counts[l],
-                                                   res[l], n, timeline)
+                                                   res[l], n, timeline,
+                                                   layer=l)
                 ratio.add(hits, tot)
                 req_hits += hits
                 req_tot += tot

@@ -383,13 +383,13 @@ def test_cluster_sim_slo_and_step():
 
 
 # ---------------------------------------------------------------------------
-# bench-serving/v5 schema (satellite): cluster + net + perf + faults
+# bench-serving/v6 schema (satellite): cluster + net + perf + faults + tiers
 # ---------------------------------------------------------------------------
 
-def _v5_doc():
+def _v6_doc():
     pair = {"cache": 2, "nocache": 1}
     return {
-        "schema": "bench-serving/v5", "mode": "smoke",
+        "schema": "bench-serving/v6", "mode": "smoke",
         "metrics": {
             "admitted_concurrency": dict(pair),
             "prefill_chunks_executed": dict(pair),
@@ -436,16 +436,32 @@ def _v5_doc():
                 "baseline_requests_dropped": 10,
                 "replay_identical": 1,
             },
+            "tiers": {
+                "n_servers": 3,
+                "per_server_gpu_slots": [48, 40, 24],
+                "per_server_host_slots": [128, 112, 96],
+                "per_server_gpu_resident": [48, 40, 24],
+                "per_server_host_resident": [80, 72, 72],
+                "promotions": 12,
+                "demotions": 14,
+                "prefetch_hit_ratio": 0.7,
+                "on_demand_fetches": 200,
+                "on_demand_stall_seconds": 4.2,
+                "mean_latency_s": 0.29,
+                "prefetch_off_mean_latency_s": 0.31,
+                "prefetch_off_fetches": 240,
+                "prefetch_off_stall_seconds": 4.9,
+            },
         },
     }
 
 
-def test_schema_v5_accepts_and_rejects():
+def test_schema_v6_accepts_and_rejects():
     import sys
     import os
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     from benchmarks.schema import BenchSchemaError, validate_bench_serving
-    assert validate_bench_serving(_v5_doc())
+    assert validate_bench_serving(_v6_doc())
     for mutate in (
         lambda d: d["metrics"].pop("cluster"),
         lambda d: d["metrics"]["cluster"].pop("per_server_local_ratio"),
@@ -464,7 +480,7 @@ def test_schema_v5_accepts_and_rejects():
                                  [1, 1, 0]]),                    # negative
         lambda d: d["metrics"]["net"].update(cross_server_bytes=0),  # empty
         lambda d: d["metrics"]["net"].pop("migration_transfer_seconds"),
-        lambda d: d.update(schema="bench-serving/v4"),           # stale tag
+        lambda d: d.update(schema="bench-serving/v5"),           # stale tag
         lambda d: d["metrics"].pop("perf"),                      # v4
         lambda d: d["metrics"]["perf"].pop("decode_round_ms"),
         lambda d: d["metrics"]["perf"]["decode_round_ms"].pop("p99"),
@@ -479,8 +495,16 @@ def test_schema_v5_accepts_and_rejects():
         lambda d: d["metrics"]["faults"].update(
             replay_identical=0),                                 # not bit-id
         lambda d: d["metrics"]["faults"].update(tokens_lost=-1),
+        lambda d: d["metrics"].pop("tiers"),                     # v6
+        lambda d: d["metrics"]["tiers"].pop("on_demand_stall_seconds"),
+        lambda d: d["metrics"]["tiers"].update(promotions=0),    # no prefetch
+        lambda d: d["metrics"]["tiers"].update(
+            prefetch_hit_ratio=1.2),                             # ratio > 1
+        lambda d: d["metrics"]["tiers"].update(
+            per_server_gpu_slots=[48, 40]),                      # len != n
+        lambda d: d["metrics"]["tiers"].update(on_demand_fetches=-1),
     ):
-        doc = _v5_doc()
+        doc = _v6_doc()
         mutate(doc)
         with pytest.raises(BenchSchemaError):
             validate_bench_serving(doc)

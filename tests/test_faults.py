@@ -68,7 +68,7 @@ def make_requests(n: int = 30, seed: int = 0) -> list[Request]:
 
 
 def make_controller(
-    topo: Topology, interval: float = 20.0, seed: int = 0
+    topo: Topology, interval: float = 20.0, seed: int = 0, tiered: bool = False
 ) -> PlacementController:
     from repro.data.traces import make_task_profile
 
@@ -87,7 +87,7 @@ def make_controller(
     return PlacementController(
         policy=get_policy("dancemoe"),
         cost=cm,
-        cluster=ClusterView.from_topology(topo, PROFILE),
+        cluster=ClusterView.from_topology(topo, PROFILE, tiered=tiered),
         interval=interval,
         topology=topo,
         stats=stats,
@@ -427,3 +427,96 @@ def test_runtime_backend_failover_subprocess():
     )
     assert r.returncode == 0, f"failover_runtime.py failed:\n{r.stdout}\n{r.stderr}"
     assert "ALL OK" in r.stdout
+
+
+# -- expert tiers under faults ------------------------------------------
+
+
+def make_tiered_topology() -> Topology:
+    """The fault testbed with host-RAM expert tiers: each server's GPU
+    holds 2 slots/layer (6 aggregate < 8 experts/layer — oversized, so
+    Algorithm 1 is only feasible through the tiered budgets) while host
+    tiers hold the full set."""
+    eb, L = PROFILE.expert_bytes, PROFILE.num_layers
+    profiles = tuple(
+        ServerProfile(
+            name,
+            mem_bytes=2 * L * eb,
+            host_mem_bytes=8 * L * eb,
+            host_bw=2e9,
+            compute_speed=50e12,
+        )
+        for name in ("lan0", "lan1", "wan2")
+    )
+    bw = np.full((3, 3), 500e6 / 8)
+    lat = np.full((3, 3), 2e-3)
+    for a, b in ((0, 2), (1, 2)):
+        bw[a, b] = bw[b, a] = 25e6 / 8
+        lat[a, b] = lat[b, a] = 40e-3
+    np.fill_diagonal(lat, 0.0)
+    return Topology(profiles, bw, lat)
+
+
+def run_tiered_cluster(schedule=None, failover=True, n=30):
+    topo = make_tiered_topology()
+    ec = EdgeCluster(
+        "sim",
+        topology=topo,
+        profile=PROFILE,
+        controller=make_controller(topo, tiered=True),
+        seed=0,
+        fault_schedule=schedule,
+        failover=failover,
+    )
+    for r in make_requests(n):
+        ec.submit(r)
+    handles = ec.run()
+    return topo, ec, handles
+
+
+def test_tiered_crash_demotes_residency_and_completes():
+    """A mid-run crash on a tiered cluster: the dead server's entire tier
+    table is wiped (host RAM dies with the box), the fault review
+    re-plans tiered residency onto the survivors, and failover still
+    finishes every request."""
+    sched = FaultSchedule.server_crash(60.0, 2)
+    topo, ec, handles = run_tiered_cluster(sched)
+    assert all(h.done for h in handles)
+    m = ec.metrics()
+    t = m["tiers"]
+    assert (
+        sum(t["per_server_gpu_slots"]) < PROFILE.num_layers * PROFILE.num_experts
+    ), "testbed must be oversized for the tier path to matter"
+    assert t["per_server_gpu_resident"][2] == 0
+    assert t["per_server_host_resident"][2] == 0
+    assert t["per_server_gpu_resident"][0] > 0
+    assert m["faults"]["injected"] == 1
+    assert m["faults"]["recovered"] == 1
+
+
+def test_tiered_crash_rerun_bit_identical():
+    """The fault-determinism contract extends to tiers: reruns of the
+    same schedule on the tiered cluster reproduce latencies, event
+    timelines, link bytes and the whole ``metrics.tiers`` section
+    bit-identically."""
+    sched = FaultSchedule(
+        [
+            FaultEvent(40.0, LINK_DEGRADED, src=0, dst=1, factor=0.5),
+            FaultEvent(60.0, SERVER_DOWN, server=2),
+            FaultEvent(80.0, LINK_RESTORED, src=0, dst=1),
+        ]
+    )
+
+    def run():
+        _, ec, handles = run_tiered_cluster(sched.copy())
+        lat = [h.metrics.get("latency") for h in handles]
+        timeline = [(e.type, e.rid, e.time) for e in ec.events]
+        return lat, timeline, ec.metrics()
+
+    lat1, t1, m1 = run()
+    lat2, t2, m2 = run()
+    assert lat1 == lat2  # ==, not allclose: bit-identical
+    assert t1 == t2
+    assert m1["tiers"] == m2["tiers"]
+    assert m1["faults"] == m2["faults"]
+    assert m1["net"]["link_bytes"] == m2["net"]["link_bytes"]

@@ -14,6 +14,7 @@ Covers the three contracts the subsystem makes:
 * **budgets** — ``ServerProfile`` memory caps bound expert and KV-block
   budgets heterogeneously.
 """
+import dataclasses
 import os
 import subprocess
 import sys
@@ -29,7 +30,8 @@ from repro.core.policies import ClusterView, PlacementController, get_policy
 from repro.serving.api import EventType, Request
 from repro.serving.cluster import EdgeCluster, MoEProfile
 from repro.serving.net import (CommCostModel, ServerProfile, Topology,
-                               TrafficMeter, plan_transfers, route_targets,
+                               TrafficMeter, TransferTask,
+                               plan_transfers, route_targets,
                                schedule_transfers)
 
 
@@ -507,4 +509,169 @@ def test_runtime_backend_staged_migration_subprocess():
         env=env, capture_output=True, text=True, timeout=560)
     assert r.returncode == 0, \
         f"staged_migration_runtime.py failed:\n{r.stdout}\n{r.stderr}"
+    assert "ALL OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# expert tiers: config validation, host-link pricing, TierManager mechanics
+# ---------------------------------------------------------------------------
+
+def test_tiered_profile_validation():
+    """Tier capacities must nest (GPU <= host <= disk), tiers are either
+    absent or positive, and a disk tier cannot float without a host tier
+    — each misconfiguration raises with a message naming the field."""
+    with pytest.raises(ValueError, match="zero-capacity tiers"):
+        ServerProfile("z", mem_bytes=8e9, host_mem_bytes=0)
+    with pytest.raises(ValueError, match="zero-capacity tiers"):
+        ServerProfile("z2", mem_bytes=8e9, host_mem_bytes=16e9,
+                      disk_mem_bytes=-1)
+    with pytest.raises(ValueError, match="disk tier requires a host tier"):
+        ServerProfile("d", mem_bytes=8e9, disk_mem_bytes=64e9)
+    with pytest.raises(ValueError, match="must nest"):
+        ServerProfile("n", mem_bytes=8e9, host_mem_bytes=4e9)
+    with pytest.raises(ValueError, match="must nest"):
+        ServerProfile("n2", mem_bytes=8e9, host_mem_bytes=16e9,
+                      disk_mem_bytes=12e9)
+    p = ServerProfile("ok", mem_bytes=8e9, host_mem_bytes=16e9,
+                      disk_mem_bytes=32e9, host_bw=12e9, disk_bw=2e9)
+    assert p.tiered
+    assert p.tier_slots(1e9) == (8, 16, 32)      # cumulative (inclusive)
+    assert p.tiered_expert_budget(1e9) == 32     # plans may use the deepest
+    flat = ServerProfile("flat", mem_bytes=8e9)
+    assert not flat.tiered
+    assert flat.tier_slots(1e9) == (8, 8, 8)
+    assert flat.tiered_expert_budget(1e9) == flat.expert_budget(1e9)
+
+
+def test_topology_requires_tier_link_pricing():
+    """A tiered profile without a priced host<->device (or disk<->host)
+    link is rejected at Topology construction — the cost model cannot
+    compare 'fetch from my host tier' vs 'invoke the remote replica'
+    without it."""
+    tiered = ServerProfile("t", mem_bytes=8e9, host_mem_bytes=16e9)
+    with pytest.raises(ValueError, match="must price the host"):
+        Topology.uniform((tiered, ServerProfile("f")))
+    nodisk = ServerProfile("t", mem_bytes=8e9, host_mem_bytes=16e9,
+                           disk_mem_bytes=32e9, host_bw=12e9)
+    with pytest.raises(ValueError, match="disk tier must price"):
+        Topology.uniform((nodisk, ServerProfile("f")))
+    ok = ServerProfile("t", mem_bytes=8e9, host_mem_bytes=16e9,
+                       host_bw=12e9)
+    topo = Topology.uniform((ok, ServerProfile("f")))
+    assert topo.tiered
+    assert topo.host_fetch_seconds(0, 12e9) == pytest.approx(1.0)
+    assert list(topo.tiered_expert_budgets(1e9)) == [16, 16]
+    assert topo.tier_slot_capacities(1e9)[0].tolist() == [8, 16, 16]
+
+
+def test_host_transfer_tasks_serialize_per_server():
+    """``via="host"`` promotions ride the destination's host<->device
+    link: two fetches on one server serialize, fetches on distinct
+    servers proceed in parallel, and each is priced at
+    nbytes / host_bw."""
+    prof = ServerProfile("a", mem_bytes=8e9, host_mem_bytes=32e9,
+                         host_bw=1e9)
+    topo = Topology.uniform((prof, dataclasses.replace(prof, name="b")))
+    t1 = TransferTask(0, 1, 0, 0, 1e9, via="host")
+    t2 = TransferTask(0, 2, 0, 0, 1e9, via="host")
+    t3 = TransferTask(0, 3, 1, 1, 1e9, via="host")
+    makespan = schedule_transfers([t1, t2, t3], topo)
+    assert t1.end == pytest.approx(1.0)
+    assert t2.start == pytest.approx(1.0)      # same host link: serialized
+    assert t2.end == pytest.approx(2.0)
+    assert t3.end == pytest.approx(1.0)        # other server: parallel
+    assert makespan == pytest.approx(2.0)
+
+
+def test_slot_tables_priority_puts_gpu_tier_first():
+    """With a tier table as ``priority``, slot truncation keeps the
+    GPU-tier (hot) experts instead of the lowest expert ids."""
+    plan = PlacementPlan(assign=[[[0, 1, 2, 3]]],
+                         counts=np.array([[4]]), num_experts=4)
+    assert plan.slot_tables(2)[0, 0].tolist() == [0, 1]
+    prio = np.array([[[2, 0, 1, 2]]])          # e1 hottest, then e2
+    assert plan.slot_tables(2, priority=prio)[0, 0].tolist() == [1, 2]
+
+
+def test_tier_manager_bind_promote_drop():
+    """TierManager end to end on one server: bind splits hottest-first
+    under the per-layer GPU quota, observe books hits/fetches/stalls,
+    prefetch_step promotes a strictly hotter back-tier expert over the
+    host link, poll lands it (evicting the coldest GPU resident for
+    free), and a crash wipes the server's tiers."""
+    from repro.serving.tiers import TIER_GPU, TIER_HOST, TierManager
+
+    prof = ServerProfile("t", mem_bytes=2e9, host_mem_bytes=4e9,
+                         host_bw=1e9)
+    topo = Topology.uniform((prof,))
+    plan = PlacementPlan(assign=[[[0, 1, 2, 3]]],
+                         counts=np.array([[4]]), num_experts=4)
+    tm = TierManager(topology=topo, expert_bytes=1e9)
+    tm.bind(plan)
+    # no heat yet: expert id breaks ties — e0, e1 take the 2 GPU slots
+    assert tm.tier[0, 0].tolist() == [TIER_GPU, TIER_GPU,
+                                      TIER_HOST, TIER_HOST]
+    counts = np.zeros((1, 1, 4))
+    counts[0, 0] = [0.0, 1.0, 10.0, 0.0]
+    tm.observe(counts)
+    assert tm.gpu_hit_tokens == pytest.approx(1.0)       # e1, GPU-resident
+    assert tm.fetch_tokens == pytest.approx(10.0)        # e2, host tier
+    assert tm.on_demand_fetches == 1
+    assert tm.on_demand_stall_seconds == pytest.approx(1.0)   # 1e9 / 1e9
+    assert tm.fetch_stall_seconds(0, 0, 2) == pytest.approx(1.0)
+    assert tm.fetch_stall_seconds(0, 0, 0) == 0.0
+
+    tm.prefetch_step(now=0.0)       # e2 (heat 10) > e0 (heat 0): promote
+    tm.poll(now=0.5)
+    assert tm.promotions == 0       # fetch still in flight at t=0.5
+    tm.poll(now=2.0)
+    assert tm.promotions == 1
+    assert tm.tier[0, 0].tolist() == [TIER_HOST, TIER_GPU,
+                                      TIER_GPU, TIER_HOST]
+    assert tm.fetch_stall_seconds(0, 0, 2) == 0.0
+    s = tm.summary()
+    assert s["per_server_gpu_resident"] == [2]
+    assert s["per_server_host_resident"] == [2]
+    assert s["prefetch_hit_ratio"] == pytest.approx(1.0 / 11.0, abs=1e-6)
+
+    tm.drop_server(0)
+    assert (tm.tier[0, 0] == -1).all()
+    assert tm.summary()["per_server_gpu_resident"] == [0]
+
+
+def test_prefetch_disabled_freezes_residency():
+    """``prefetch=False``: heat still accumulates (for rebinds) but
+    ``prefetch_step`` never schedules a promotion."""
+    from repro.serving.tiers import TierManager
+
+    prof = ServerProfile("t", mem_bytes=2e9, host_mem_bytes=4e9,
+                         host_bw=1e9)
+    topo = Topology.uniform((prof,))
+    plan = PlacementPlan(assign=[[[0, 1, 2, 3]]],
+                         counts=np.array([[4]]), num_experts=4)
+    tm = TierManager(topology=topo, expert_bytes=1e9, prefetch=False)
+    tm.bind(plan)
+    counts = np.zeros((1, 1, 4))
+    counts[0, 0] = [0.0, 1.0, 10.0, 0.0]
+    tm.observe(counts)
+    before = tm.tier.copy()
+    tm.prefetch_step(now=0.0)
+    tm.poll(now=100.0)
+    assert tm.promotions == 0
+    np.testing.assert_array_equal(tm.tier, before)
+
+
+def test_runtime_backend_tiers_subprocess():
+    """Runtime backend on 3 fake devices: the oversized-model tier
+    overlay completes every request token-identically, the prefetcher
+    promotes, and reruns are bit-identical (see
+    md_scripts/tiers_runtime.py)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=3"
+    env["PYTHONPATH"] = str(Path(__file__).parent.parent / "src")
+    r = subprocess.run(
+        [sys.executable, str(SCRIPTS / "tiers_runtime.py")],
+        env=env, capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, \
+        f"tiers_runtime.py failed:\n{r.stdout}\n{r.stderr}"
     assert "ALL OK" in r.stdout

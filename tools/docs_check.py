@@ -1,0 +1,110 @@
+"""Docs gate behind the CI ``docs-check`` job.
+
+Two checks, both over the committed Markdown:
+
+* every fenced ``python`` block in the top-level README is executed
+  verbatim (CPU, ``timeout 120`` per block) — the quickstart is
+  executable documentation, same standing as ``examples/``;
+* every relative Markdown link in README.md, docs/ and
+  src/repro/serving/README.md must resolve to a file in the tree —
+  renames can't silently orphan the doc graph.
+
+Run locally:  PYTHONPATH=src python tools/docs_check.py
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+BLOCK_TIMEOUT_S = 120  # per fenced block, matching the examples-smoke cap
+
+# files whose fenced python blocks must run (others are checked for
+# links only — the serving README's blocks are illustrative fragments)
+EXECUTE = ("README.md",)
+LINK_CHECK = ("README.md", "docs", "src/repro/serving/README.md")
+
+_FENCE = re.compile(r"```python\n(.*?)```", re.S)
+# inline [text](target) links; images excluded via the (?<!!) lookbehind
+_LINK = re.compile(r"(?<!!)\[[^\]]+\]\(([^)\s]+)\)")
+
+
+def markdown_files() -> list[Path]:
+    out: list[Path] = []
+    for entry in LINK_CHECK:
+        p = REPO / entry
+        out.extend(sorted(p.rglob("*.md")) if p.is_dir() else [p])
+    return out
+
+
+def run_python_blocks(path: Path) -> list[str]:
+    """Execute each fenced python block of ``path``; returns failures."""
+    failures: list[str] = []
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    for i, block in enumerate(_FENCE.findall(path.read_text())):
+        with tempfile.NamedTemporaryFile("w", suffix=".py", delete=False) as f:
+            f.write(block)
+            script = f.name
+        try:
+            proc = subprocess.run(
+                [sys.executable, script],
+                cwd=REPO,
+                env=env,
+                capture_output=True,
+                text=True,
+                timeout=BLOCK_TIMEOUT_S,
+            )
+            if proc.returncode != 0:
+                failures.append(
+                    f"{path.relative_to(REPO)} python block {i}: exit "
+                    f"{proc.returncode}\n{proc.stderr.strip()[-2000:]}"
+                )
+            else:
+                print(f"  block {i}: OK")
+        except subprocess.TimeoutExpired:
+            failures.append(
+                f"{path.relative_to(REPO)} python block {i}: timed out "
+                f"after {BLOCK_TIMEOUT_S}s"
+            )
+        finally:
+            os.unlink(script)
+    return failures
+
+
+def check_links(path: Path) -> list[str]:
+    """Every relative link in ``path`` must resolve; returns failures."""
+    failures: list[str] = []
+    for target in _LINK.findall(path.read_text()):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        resolved = (path.parent / target.split("#", 1)[0]).resolve()
+        if not resolved.exists():
+            failures.append(f"{path.relative_to(REPO)}: dangling link -> {target}")
+    return failures
+
+
+def main() -> int:
+    failures: list[str] = []
+    for name in EXECUTE:
+        print(f"executing python blocks of {name}")
+        failures += run_python_blocks(REPO / name)
+    for md in markdown_files():
+        bad = check_links(md)
+        failures += bad
+        print(f"links {'FAIL' if bad else 'OK'}: {md.relative_to(REPO)}")
+    if failures:
+        print("\nDOCS CHECK FAILED:")
+        for f in failures:
+            print(" -", f)
+        return 1
+    print("docs check passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
