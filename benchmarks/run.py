@@ -28,6 +28,7 @@ def smoke(out_path: str) -> None:
     import benchmarks.prefix_cache as prefix_cache
     import benchmarks.tiers as tiers
     import benchmarks.topology as topology
+    import benchmarks.workload as workload
     from benchmarks.schema import validate_bench_serving
 
     t0 = time.time()
@@ -38,6 +39,8 @@ def smoke(out_path: str) -> None:
     #   failover vs no-failover baseline, deterministic replay asserted
     doc["metrics"]["tiers"] = tiers.smoke()  # v6: oversized model over
     #   host-RAM expert tiers, prefetch vs frozen residency
+    doc["metrics"]["workload"] = workload.smoke()  # v7: seeded flash-crowd
+    #   stream, SLO-aware scheduling vs blind FIFO goodput on it
     doc["elapsed_s"] = round(time.time() - t0, 2)
     validate_bench_serving(doc)  # raises (non-zero exit) on breakage
     with open(out_path, "w") as f:
@@ -95,6 +98,16 @@ def smoke(out_path: str) -> None:
         f"latency={t['mean_latency_s']:.4f}s "
         f"(no-prefetch {t['prefetch_off_mean_latency_s']:.4f}s)"
     )
+    w = m["workload"]
+    print(
+        f"workload[v7]: {int(w['requests'])} requests "
+        f"goodput={w['goodput_tokens_per_s']:.1f}tok/s "
+        f"(fifo {w['fifo_goodput_tokens_per_s']:.1f}) "
+        f"attainment={w['slo_attainment']:.3f} "
+        f"sheds={int(w['sheds'])} "
+        f"flash_migrations={int(w['flash_migrations'])} "
+        f"replay_identical={int(w['replay_identical'])}"
+    )
 
 
 def main() -> None:
@@ -123,6 +136,7 @@ def main() -> None:
     import benchmarks.table2 as table2
     import benchmarks.tiers as tiers
     import benchmarks.topology as topology
+    import benchmarks.workload as workload
 
     csv = "--csv" in sys.argv
     for name, fn in [
@@ -138,6 +152,7 @@ def main() -> None:
         ("Topology  (non-uniform links, staged migration)", topology.main),
         ("Failover  (mid-run crash, recovery vs baseline)", failover.main),
         ("Tiers     (oversized model, host-RAM expert tiers)", tiers.main),
+        ("Workload  (flash-crowd stream, SLO goodput)", workload.main),
     ]:
         t0 = time.time()
         print(f"\n##### {name}")

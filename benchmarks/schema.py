@@ -9,7 +9,7 @@ runner)."""
 
 from __future__ import annotations
 
-SCHEMA_NAME = "bench-serving/v6"
+SCHEMA_NAME = "bench-serving/v7"
 
 # metric key -> ("scalar" | "pair" | "stats") shape requirement.
 # v2 extended v1 (same keys, same shapes) with the EdgeCluster section;
@@ -17,7 +17,9 @@ SCHEMA_NAME = "bench-serving/v6"
 # per-server profile caps; v4 adds the AOT warmup / zero-stall section
 # (``metrics.perf``); v5 adds the fault-injection/failover section
 # (``metrics.faults``); v6 adds the expert tier hierarchy section
-# (``metrics.tiers``) — extend, don't fork, when adding serving metrics.
+# (``metrics.tiers``); v7 adds the streaming-workload / SLO-scheduling
+# section (``metrics.workload``) — extend, don't fork, when adding
+# serving metrics.
 # Field-by-field documentation: docs/benchmarks.md.
 _REQUIRED_METRICS = {
     "admitted_concurrency": "pair",  # {"cache": n, "nocache": n}
@@ -106,6 +108,27 @@ _REQUIRED_TIERS = {
     "prefetch_off_mean_latency_s": "scalar",  # frozen-residency baseline
     "prefetch_off_fetches": "scalar",
     "prefetch_off_stall_seconds": "scalar",
+}
+
+
+# v7: metrics.workload — the streaming-workload / SLO-aware-scheduling
+# goodput section produced by ``benchmarks.workload`` (seeded flash-crowd
+# stream over the WAN testbed; SLO-aware vs FIFO legs on the same stream;
+# "p50p99" = {"p50": s, "p99": s}). ``phases`` is validated separately:
+# a non-empty {phase: stats} object.
+_REQUIRED_WORKLOAD = {
+    "n_servers": "scalar",
+    "requests": "scalar",  # stream length both legs consumed
+    "sheds": "scalar",  # SLO-aware leg's shed count (gated >= 1)
+    "deadline_redirects": "scalar",  # served off-route to make the SLO
+    "flash_migrations": "scalar",  # migrations completed at/after crowd
+    "goodput_tokens_per_s": "scalar",  # SLO-attained tokens / modeled s
+    "fifo_goodput_tokens_per_s": "scalar",  # blind-FIFO baseline leg
+    "slo_attainment": "scalar",  # fraction of SLO'd requests that met it
+    "fifo_slo_attainment": "scalar",
+    "ttft_s": "p50p99",  # modeled time-to-first-token, SLO-aware leg
+    "itl_s": "p50p99",  # modeled inter-token latency
+    "replay_identical": "scalar",  # 1 iff the rerun was bit-identical
 }
 
 
@@ -239,6 +262,48 @@ def validate_bench_serving(doc) -> dict:
         )
     if tiers["prefetch_hit_ratio"] > 1.0:
         raise BenchSchemaError("metrics.tiers.prefetch_hit_ratio: ratio > 1")
+
+    # -- v7: the streaming-workload / SLO-scheduling section --------------
+    wl = metrics.get("workload")
+    if not isinstance(wl, dict) or not wl:
+        raise BenchSchemaError("metrics.workload: missing or empty (v7)")
+    for key, kind in _REQUIRED_WORKLOAD.items():
+        if key not in wl:
+            raise BenchSchemaError(f"metrics.workload.{key}: missing")
+        if kind == "scalar":
+            _num(wl, "metrics.workload", key)
+            continue
+        sub = wl[key]
+        if not isinstance(sub, dict):
+            raise BenchSchemaError(
+                f"metrics.workload.{key}: expected an object"
+            )
+        for f in ("p50", "p99"):
+            if f not in sub:
+                raise BenchSchemaError(f"metrics.workload.{key}.{f}: missing")
+            _num(sub, f"metrics.workload.{key}", f)
+    phases = wl.get("phases")
+    if not isinstance(phases, dict) or not phases:
+        raise BenchSchemaError(
+            "metrics.workload.phases: missing or empty (v7)"
+        )
+    if wl["requests"] < 1:
+        raise BenchSchemaError(
+            "metrics.workload.requests: empty run (no stream was served)"
+        )
+    for key in ("slo_attainment", "fifo_slo_attainment"):
+        if wl[key] > 1.0:
+            raise BenchSchemaError(f"metrics.workload.{key}: ratio > 1")
+    if wl["replay_identical"] != 1:
+        raise BenchSchemaError(
+            "metrics.workload.replay_identical: the seeded stream rerun "
+            "was not bit-identical"
+        )
+    if wl["goodput_tokens_per_s"] <= wl["fifo_goodput_tokens_per_s"]:
+        raise BenchSchemaError(
+            "metrics.workload: SLO-aware goodput did not beat the FIFO "
+            "baseline — the scheduling gate regressed"
+        )
     return doc
 
 

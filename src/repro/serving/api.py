@@ -19,12 +19,18 @@ unchanged against either.
 Event lifecycle of one request::
 
     submit ──► ADMITTED ──► TOKEN* ──► FINISHED
-        │          ▲
-        └─ DEFERRED┘   (+ PREFIX_HIT at admission when cached pages matched)
+        │          ▲                      ▲
+        ├─ DEFERRED┘   (+ PREFIX_HIT at admission when cached pages matched)
+        └─ SHED ──────────────────────────┘
 
 ``FINISHED`` carries the per-request metrics (latency in the backend's
 clock, queue wait, locality, SLO verdict). The sim backend does not emit
-``TOKEN`` events (it models time, not tokens).
+``TOKEN`` events (it models time, not tokens). Under SLO-aware scheduling
+(``EdgeCluster(slo_aware=True)`` / ``ServingRuntime(slo_aware=True)``) a
+request whose deadline has become unmeetable is *shed*: it gets a ``SHED``
+event followed immediately by a terminal ``FINISHED`` with ``tokens=0``,
+``shed=True`` and ``slo_met=False`` — shed requests still resolve, they
+just resolve empty.
 
 This module is dependency-light (numpy only) on purpose: it is the contract
 both backends import, never the other way around.
@@ -43,9 +49,12 @@ class EventType:
     DEFERRED = "DEFERRED"        # admission deferred (pool pressure); FIFO
     PREFIX_HIT = "PREFIX_HIT"    # admission reused cached prefix pages
     TOKEN = "TOKEN"              # one generated token (runtime backend)
+    SHED = "SHED"                # dropped by SLO-aware admission: the
+    #                              deadline became unmeetable; a terminal
+    #                              FINISHED(tokens=0, shed=True) follows
     FINISHED = "FINISHED"        # done; carries the per-request metrics
 
-    ALL = (ADMITTED, DEFERRED, PREFIX_HIT, TOKEN, FINISHED)
+    ALL = (ADMITTED, DEFERRED, PREFIX_HIT, TOKEN, SHED, FINISHED)
 
     # cluster-level events (rid = -1): the staged-migration lifecycle of
     # the shared placement control plane, surfaced by
@@ -92,11 +101,17 @@ class Request:
     origin:          edge server the request *arrived* at — drives routing
                      and the per-origin gating-stats attribution
                      (Algorithm 1's f_n(e)). ``None`` = unattributed.
-    temperature:     sampling temperature. v1 serves greedy argmax only, so
-                     this must be 0.0 (the field exists so the contract does
-                     not change when sampling lands).
+    temperature:     sampling temperature (>= 0). 0.0 = greedy argmax
+                     (bit-identical to serving API v1); > 0 = Gumbel-max
+                     temperature sampling keyed by ``seed`` and the token
+                     position, so reruns of the same request are
+                     bit-identical (top-k/top-p are follow-up work).
     slo:             optional latency budget in the serving backend's clock
-                     (ticks or seconds); FINISHED reports ``slo_met``.
+                     (ticks or seconds); FINISHED reports ``slo_met``
+                     against the backend clock (FINISHED.time - submit
+                     time). Under SLO-aware scheduling the backends also
+                     *act* on it: deadline-ordered admission and
+                     shed-on-overload (see :class:`EventType.SHED`).
     arrival:         arrival time in seconds (sim backend; the runtime
                      backend serves in submission order).
     task:            task-profile name (sim backend: selects the activation
@@ -107,6 +122,10 @@ class Request:
                      same stream). Under the runtime's zero-stall loop the
                      stop is detected at most one decode round late — the
                      token stream is unaffected.
+    seed:            per-request PRNG seed for temperature sampling
+                     (ignored at temperature 0.0). Two requests with the
+                     same prompt, temperature and seed draw identical
+                     token streams; distinct seeds decorrelate them.
     """
     prompt: np.ndarray
     max_new_tokens: int
@@ -116,6 +135,7 @@ class Request:
     arrival: float | None = None
     task: str | None = None
     eos: int | None = None
+    seed: int = 0
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -123,10 +143,12 @@ class Request:
             raise ValueError("prompt must contain at least one token")
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
-        if self.temperature != 0.0:
+        if self.temperature < 0.0:
             raise ValueError(
-                "serving API v1 is greedy-only: temperature must be 0.0 "
-                f"(got {self.temperature})")
+                f"temperature must be >= 0 (got {self.temperature}); "
+                "0.0 means greedy argmax")
+        if not 0 <= int(self.seed) < 2 ** 31:
+            raise ValueError(f"seed must be in [0, 2**31) (got {self.seed})")
         if self.slo is not None and self.slo <= 0:
             raise ValueError(f"slo must be positive (got {self.slo})")
         if self.origin is not None and self.origin < 0:

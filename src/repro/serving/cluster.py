@@ -161,7 +161,8 @@ class _RuntimeBackend:
                  shared_runtime: bool, runtime_opts: dict,
                  topology: Topology | None = None,
                  fault_schedule: FaultSchedule | None = None,
-                 failover: bool = True, prefetch: bool = True):
+                 failover: bool = True, prefetch: bool = True,
+                 slo_aware: bool = False):
         from repro.serving.runtime import ServingRuntime   # lazy: keeps the
         #   sim world (simulator.py imports this module) free of jax
         self.engine = engine
@@ -206,6 +207,11 @@ class _RuntimeBackend:
             self.meter.seed(engine.stats.counts)
         opts = [dict(runtime_opts)
                 for _ in range(1 if shared_runtime else n_servers)]
+        if slo_aware:
+            # every member runtime schedules deadline-first and sheds
+            # unmeetable requests (an explicit runtime_opts wins)
+            for o in opts:
+                o.setdefault("slo_aware", True)
         if (not shared_runtime and topology is not None
                 and "n_blocks" not in runtime_opts):
             # heterogeneous KV budgets: each server's paged pool is sized
@@ -238,6 +244,12 @@ class _RuntimeBackend:
         self.requests_dropped = 0    # victims abandoned (failover=False)
         self.recovery_ticks = 0.0    # crash -> last-victim-finished, summed
         self._recovering: list[tuple[float, list[RequestHandle]]] = []
+
+    @property
+    def sheds(self) -> int:
+        """Requests shed by the members' SLO-aware admission (0 unless
+        ``slo_aware``)."""
+        return sum(r.sheds for r in self.runtimes)
 
     def _alive(self) -> np.ndarray:
         """[N] bool liveness (all-up without a topology)."""
@@ -570,7 +582,8 @@ class _SimBackend:
                  controller, router, tasks: dict | None, seed: int,
                  ratio_bucket: float, topology: Topology | None = None,
                  fault_schedule: FaultSchedule | None = None,
-                 failover: bool = True, prefetch: bool = True):
+                 failover: bool = True, prefetch: bool = True,
+                 slo_aware: bool = False):
         from repro.data.traces import Workload     # numpy-only
         from repro.serving.simulator import EdgeSimulator   # lazy: this
         #   module is imported by simulator.py (no import cycle at load)
@@ -614,6 +627,10 @@ class _SimBackend:
         self.tokens_lost = 0           # undelivered tokens of dropped reqs
         self.requests_dropped = 0
         self.recovery_seconds = 0.0    # crash -> recovery-migration eta
+        # -- SLO-aware admission (the time model's slo_admission rule) --
+        self.slo_aware = bool(slo_aware)
+        self.sheds = 0                 # requests shed (no server in time)
+        self.deadline_redirects = 0    # served elsewhere to make the SLO
 
     def _task_probs(self, name: str) -> None:
         from repro.data.traces import make_task_profile
@@ -696,19 +713,47 @@ class _SimBackend:
             if not alive[n]:
                 n = int(np.argmin(loads))
             sim_req = dataclasses.replace(sim_req, server=n)
+        slo = handle.request.slo
+        # submit-time arrival, NOT the (possibly fault-fast-forwarded)
+        # local `arrival`: the SLO verdict and the handle-facing latency
+        # are measured on the backend clock the caller submitted on
+        sub = (handle.submitted_at if handle.submitted_at is not None
+               else arrival)
+        if self.slo_aware and slo is not None:
+            from repro.serving.simulator import slo_admission
+            deadline = sub + slo
+            loads = np.where(alive, self.sim.loads(arrival), np.inf)
+            verdict, n = slo_admission(sim_req.server, loads, deadline)
+            if verdict == "shed":
+                # no live server can even *start* by the deadline —
+                # admitting would burn timeline another request could use
+                self.sheds += 1
+                handle._emit(EventType.SHED, arrival, deadline=deadline,
+                             earliest_start=float(loads.min()))
+                handle._emit(
+                    EventType.FINISHED, arrival,
+                    tokens=0, origin=handle.request.origin, server=None,
+                    latency=arrival - sub, wait=None, deferred_ticks=0,
+                    prefix_tokens_skipped=0, local_frac=None,
+                    slo=slo, slo_met=False, shed=True)
+                return True
+            if verdict == "redirect":
+                self.deadline_redirects += 1
+                sim_req = dataclasses.replace(sim_req, server=n)
         rec = self.sim.serve_request(sim_req)
         handle._emit(EventType.ADMITTED, rec["start"], server=rec["server"])
-        slo = handle.request.slo
+        latency = rec["done"] - sub
         handle._emit(
             EventType.FINISHED, rec["done"],
             tokens=handle.request.max_new_tokens, origin=handle.request.origin,
-            server=rec["server"], latency=rec["latency"],
-            wait=rec["start"] - arrival, deferred_ticks=0,
+            server=rec["server"], latency=latency,
+            wait=rec["start"] - sub, deferred_ticks=0,
             prefix_tokens_skipped=0,
             local_frac=(rec["hits"] / rec["tot"] if rec["tot"] else None),
             slo=slo,
-            slo_met=(bool(rec["latency"] <= slo)
-                     if slo is not None else None))
+            slo_met=(bool(latency <= slo)
+                     if slo is not None else None),
+            shed=False)
         if self.meter is not None and res_before is not None:
             # _dispatch_counts, not the controller's (possibly EMA-decayed,
             # possibly pre-primed) ActivationStats: metering needs the true
@@ -848,6 +893,18 @@ class EdgeCluster:
                     capacity. ``failover=False`` is the measurement
                     baseline — victims are dropped and every token they
                     owed counts as lost.
+    slo_aware:      SLO-aware scheduling (default False). Runtime backend:
+                    every member ``ServingRuntime`` admits
+                    earliest-deadline-first instead of FIFO and *sheds*
+                    requests whose ``slo`` deadline became unmeetable
+                    (``SHED`` event, then a terminal
+                    ``FINISHED(tokens=0, shed=True, slo_met=False)``).
+                    Sim backend: the time model's ``slo_admission`` rule —
+                    shed when no live server can start by the deadline,
+                    redirect to the earliest-start server when the routed
+                    one would start too late. Off by default: the
+                    scheduling-oblivious FIFO baseline the goodput
+                    benchmark compares against.
     prefetch:       expert-tier prefetching (default True). When the
                     topology carries tiered ``ServerProfile``s (host-RAM /
                     modeled-disk capacities behind the GPU) and a
@@ -871,7 +928,8 @@ class EdgeCluster:
                  ratio_bucket: float = 60.0,
                  topology: Topology | None = None,
                  fault_schedule: FaultSchedule | None = None,
-                 failover: bool = True, prefetch: bool = True):
+                 failover: bool = True, prefetch: bool = True,
+                 slo_aware: bool = False):
         router = as_router(router)
         if controller is not None:
             topology = controller.attach_topology(topology)   # one shared
@@ -898,7 +956,8 @@ class EdgeCluster:
                                            topology=topology,
                                            fault_schedule=fault_schedule,
                                            failover=failover,
-                                           prefetch=prefetch)
+                                           prefetch=prefetch,
+                                           slo_aware=slo_aware)
         elif backend == "sim":
             if spec is None and topology is not None:
                 spec = topology.to_cluster_spec()
@@ -917,7 +976,8 @@ class EdgeCluster:
                                        topology=topology,
                                        fault_schedule=fault_schedule,
                                        failover=failover,
-                                       prefetch=prefetch)
+                                       prefetch=prefetch,
+                                       slo_aware=slo_aware)
         else:
             raise ValueError(
                 f"unknown backend {backend!r}: expected 'runtime' or 'sim'")
@@ -1033,6 +1093,10 @@ class EdgeCluster:
                 redirected[oo] += 1
             if h.done:
                 finished[s] += 1
+                if h.metrics.get("shed"):
+                    # shed requests resolve without service: their
+                    # (near-zero) latency is not a serving latency
+                    continue
                 lat = h.metrics.get("latency")
                 if lat is not None:
                     lat_sum[oo] += lat
@@ -1052,6 +1116,7 @@ class EdgeCluster:
                                 for v in self.backend.local_ratio()],
             },
             "redirected_total": int(redirected.sum()),
+            "sheds": int(getattr(self.backend, "sheds", 0)),
         }
         perf = getattr(self.backend, "perf", None)
         if perf is not None:

@@ -35,6 +35,7 @@ import numpy as np
 from repro.core.stats import ActivationStats
 from repro.models import moe as moe_mod
 from repro.models import transformer as tr
+from repro.serving.sampling import sample_tokens
 
 
 @dataclasses.dataclass
@@ -111,8 +112,12 @@ class ServingEngine:
         prefilling slot per call (batched multi-slot prefill). Both thread
         the last-token buffer: ``rows`` maps batch row -> slot index (the
         trailing scratch entry for padding rows), decode gathers its input
-        tokens from ``last_buf`` and both scatter their on-device argmax
-        back into it, so consecutive rounds chain without a host transfer.
+        tokens from ``last_buf`` and both scatter their on-device next
+        token back into it, so consecutive rounds chain without a host
+        transfer. The next token is the seeded Gumbel-max sample of
+        ``repro.serving.sampling`` — exact argmax for rows at
+        ``temps == 0``, a per-request ``(seed, position)``-keyed draw
+        otherwise, so sampling never depends on batch composition.
         The functions specialize on array shapes; the (block_size,
         max_pages) key only keeps one cached pair per pool geometry."""
         key = (block_size, max_pages)
@@ -131,6 +136,8 @@ class ServingEngine:
                 last_idx,
                 placement,
                 token_mask,
+                temps,
+                seeds,
                 origin=None,
             ):
                 self.traces += 1
@@ -149,10 +156,13 @@ class ServingEngine:
                 )
                 # seed the decode chain: rows whose final chunk just landed
                 # read their first token from last_buf next round (partial
-                # chunks scatter a value no decode round will ever gather)
-                first = jnp.argmax(logits, -1).astype(jnp.int32)
+                # chunks scatter a value no decode round will ever gather).
+                # The sample position is the absolute last prompt index.
+                first = sample_tokens(
+                    logits, temps, seeds, offset + last_idx
+                ).astype(jnp.int32)
                 last_buf = last_buf.at[rows].set(first)
-                return last_buf, logits, pool, mstats
+                return last_buf, first, logits, pool, mstats
 
             def _dec(
                 params,
@@ -163,6 +173,8 @@ class ServingEngine:
                 page_table,
                 placement,
                 token_mask,
+                temps,
+                seeds,
                 origin=None,
             ):
                 self.traces += 1
@@ -178,7 +190,9 @@ class ServingEngine:
                     page_table=page_table,
                     origin=origin,
                 )
-                nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+                nxt = sample_tokens(logits, temps, seeds, pos).astype(
+                    jnp.int32
+                )
                 last_buf = last_buf.at[rows].set(nxt)
                 return last_buf, nxt, pool, mstats
 
@@ -244,6 +258,8 @@ class ServingEngine:
             vec = jnp.zeros((B,), jnp.int32)
             tbl = jnp.zeros((B, max_pages), jnp.int32)
             dmask = jnp.zeros((B,), jnp.float32)
+            temps = jnp.zeros((B,), jnp.float32)
+            seeds = jnp.zeros((B,), jnp.uint32)
             for tagged in tag_modes:
                 org = jnp.zeros((B,), jnp.int32) if tagged else None
                 key = ("chunk", block_size, max_pages, B, tagged)
@@ -262,6 +278,8 @@ class ServingEngine:
                             vec,
                             self.placement,
                             cmask,
+                            temps,
+                            seeds,
                             org,
                         )
                         .compile()
@@ -280,6 +298,8 @@ class ServingEngine:
                             tbl,
                             self.placement,
                             dmask,
+                            temps,
+                            seeds,
                             org,
                         )
                         .compile()

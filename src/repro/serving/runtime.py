@@ -94,6 +94,7 @@ from repro.models import transformer as tr
 from repro.serving.api import EventType, Request, RequestHandle
 from repro.serving.engine import ServingEngine
 from repro.serving.prefix_cache import PrefixMatch, RadixPrefixCache
+from repro.serving.sampling import sample_token_host, sample_tokens
 
 
 @dataclasses.dataclass
@@ -105,6 +106,11 @@ class GenRequest:
     max_new_tokens: int
     origin: int | None = None     # originating server (EP rank) for stats
     eos: int | None = None        # stop token (truncates max_new_tokens)
+    temperature: float = 0.0      # 0 = greedy; > 0 = seeded Gumbel-max
+    seed: int = 0                 # per-request sampling PRNG seed
+    deadline: float | None = None  # absolute tick the SLO expires at
+    #   (submitted_at + slo; None = no SLO) — drives the slo_aware
+    #   deadline-ordered admission queue and the shed rule
 
 
 @dataclasses.dataclass
@@ -120,6 +126,8 @@ class _Slot:
     launched: int = 0             # tokens whose computation was launched;
     #   drives decode-batch composition so length stops never need a
     #   drained result (zero-stall loop: tokens lag launches by <= 1 round)
+    temperature: float = 0.0      # sampling temperature (0 = greedy)
+    seed: int = 0                 # sampling PRNG seed
     # paged-mode state
     pages: list = dataclasses.field(default_factory=list)
     prompt: np.ndarray | None = None   # full prompt (kept for cache insert)
@@ -151,6 +159,8 @@ class _Pending:
     #   every live row; prefill: only rows whose final chunk landed
     nxt: object = None            # decode: [B] int32 sampled tokens
     logits: object = None         # prefill: [B, V] final-position logits
+    first: object = None          # prefill: [B] int32 first tokens (the
+    #   same values the chunk call scattered into the last-token buffer)
     mstats: object = None         # gating stats (ingested at drain)
 
 
@@ -341,9 +351,17 @@ class ServingRuntime:
                  n_blocks: int | None = None, max_pages: int | None = None,
                  chunks_per_tick: int = 1, prefix_cache: bool = True,
                  compact_decode: bool = True, compact_prefill: bool = True,
-                 warmup: bool = False, warmup_origins: str = "both"):
+                 warmup: bool = False, warmup_origins: str = "both",
+                 slo_aware: bool = False):
         self.engine = engine
         self.max_slots = max_slots
+        # SLO-aware scheduling: admission drains the queue in deadline
+        # order (EDF) instead of FIFO, and requests whose deadline cannot
+        # be met even under the best case (full prefix hit, one token per
+        # tick) are *shed* — SHED event + terminal empty FINISHED — so
+        # doomed work never occupies a slot another request could use
+        self.slo_aware = bool(slo_aware)
+        self.sheds = 0                # requests shed by SLO-aware admission
         self.controller = controller
         if controller is not None:
             if controller.stats is None:
@@ -513,8 +531,6 @@ class ServingRuntime:
                 f"exceeds the pool's max_len={self.engine.max_len}")
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(GenRequest(rid, prompt, max_new_tokens, origin,
-                                     getattr(request, "eos", None)))
         if handle is None:
             handle = RequestHandle(rid, request, clock="ticks")
             handle.submitted_at = self.ticks
@@ -523,6 +539,16 @@ class ServingRuntime:
             handle.request = request
             if handle.submitted_at is None:
                 handle.submitted_at = self.ticks
+        slo = request.slo
+        # the deadline is anchored at the *original* submit tick, so a
+        # failover re-admit does not get a fresh SLO budget
+        deadline = (handle.submitted_at + slo) if slo is not None else None
+        self.queue.append(GenRequest(
+            rid, prompt, max_new_tokens, origin,
+            getattr(request, "eos", None),
+            temperature=float(getattr(request, "temperature", 0.0)),
+            seed=int(getattr(request, "seed", 0)),
+            deadline=deadline))
         self.handles[rid] = handle
         self._t_enqueue[rid] = time.perf_counter()
         return handle
@@ -649,6 +675,8 @@ class ServingRuntime:
         return jnp.asarray([o or 0 for o in origins], jnp.int32)
 
     def _admit(self) -> int:
+        if self.slo_aware:
+            self._slo_schedule()
         if self.paged:
             n = self._admit_paged()
         else:
@@ -656,13 +684,60 @@ class ServingRuntime:
         self.max_admitted = max(self.max_admitted, self.active)
         return n
 
+    def _slo_schedule(self) -> None:
+        """SLO-aware queue pass (``slo_aware=True``): shed every queued
+        request whose deadline is unmeetable even in the best case — a
+        full prefix hit emitting its first token this tick and one token
+        per tick after (``ticks + need - 1 > deadline``) — then reorder
+        the queue earliest-deadline-first (SLO-less requests sort last,
+        ties broken by rid, so the order is total and deterministic).
+        Shedding is optimistic on purpose: only certainly-doomed requests
+        are dropped, a merely-late-looking queue keeps its chance."""
+        kept: collections.deque[GenRequest] = collections.deque()
+        for r in self.queue:
+            if (r.deadline is not None
+                    and self.ticks + r.max_new_tokens - 1 > r.deadline):
+                self._shed(r)
+            else:
+                kept.append(r)
+        if len(kept) > 1:
+            kept = collections.deque(sorted(
+                kept, key=lambda r: (r.deadline if r.deadline is not None
+                                     else float("inf"), r.rid)))
+        self.queue = kept
+
+    def _shed(self, r: GenRequest) -> None:
+        """Drop one doomed queued request: SHED event, then the terminal
+        FINISHED (``tokens=0, shed=True, slo_met=False``) so the request
+        still resolves — consumers block on FINISHED, never on SHED."""
+        self.sheds += 1
+        self._emit(r.rid, EventType.SHED, deadline=r.deadline,
+                   need=r.max_new_tokens)
+        self.finished[r.rid] = np.zeros(0, np.int32)
+        self.finished_at[r.rid] = self.ticks
+        self._t_enqueue.pop(r.rid, None)
+        h = self.handles.get(r.rid)
+        if h is None:
+            return
+        latency = (self.ticks - h.submitted_at
+                   if h.submitted_at is not None else None)
+        h._emit(EventType.FINISHED, self.ticks,
+                tokens=0, origin=r.origin, server=h.server,
+                latency=latency, wait=None,
+                deferred_ticks=h.deferred_ticks,
+                prefix_tokens_skipped=0, local_frac=None,
+                slo=h.request.slo, slo_met=False, shed=True)
+
     def _admit_paged(self) -> int:
-        """Admit FIFO-head requests while a slot row and enough free blocks
-        exist. The prefix cache is consulted first: shared pages are
+        """Admit queue-head requests while a slot row and enough free
+        blocks exist — FIFO order by default, earliest-deadline-first
+        under ``slo_aware`` (``_slo_schedule`` reorders the queue before
+        this runs). The prefix cache is consulted first: shared pages are
         acquired (refcount + 1) instead of allocated, so a hit both skips
         prefill and shrinks the fresh-block bill. A head that does not fit
         — after evicting cold cache entries — *defers* (stays queued, no
-        crash, no overtaking) until retirements return blocks."""
+        overtaking within the chosen order) until retirements return
+        blocks."""
         admitted = 0
         while self.queue and self._free_slot_ids():
             r = self.queue[0]
@@ -721,7 +796,8 @@ class ServingRuntime:
         slot = _Slot(rid=r.rid, pos=0, last=-1, tokens=[],
                      need=r.max_new_tokens, origin=r.origin, eos=r.eos,
                      pages=pages, prompt=r.prompt, filled=m.tokens,
-                     prefix_skipped=m.tokens)
+                     prefix_skipped=m.tokens,
+                     temperature=r.temperature, seed=r.seed)
         self.slots[i] = slot
         self._emit(r.rid, EventType.ADMITTED, slot=i, server=r.origin,
                    pages=len(pages))
@@ -732,9 +808,10 @@ class ServingRuntime:
                        full_hit=m.full_hit)
         if m.full_hit:
             # the whole prompt is cached: the first token is recomputed
-            # from the cached last-prompt-token logits (greedy argmax is
-            # deterministic, so this is bit-equal to running prefill)
-            first = int(np.argmax(m.logits))
+            # from the cached last-prompt-token logits with the same
+            # (seed, position)-keyed sampling rule the chunk call applies,
+            # so a hit is bit-equal to running prefill
+            first = sample_token_host(m.logits, r.temperature, r.seed, T - 1)
             slot.pos = T
             slot.launched = 1
             slot.final_logits = m.logits
@@ -766,15 +843,18 @@ class ServingRuntime:
             self.engine._ingest(mstats)
             idx = jnp.asarray(free[:len(group)], jnp.int32)
             self.pool = self._write_rows(self.pool, cache, idx)
-            first = np.asarray(jnp.argmax(logits, -1), np.int32)   # [b]
+            lg = np.asarray(logits)                                # [b, V]
             for j, r in enumerate(group):
+                first = sample_token_host(lg[j], r.temperature, r.seed,
+                                          T - 1)
                 slot = _Slot(rid=r.rid, pos=T, last=-1, tokens=[],
                              need=r.max_new_tokens, origin=r.origin,
-                             eos=r.eos, launched=1)
+                             eos=r.eos, launched=1,
+                             temperature=r.temperature, seed=r.seed)
                 self.slots[free[j]] = slot
                 self._emit(r.rid, EventType.ADMITTED, slot=free[j],
                            server=r.origin)
-                self._append_token(slot, int(first[j]))
+                self._append_token(slot, first)
                 self._retire_if_done(free[j])
             admitted += len(group)
         return admitted
@@ -843,7 +923,8 @@ class ServingRuntime:
                 slo=slo,
                 slo_met=(bool(latency <= slo)
                          if slo is not None and latency is not None
-                         else None))
+                         else None),
+                shed=False)
 
     # ------------------------------------------------------------------
     def _prefill_round(self) -> None:
@@ -881,6 +962,8 @@ class ServingRuntime:
             lidx = np.zeros((B,), np.int32)
             wb = np.zeros((B,), np.int32)      # idle rows -> null block 0
             tbl = np.zeros((B, self.max_pages), np.int32)
+            temps = np.zeros((B,), np.float32)
+            seeds = np.zeros((B,), np.uint32)
             finals: list[tuple[int, int, int]] = []   # (row, slot, rid)
             for j, i in enumerate(row_slots):
                 if i is None:
@@ -895,6 +978,8 @@ class ServingRuntime:
                 offs[j] = c0
                 wb[j] = s.pages[c0 // bs]
                 tbl[j] = self.page_table[i]
+                temps[j] = s.temperature
+                seeds[j] = s.seed
                 final = c0 + valid >= T
                 lidx[j] = (T - 1 - c0) if final else bs - 1
                 s.filled += valid
@@ -912,40 +997,46 @@ class ServingRuntime:
                        "chunk", bs, self.max_pages, B, org is not None)
                    if self.warmup else None)
             fn = exe if exe is not None else self._chunk_fn
-            self._last_buf, logits, self.pool, mstats = fn(
+            self._last_buf, first, logits, self.pool, mstats = fn(
                 self.engine.params, self.pool, self._last_buf,
                 jnp.asarray(rows), jnp.asarray(toks), jnp.asarray(tbl),
                 jnp.asarray(wb), jnp.asarray(offs), jnp.asarray(lidx),
-                self.engine.placement, jnp.asarray(mask), org)
+                self.engine.placement, jnp.asarray(mask),
+                jnp.asarray(temps), jnp.asarray(seeds), org)
             self.prefill_calls += 1
             self.prefill_rows += B
             self.chunks_executed += len(act)
             if self.warmup:
                 if finals:
                     self._copy_async(logits)
+                    self._copy_async(first)
                 self._copy_async(mstats)
                 self._pending.append(_Pending(
                     "prefill", self.ticks, finals,
-                    logits=logits if finals else None, mstats=mstats))
+                    logits=logits if finals else None,
+                    first=first if finals else None, mstats=mstats))
                 continue
             self.engine._ingest(mstats)
             if finals:
                 self.host_syncs += 1
                 lg = np.asarray(logits)
+                fi = np.asarray(first)
                 for j, i, rid in finals:
-                    self._finish_prefill(i, rid, lg[j])
+                    self._finish_prefill(i, rid, lg[j], int(fi[j]))
 
-    def _finish_prefill(self, i: int, rid: int, logits_row) -> None:
-        """Drain-side completion of one slot's prefill: first token (host
-        argmax of the final-position logits — bit-equal to the device
-        argmax already scattered into the last-token buffer), radix-cache
-        registration, and need==1 retirement."""
+    def _finish_prefill(self, i: int, rid: int, logits_row,
+                        first_tok: int) -> None:
+        """Drain-side completion of one slot's prefill: first token (the
+        chunk call's own sampled value — the exact token it scattered into
+        the device last-token buffer, so the emitted stream and the decode
+        chain can never disagree), radix-cache registration, and need==1
+        retirement."""
         s = self.slots[i]
         if s is None or s.rid != rid:
             return
         row = np.asarray(logits_row)
         s.final_logits = row
-        self._append_token(s, int(np.argmax(row)))
+        self._append_token(s, int(first_tok))
         self._cache_insert(i, row)
         self._retire_if_done(i)
 
@@ -988,6 +1079,8 @@ class ServingRuntime:
             row_slots = [i if i in act else None for i in range(B)]
         pos = np.zeros((B,), np.int32)
         mask = np.zeros((B,), np.float32)
+        temps = np.zeros((B,), np.float32)
+        seeds = np.zeros((B,), np.uint32)
         launched: list[tuple[int, int, int]] = []    # (row, slot, rid)
         for j, i in enumerate(row_slots):
             if i is None:
@@ -995,6 +1088,8 @@ class ServingRuntime:
             s = self.slots[i]
             pos[j] = s.pos
             mask[j] = 1.0
+            temps[j] = s.temperature
+            seeds[j] = s.seed
             s.pos += 1
             s.launched += 1
             launched.append((j, i, s.rid))
@@ -1022,7 +1117,8 @@ class ServingRuntime:
             self._last_buf, nxt, self.pool, mstats = fn(
                 self.engine.params, self.pool, self._last_buf,
                 jnp.asarray(rows), jnp.asarray(pos), jnp.asarray(tbl),
-                self.engine.placement, jnp.asarray(mask), org)
+                self.engine.placement, jnp.asarray(mask),
+                jnp.asarray(temps), jnp.asarray(seeds), org)
             self.decode_rows += B
             if self.warmup:
                 # zero-stall: round k+1 chains on device through the
@@ -1050,8 +1146,13 @@ class ServingRuntime:
             self.decode_rows += B
             self.engine._ingest(mstats)
             self.host_syncs += 1
-            self._drain_tokens(launched,
-                               np.asarray(jnp.argmax(logits, -1), np.int32),
+            if np.any(temps > 0.0):
+                nxt = np.asarray(sample_tokens(
+                    logits, jnp.asarray(temps), jnp.asarray(seeds),
+                    jnp.asarray(pos)), np.int32)
+            else:
+                nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+            self._drain_tokens(launched, nxt,
                                self._round_local_frac(mstats))
         self.rounds += 1
         self._maybe_review()
@@ -1113,8 +1214,9 @@ class ServingRuntime:
         else:
             if p.rows:
                 lg = self._fetch(p.logits)
+                fi = self._fetch(p.first)
                 for j, i, rid in p.rows:
-                    self._finish_prefill(i, rid, lg[j])
+                    self._finish_prefill(i, rid, lg[j], int(fi[j]))
 
     def _drain_backlog(self, before_tick: int | None = None) -> None:
         """Drain pending round records in launch order — all of them, or

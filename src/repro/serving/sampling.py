@@ -1,0 +1,85 @@
+"""Seeded Gumbel-max temperature sampling shared by every decode surface.
+
+One sampling rule serves the jitted paged step functions, the dense
+(non-paged) admission/decode paths and the host-side full-prefix-hit
+admission, so a request's token stream depends only on its own
+``(seed, temperature)`` and the logits it sees:
+
+* rows with ``temperature == 0`` reduce to ``argmax(logits)`` exactly —
+  the pre-sampling greedy behavior, bit-identical;
+* rows with ``temperature > 0`` draw via the Gumbel-max trick with a
+  threefry key derived **only** from ``(seed, token position)`` — never
+  from batch composition, bucket width or scheduling — so reruns (and the
+  warm vs sync decode loops, which batch the same rows differently) are
+  bit-identical by construction. jax's threefry PRNG is specified
+  independently of backend/platform, which makes the seeded stream a
+  contract rather than an accident.
+
+Top-k / top-p truncation is deliberate follow-up work: the Gumbel-max
+draw here is full-vocabulary.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# temperatures below this clamp still count as "hot enough to divide by":
+# guards the logits/temp division against inf without changing any
+# realistic temperature (rows at exactly 0.0 never reach the division)
+_MIN_TEMP = 1e-4
+
+
+def _keys(seeds: jnp.ndarray, positions: jnp.ndarray) -> jnp.ndarray:
+    """[B, 2] per-row threefry keys from (request seed, token position)."""
+
+    def one(seed, pos):
+        return jax.random.fold_in(jax.random.PRNGKey(seed), pos)
+
+    return jax.vmap(one)(
+        seeds.astype(jnp.uint32), positions.astype(jnp.uint32)
+    )
+
+
+def sample_tokens(
+    logits: jnp.ndarray,
+    temps: jnp.ndarray,
+    seeds: jnp.ndarray,
+    positions: jnp.ndarray,
+) -> jnp.ndarray:
+    """[B] next-token ids from [B, V] logits.
+
+    ``temps``/``seeds``/``positions`` are per-row; rows with ``temps == 0``
+    return the exact argmax (greedy), rows with ``temps > 0`` return the
+    Gumbel-max sample of ``softmax(logits / temp)`` keyed by
+    ``fold_in(PRNGKey(seed), position)``. Usable inside jit and eagerly —
+    both produce the same tokens for the same inputs.
+    """
+    greedy = jnp.argmax(logits, axis=-1)
+    vocab = logits.shape[-1]
+    keys = _keys(seeds, positions)
+    noise = jax.vmap(
+        lambda k: jax.random.gumbel(k, (vocab,), logits.dtype)
+    )(keys)
+    t = jnp.maximum(temps, _MIN_TEMP).astype(logits.dtype)
+    sampled = jnp.argmax(logits / t[:, None] + noise, axis=-1)
+    return jnp.where(temps > 0.0, sampled, greedy).astype(greedy.dtype)
+
+
+def sample_token_host(
+    logits_row: np.ndarray, temperature: float, seed: int, position: int
+) -> int:
+    """Sample one token eagerly on the host — the same keyed draw as the
+    jitted path makes for identical ``(logits, temperature, seed,
+    position)``. The greedy fast path avoids device work entirely."""
+    row = np.asarray(logits_row)
+    if temperature <= 0.0:
+        return int(np.argmax(row))
+    out = sample_tokens(
+        jnp.asarray(row, jnp.float32)[None, :],
+        jnp.full((1,), temperature, jnp.float32),
+        jnp.asarray([seed], jnp.uint32),
+        jnp.asarray([position], jnp.uint32),
+    )
+    return int(out[0])

@@ -57,11 +57,41 @@ from repro.serving.cluster import ClusterSpec, MoEProfile
 
 @dataclasses.dataclass
 class ArrivalSource:
-    """Component 1: yields requests in arrival order."""
-    workload: Workload
+    """Component 1: yields requests in arrival order.
+
+    Accepts a materialized ``Workload`` or any iterable of requests in
+    arrival order — a streaming generator (e.g.
+    ``repro.serving.workload.WorkloadStream``) is consumed lazily, so a
+    million-request scenario never exists in memory at once."""
+    workload: "Workload | object"
 
     def __iter__(self):
-        return iter(self.workload.requests)
+        reqs = getattr(self.workload, "requests", self.workload)
+        return iter(reqs)
+
+
+def slo_admission(server: int, loads: np.ndarray,
+                  deadline: float) -> tuple[str, int]:
+    """The time model's SLO-aware admission rule, shared with the cluster
+    sim backend (``EdgeCluster(slo_aware=True)``).
+
+    ``loads`` is the [N] earliest-start estimate (``EdgeSimulator.loads``:
+    ``max(timeline.free, arrival)``, ``inf`` for dead servers); ``server``
+    the router's choice. Returns one of
+
+    * ``("serve", server)`` — the chosen server can start by the deadline;
+    * ``("redirect", n)`` — it cannot, but the earliest-start server ``n``
+      can: serve there instead (deadline-aware deferral, the seconds-clock
+      analogue of the runtime's deadline-ordered queue);
+    * ``("shed", -1)`` — no live server can start by the deadline: the
+      request is doomed and admitting it would only delay others.
+    """
+    best = int(np.argmin(loads))
+    if float(loads[best]) > deadline:
+        return ("shed", -1)
+    if 0 <= server < len(loads) and float(loads[server]) <= deadline:
+        return ("serve", server)
+    return ("redirect", best)
 
 
 @dataclasses.dataclass

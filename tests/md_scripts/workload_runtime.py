@@ -1,0 +1,129 @@
+"""SLO-aware scheduling + temperature sampling on the real jitted runtime.
+
+Checks, against the jitted serving stack (dense-MoE reduced engine):
+
+  1. ``ServingRuntime(slo_aware=True)`` sheds requests whose deadline
+     became unmeetable (SHED event, terminal FINISHED with ``tokens=0``,
+     ``shed=True``, ``slo_met=False``) while the FIFO baseline burns
+     decode rounds finishing them late;
+  2. goodput (SLO-attained tokens per tick, via
+     ``repro.serving.workload.goodput_report``) is **strictly** higher
+     under SLO-aware scheduling than under FIFO on the same request set;
+  3. admission is deadline-ordered (EDF): a tight-deadline request
+     enqueued behind a loose one is admitted first;
+  4. temperature sampling is deterministic end-to-end: a full rerun of
+     the SLO-aware leg (temperature > 0, per-request seeds) reproduces
+     every token stream and every goodput number bit-for-bit, and
+     temperature-0 requests still match greedy ``generate()`` exactly.
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import TaskTokenSource
+from repro.launch.mesh import make_test_mesh
+from repro.models import transformer as tr
+from repro.serving.api import EventType, Request
+from repro.serving.engine import ServingEngine
+from repro.serving.runtime import ServingRuntime
+from repro.serving.workload import goodput_report
+
+BLOCK_SIZE = 8
+# max_slots=2 serves the 8 requests in 4 waves of ~5 ticks each: with a
+# 12-tick SLO the last two waves (latency 15 / 20) are doomed from the
+# queue — FIFO finishes them late, SLO-aware sheds them
+N_REQUESTS, STEPS, PROMPT, SLO = 8, 6, 8, 12.0
+
+
+def build_engine():
+    cfg = get_config("mixtral-8x7b").reduced()
+    mesh = make_test_mesh(1, 1)
+    rt = tr.Runtime(cfg=cfg, mesh=mesh, moe_impl="dense")
+    params = tr.init_params(rt, jax.random.PRNGKey(0))
+    eng = ServingEngine(rt=rt, params=params, placement=None, max_len=48)
+    src = TaskTokenSource("arith", cfg.vocab_size, seed=3)
+    return eng, src
+
+
+def build_requests(src):
+    prompts = src.sample(N_REQUESTS, PROMPT)
+    return [Request(prompt=prompts[k], max_new_tokens=STEPS, origin=None,
+                    temperature=0.7 if k % 2 else 0.0, seed=100 + k,
+                    slo=SLO)
+            for k in range(N_REQUESTS)]
+
+
+def run_leg(eng, requests, slo_aware):
+    rtm = ServingRuntime(eng, max_slots=2, block_size=BLOCK_SIZE,
+                         slo_aware=slo_aware)
+    handles = [rtm.enqueue(r) for r in requests]
+    rtm.run()
+    rep = goodput_report(handles)
+    toks = [h.result().tolist() for h in handles]
+    return rtm, handles, rep, toks
+
+
+def main():
+    eng, src = build_engine()
+    requests = build_requests(src)
+
+    rt_slo, h_slo, rep_slo, tok_slo = run_leg(eng, requests, slo_aware=True)
+    rt_fifo, h_fifo, rep_fifo, tok_fifo = run_leg(eng, requests,
+                                                  slo_aware=False)
+
+    # 1. the SLO-aware leg sheds the doomed tail; FIFO serves it late
+    assert rt_slo.sheds >= 1, f"no sheds: {rep_slo}"
+    assert rt_fifo.sheds == 0
+    for h, toks in zip(h_slo, tok_slo):
+        if h.metrics.get("shed"):
+            assert toks == [] and h.metrics["slo_met"] is False
+            assert any(e.type == EventType.SHED for e in h.events)
+    late = [h for h in h_fifo if h.metrics["slo_met"] is False]
+    assert late, "FIFO leg should finish some requests past their SLO"
+    assert all(len(t) == STEPS for t in tok_fifo)
+    print(f"shedding OK: {rt_slo.sheds} shed, {len(late)} late under FIFO")
+
+    # 2. strict goodput win on the same request set
+    g_slo = rep_slo["goodput_tokens_per_s"]
+    g_fifo = rep_fifo["goodput_tokens_per_s"]
+    assert g_slo > g_fifo, (g_slo, g_fifo)
+    print(f"goodput OK: slo-aware {g_slo:.3f} > fifo {g_fifo:.3f} tok/tick")
+
+    # 3. EDF: a tight-deadline request enqueued behind a loose one is
+    # admitted first once a slot frees up
+    rtm = ServingRuntime(eng, max_slots=1, block_size=BLOCK_SIZE,
+                         slo_aware=True)
+    blocker = rtm.enqueue(Request(prompt=requests[0].prompt,
+                                  max_new_tokens=2))
+    loose = rtm.enqueue(Request(prompt=requests[1].prompt,
+                                max_new_tokens=2, slo=200.0))
+    tight = rtm.enqueue(Request(prompt=requests[2].prompt,
+                                max_new_tokens=2, slo=50.0))
+    rtm.run()
+    assert blocker.done and loose.done and tight.done
+    assert tight.admitted_at < loose.admitted_at, (
+        tight.admitted_at, loose.admitted_at)
+    print("EDF admission order OK")
+
+    # 4. bit-identical rerun (temperature sampling + shed decisions),
+    # and temperature-0 rows equal greedy generate()
+    _, _, rep2, tok2 = run_leg(eng, requests, slo_aware=True)
+    assert rep2 == rep_slo, (rep2, rep_slo)
+    assert tok2 == tok_slo
+    ref, _ = eng.generate(np.stack([r.prompt for r in requests]),
+                          steps=STEPS)
+    for k, (r, toks) in enumerate(zip(requests, tok_fifo)):
+        if r.temperature == 0.0:
+            np.testing.assert_array_equal(np.asarray(toks, np.int32),
+                                          ref[k])
+    # the sampled rows actually sample: at least one diverges from greedy
+    assert any(tok_fifo[k] != ref[k].tolist()
+               for k, r in enumerate(requests) if r.temperature > 0.0), (
+        "temperature 0.7 never diverged from greedy — sampling inert?")
+    print("determinism + greedy identity OK")
+    print("ALL OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -32,8 +32,16 @@ def test_request_validation():
         Request(prompt=p, max_new_tokens=0)
     with pytest.raises(ValueError):
         Request(prompt=[], max_new_tokens=2)
+    # temperature sampling is a first-class path now: > 0 is accepted,
+    # only negative temperatures (and out-of-range seeds) are rejected
+    assert Request(prompt=p, max_new_tokens=2, temperature=0.7,
+                   seed=123).temperature == 0.7
     with pytest.raises(ValueError):
-        Request(prompt=p, max_new_tokens=2, temperature=0.7)  # greedy-only
+        Request(prompt=p, max_new_tokens=2, temperature=-0.1)
+    with pytest.raises(ValueError):
+        Request(prompt=p, max_new_tokens=2, seed=-1)
+    with pytest.raises(ValueError):
+        Request(prompt=p, max_new_tokens=2, seed=2 ** 31)
     with pytest.raises(ValueError):
         Request(prompt=p, max_new_tokens=2, slo=-1.0)
     with pytest.raises(ValueError):
@@ -383,13 +391,14 @@ def test_cluster_sim_slo_and_step():
 
 
 # ---------------------------------------------------------------------------
-# bench-serving/v6 schema (satellite): cluster + net + perf + faults + tiers
+# bench-serving/v7 schema (satellite): cluster + net + perf + faults +
+# tiers + workload
 # ---------------------------------------------------------------------------
 
-def _v6_doc():
+def _v7_doc():
     pair = {"cache": 2, "nocache": 1}
     return {
-        "schema": "bench-serving/v6", "mode": "smoke",
+        "schema": "bench-serving/v7", "mode": "smoke",
         "metrics": {
             "admitted_concurrency": dict(pair),
             "prefill_chunks_executed": dict(pair),
@@ -452,16 +461,31 @@ def _v6_doc():
                 "prefetch_off_fetches": 240,
                 "prefetch_off_stall_seconds": 4.9,
             },
+            "workload": {
+                "n_servers": 3,
+                "requests": 480,
+                "sheds": 140,
+                "deadline_redirects": 90,
+                "flash_migrations": 2,
+                "goodput_tokens_per_s": 36.5,
+                "fifo_goodput_tokens_per_s": 14.8,
+                "slo_attainment": 0.49,
+                "fifo_slo_attainment": 0.43,
+                "ttft_s": {"p50": 1.2, "p99": 7.1},
+                "itl_s": {"p50": 0.01, "p99": 0.05},
+                "phases": {"flash": {"requests": 270, "sheds": 140}},
+                "replay_identical": 1,
+            },
         },
     }
 
 
-def test_schema_v6_accepts_and_rejects():
+def test_schema_v7_accepts_and_rejects():
     import sys
     import os
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     from benchmarks.schema import BenchSchemaError, validate_bench_serving
-    assert validate_bench_serving(_v6_doc())
+    assert validate_bench_serving(_v7_doc())
     for mutate in (
         lambda d: d["metrics"].pop("cluster"),
         lambda d: d["metrics"]["cluster"].pop("per_server_local_ratio"),
@@ -480,7 +504,7 @@ def test_schema_v6_accepts_and_rejects():
                                  [1, 1, 0]]),                    # negative
         lambda d: d["metrics"]["net"].update(cross_server_bytes=0),  # empty
         lambda d: d["metrics"]["net"].pop("migration_transfer_seconds"),
-        lambda d: d.update(schema="bench-serving/v5"),           # stale tag
+        lambda d: d.update(schema="bench-serving/v6"),           # stale tag
         lambda d: d["metrics"].pop("perf"),                      # v4
         lambda d: d["metrics"]["perf"].pop("decode_round_ms"),
         lambda d: d["metrics"]["perf"]["decode_round_ms"].pop("p99"),
@@ -503,8 +527,21 @@ def test_schema_v6_accepts_and_rejects():
         lambda d: d["metrics"]["tiers"].update(
             per_server_gpu_slots=[48, 40]),                      # len != n
         lambda d: d["metrics"]["tiers"].update(on_demand_fetches=-1),
+        lambda d: d["metrics"].pop("workload"),                  # v7
+        lambda d: d["metrics"]["workload"].pop("goodput_tokens_per_s"),
+        lambda d: d["metrics"]["workload"].pop("phases"),
+        lambda d: d["metrics"]["workload"].update(phases={}),    # empty
+        lambda d: d["metrics"]["workload"].update(requests=0),   # empty run
+        lambda d: d["metrics"]["workload"].update(
+            replay_identical=0),                                 # not bit-id
+        lambda d: d["metrics"]["workload"].update(
+            slo_attainment=1.2),                                 # ratio > 1
+        lambda d: d["metrics"]["workload"].update(
+            goodput_tokens_per_s=10.0),            # lost to FIFO: gate fails
+        lambda d: d["metrics"]["workload"]["ttft_s"].pop("p99"),
+        lambda d: d["metrics"]["workload"].update(sheds=-1),
     ):
-        doc = _v6_doc()
+        doc = _v7_doc()
         mutate(doc)
         with pytest.raises(BenchSchemaError):
             validate_bench_serving(doc)
