@@ -1,0 +1,172 @@
+"""Unified-observability benchmark: one traced run, every span source.
+
+The scenario stacks every event source the span tracer covers into ONE
+sim-backend run over the tiered WAN testbed of ``benchmarks.tiers``:
+sharply skewed task profiles with the mid-run shift (placement reviews
+-> a staged migration -> per-link ``TRANSFER_TASK`` spans), host-RAM
+expert tiers with activation-aware prefetch (``PREFETCH`` /
+``COLD_FETCH_STALL`` spans), and a timed WAN-link brownout from a
+``FaultSchedule`` (``FAULT`` spans) — plus the per-request
+``QUEUE_WAIT`` / ``PREFILL_CHUNK`` / ``DECODE_ROUND`` phases of every
+served request.
+
+The leg runs the scenario twice and the two exported Chrome-trace
+documents must be **byte-identical** — the determinism contract of
+``repro.serving.obs`` (span records carry model-clock times and
+sequence numbers only; the wall clock never enters the export).
+
+Reported (``metrics.obs`` of ``BENCH_serving.json``, schema
+``bench-serving/v8``): span counts by kind, total events, the dropped
+counter (gated == 0), the tracer's wall-clock recording overhead, and
+``replay_identical`` (gated == 1). ``smoke(trace_out=...)`` also writes
+the exported trace — the CI artifact uploaded next to
+``BENCH_serving.json`` and schema-checked by ``validate_trace_doc``.
+
+  PYTHONPATH=src python -m benchmarks.obs [--csv]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+from benchmarks.tiers import _primed_stats, _sharp_task_profile, tiered_testbed
+from benchmarks.topology import BENCH_PROFILE, build_requests
+from repro.core.policies import ClusterView, PlacementController, get_policy
+from repro.serving.cluster import EdgeCluster
+from repro.serving.faults import FaultSchedule
+from repro.serving.net import CommCostModel
+
+# WAN-link brownout window (seconds, sim clock): opens inside the
+# serving span of the request stream, restored before the tail drains
+BROWNOUT = dict(time=8.0, src=0, dst=2, factor=0.3, restore_at=30.0)
+
+# every span kind the scenario must produce at least once (the bench is
+# worthless if a source silently stops emitting)
+EXPECTED_KINDS = (
+    "QUEUE_WAIT",
+    "PREFILL_CHUNK",
+    "DECODE_ROUND",
+    "PLACEMENT_REVIEW",
+    "TRANSFER_TASK",
+    "FAULT",
+    "PREFETCH",
+)
+
+
+def run_leg(n_requests: int, seed: int = 0) -> dict:
+    """One traced pass over the faulted + migrating + tiered scenario;
+    returns the obs metrics plus the exported trace bytes."""
+    pf = BENCH_PROFILE
+    topo = tiered_testbed()
+    cm = CommCostModel(
+        topology=topo,
+        expert_bytes=pf.expert_bytes,
+        activation_bytes=pf.hidden_bytes_per_token,
+        tokens_per_horizon=1e5,
+    )
+    ctrl = PlacementController(
+        policy=get_policy("dancemoe"),
+        cost=cm,
+        cluster=ClusterView.from_topology(topo, pf, tiered=True),
+        interval=20.0,
+        topology=topo,
+        stats=_primed_stats(topo, pf, seed),
+    )
+    ec = EdgeCluster(
+        "sim",
+        topology=topo,
+        profile=pf,
+        controller=ctrl,
+        seed=seed,
+        fault_schedule=FaultSchedule.link_brownout(**BROWNOUT),
+        trace=True,
+    )
+    for t in range(2 * topo.n):
+        name = f"task{t}"
+        ec.backend.workload.tasks[name] = _sharp_task_profile(name, t, pf, seed)
+    for r in build_requests(n_requests, 3, seed=seed):
+        ec.submit(r)
+    handles = ec.run()
+    # the export's exact byte form: what Tracer.export writes to disk
+    trace = json.dumps(ec.tracer.to_trace_doc(), sort_keys=True, indent=1) + "\n"
+    return {
+        "obs": ec.metrics()["obs"],
+        "trace": trace,
+        "completed": sum(1 for h in handles if h.done),
+        "n_requests": len(handles),
+        "cluster_events": len(ec.events),
+    }
+
+
+def measure(n_requests: int, seed: int = 0) -> dict:
+    """The traced run and its replay (byte-identity check)."""
+    first = run_leg(n_requests, seed)
+    replay = run_leg(n_requests, seed)
+    return {
+        "first": first,
+        "replay_identical": int(first["trace"] == replay["trace"]),
+    }
+
+
+def obs_section(results: dict) -> dict:
+    """The ``metrics.obs`` section (since ``bench-serving/v8``)."""
+    out = dict(results["first"]["obs"])
+    out["replay_identical"] = results["replay_identical"]
+    return out
+
+
+def smoke(n_requests: int = 40, trace_out: str | None = None) -> dict:
+    """Small CI-gate measurement: the ``metrics.obs`` document section,
+    with the tracing acceptance gates asserted. ``trace_out`` writes the
+    exported trace (the artifact the CI job validates and uploads)."""
+    results = measure(n_requests)
+    first = results["first"]
+    obs = first["obs"]
+    assert first["completed"] == first["n_requests"], (
+        f"traced run incomplete ({first['completed']}/{first['n_requests']})"
+    )
+    assert obs["dropped_events"] == 0, (
+        f"tracer dropped {obs['dropped_events']} events — raise max_events"
+    )
+    for kind in EXPECTED_KINDS:
+        assert obs["span_counts"].get(kind, 0) >= 1, (
+            f"no {kind} spans recorded — an emission source went silent"
+        )
+    assert results["replay_identical"] == 1, (
+        "rerunning the faulted + migrating + tiered scenario must export "
+        "a byte-identical trace"
+    )
+    if trace_out is not None:
+        with open(trace_out, "w") as f:
+            f.write(first["trace"])
+    return obs_section(results)
+
+
+def main(csv: bool = False):
+    n_requests = 60
+    results = measure(n_requests)
+    first = results["first"]
+    obs = first["obs"]
+    print(
+        f"# unified tracing: {obs['events']} spans over "
+        f"{first['n_requests']} requests "
+        f"(clock={obs['clock']}, dropped={obs['dropped_events']}, "
+        f"overhead={obs['overhead_ms']:.2f}ms wall)"
+    )
+    print(f"{'span kind':22s} {'count':>7s}")
+    for kind, n in sorted(obs["span_counts"].items()):
+        print(f"{kind:22s} {n:7d}")
+    print(
+        f"cluster events (seq-stamped): {first['cluster_events']}, "
+        f"replay byte-identical: {bool(results['replay_identical'])}"
+    )
+    if csv:
+        for kind, n in sorted(obs["span_counts"].items()):
+            print(f"obs,spans_{kind},{n}")
+        print(f"obs,replay_identical,{results['replay_identical']}")
+    assert results["replay_identical"] == 1
+
+
+if __name__ == "__main__":
+    main(csv="--csv" in sys.argv)

@@ -5,12 +5,16 @@ Default mode runs one function per paper table/figure and prints
 
 ``--smoke`` is the CI gate (``bench-smoke`` job): a tiny CPU serving
 benchmark (<5 min) whose results are written — schema-validated — to
-``BENCH_serving.json`` (``--out`` overrides the path). The process exits
-non-zero when the document is schema-invalid or empty, so perf numbers
-land in every CI run or the gate fails loudly.
+``BENCH_serving.json`` (``--out`` overrides the path), alongside the
+exported span trace of the observability leg (``--trace-out``, default
+``BENCH_trace.json``; Chrome-trace JSON, schema-checked by
+``validate_trace_doc``). The process exits non-zero when either
+document is schema-invalid or empty, so perf numbers land in every CI
+run or the gate fails loudly.
 
   PYTHONPATH=src python -m benchmarks.run [--csv]
   PYTHONPATH=src python -m benchmarks.run --smoke [--out BENCH_serving.json]
+      [--trace-out BENCH_trace.json]
 
 Field-by-field documentation of every ``metrics.*`` section in the
 emitted document lives in docs/benchmarks.md.
@@ -23,13 +27,14 @@ import sys
 import time
 
 
-def smoke(out_path: str) -> None:
+def smoke(out_path: str, trace_path: str = "BENCH_trace.json") -> None:
     import benchmarks.failover as failover
+    import benchmarks.obs as obs
     import benchmarks.prefix_cache as prefix_cache
     import benchmarks.tiers as tiers
     import benchmarks.topology as topology
     import benchmarks.workload as workload
-    from benchmarks.schema import validate_bench_serving
+    from benchmarks.schema import validate_bench_serving, validate_trace_doc
 
     t0 = time.time()
     doc = prefix_cache.smoke()
@@ -41,8 +46,12 @@ def smoke(out_path: str) -> None:
     #   host-RAM expert tiers, prefetch vs frozen residency
     doc["metrics"]["workload"] = workload.smoke()  # v7: seeded flash-crowd
     #   stream, SLO-aware scheduling vs blind FIFO goodput on it
+    doc["metrics"]["obs"] = obs.smoke(trace_out=trace_path)  # v8: traced
+    #   faults+migration+tiers run, byte-identical replay, trace artifact
     doc["elapsed_s"] = round(time.time() - t0, 2)
     validate_bench_serving(doc)  # raises (non-zero exit) on breakage
+    with open(trace_path) as f:
+        validate_trace_doc(json.load(f))  # the uploaded trace artifact
     with open(out_path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
         f.write("\n")
@@ -108,6 +117,15 @@ def smoke(out_path: str) -> None:
         f"flash_migrations={int(w['flash_migrations'])} "
         f"replay_identical={int(w['replay_identical'])}"
     )
+    o = m["obs"]
+    print(
+        f"obs[v8]: {int(o['events'])} spans over "
+        f"{len(o['span_counts'])} kinds "
+        f"dropped={int(o['dropped_events'])} "
+        f"overhead={o['overhead_ms']:.1f}ms "
+        f"replay_identical={int(o['replay_identical'])} "
+        f"trace={trace_path}"
+    )
 
 
 def main() -> None:
@@ -116,16 +134,26 @@ def main() -> None:
         return
     if "--smoke" in sys.argv:
         out = "BENCH_serving.json"
+        trace = "BENCH_trace.json"
+        usage = (
+            "usage: benchmarks.run --smoke [--out PATH] [--trace-out PATH]"
+        )
         if "--out" in sys.argv:
             i = sys.argv.index("--out")
             if i + 1 >= len(sys.argv):
-                sys.exit("usage: benchmarks.run --smoke [--out PATH]")
+                sys.exit(usage)
             out = sys.argv[i + 1]
-        smoke(out)
+        if "--trace-out" in sys.argv:
+            i = sys.argv.index("--trace-out")
+            if i + 1 >= len(sys.argv):
+                sys.exit(usage)
+            trace = sys.argv[i + 1]
+        smoke(out, trace)
         return
 
     import benchmarks.failover as failover
     import benchmarks.fig5 as fig5
+    import benchmarks.obs as obs
     import benchmarks.fig6 as fig6
     import benchmarks.fig7 as fig7
     import benchmarks.fig8 as fig8
@@ -153,6 +181,7 @@ def main() -> None:
         ("Failover  (mid-run crash, recovery vs baseline)", failover.main),
         ("Tiers     (oversized model, host-RAM expert tiers)", tiers.main),
         ("Workload  (flash-crowd stream, SLO goodput)", workload.main),
+        ("Obs       (unified tracing, byte-identical replay)", obs.main),
     ]:
         t0 = time.time()
         print(f"\n##### {name}")

@@ -9,7 +9,7 @@ runner)."""
 
 from __future__ import annotations
 
-SCHEMA_NAME = "bench-serving/v7"
+SCHEMA_NAME = "bench-serving/v8"
 
 # metric key -> ("scalar" | "pair" | "stats") shape requirement.
 # v2 extended v1 (same keys, same shapes) with the EdgeCluster section;
@@ -18,8 +18,10 @@ SCHEMA_NAME = "bench-serving/v7"
 # (``metrics.perf``); v5 adds the fault-injection/failover section
 # (``metrics.faults``); v6 adds the expert tier hierarchy section
 # (``metrics.tiers``); v7 adds the streaming-workload / SLO-scheduling
-# section (``metrics.workload``) — extend, don't fork, when adding
-# serving metrics.
+# section (``metrics.workload``); v8 adds the unified-observability
+# section (``metrics.obs``) and the exported-trace artifact contract
+# (``validate_trace_doc``) — extend, don't fork, when adding serving
+# metrics.
 # Field-by-field documentation: docs/benchmarks.md.
 _REQUIRED_METRICS = {
     "admitted_concurrency": "pair",  # {"cache": n, "nocache": n}
@@ -129,6 +131,20 @@ _REQUIRED_WORKLOAD = {
     "ttft_s": "p50p99",  # modeled time-to-first-token, SLO-aware leg
     "itl_s": "p50p99",  # modeled inter-token latency
     "replay_identical": "scalar",  # 1 iff the rerun was bit-identical
+}
+
+
+# v8: metrics.obs — the unified-tracing section produced by
+# ``benchmarks.obs`` (one sim run stacking faults + staged migration +
+# tier prefetch, traced, exported and byte-compared against its rerun).
+# ``clock`` ("ticks" | "seconds") and ``span_counts`` (non-empty
+# {kind: count} object) are validated separately.
+_REQUIRED_OBS = {
+    "enabled": "scalar",  # 1 iff the tracer recorded (gated == 1)
+    "events": "scalar",  # spans retained (gated >= 1)
+    "dropped_events": "scalar",  # spans past max_events (gated == 0)
+    "overhead_ms": "scalar",  # wall cost of recording (replay-exempt)
+    "replay_identical": "scalar",  # 1 iff trace reruns byte-identical
 }
 
 
@@ -303,6 +319,94 @@ def validate_bench_serving(doc) -> dict:
         raise BenchSchemaError(
             "metrics.workload: SLO-aware goodput did not beat the FIFO "
             "baseline — the scheduling gate regressed"
+        )
+
+    # -- v8: the unified-observability / tracing section ------------------
+    obs = metrics.get("obs")
+    if not isinstance(obs, dict) or not obs:
+        raise BenchSchemaError("metrics.obs: missing or empty (v8)")
+    for key in _REQUIRED_OBS:
+        if key not in obs:
+            raise BenchSchemaError(f"metrics.obs.{key}: missing")
+        _num(obs, "metrics.obs", key)
+    if obs.get("clock") not in ("ticks", "seconds"):
+        raise BenchSchemaError(
+            f"metrics.obs.clock: expected 'ticks' or 'seconds', got "
+            f"{obs.get('clock')!r}"
+        )
+    counts = obs.get("span_counts")
+    if not isinstance(counts, dict) or not counts:
+        raise BenchSchemaError("metrics.obs.span_counts: missing or empty")
+    for kind, n in counts.items():
+        if not isinstance(n, int) or isinstance(n, bool) or n < 1:
+            raise BenchSchemaError(
+                f"metrics.obs.span_counts.{kind}: invalid count {n!r}"
+            )
+    if obs["enabled"] != 1 or obs["events"] < 1:
+        raise BenchSchemaError(
+            "metrics.obs: empty run (the tracer recorded nothing)"
+        )
+    if obs["dropped_events"] != 0:
+        raise BenchSchemaError(
+            f"metrics.obs.dropped_events: {obs['dropped_events']} spans "
+            "were dropped at the max_events cap"
+        )
+    if obs["replay_identical"] != 1:
+        raise BenchSchemaError(
+            "metrics.obs.replay_identical: the traced rerun did not "
+            "export byte-identical JSON"
+        )
+    return doc
+
+
+def validate_trace_doc(doc) -> dict:
+    """Validate an exported Chrome-trace document (the ``bench-smoke``
+    trace artifact, written by ``Tracer.export``); returns it on
+    success, raises ``BenchSchemaError``. Deliberately self-contained —
+    no ``repro`` import, so the CI gate stays dependency-free."""
+    if not isinstance(doc, dict) or not doc:
+        raise BenchSchemaError("trace: document must be a non-empty object")
+    other = doc.get("otherData")
+    if not isinstance(other, dict):
+        raise BenchSchemaError("trace.otherData: missing")
+    if other.get("clock") not in ("ticks", "seconds"):
+        raise BenchSchemaError(
+            f"trace.otherData.clock: invalid {other.get('clock')!r}"
+        )
+    if other.get("dropped") != 0:
+        raise BenchSchemaError(
+            f"trace.otherData.dropped: {other.get('dropped')!r} events "
+            "were dropped"
+        )
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        raise BenchSchemaError("trace.traceEvents: missing or empty")
+    n_spans = 0
+    for i, e in enumerate(events):
+        if not isinstance(e, dict) or e.get("ph") not in ("X", "M"):
+            raise BenchSchemaError(f"trace.traceEvents[{i}]: invalid {e!r}")
+        if e["ph"] == "M":
+            continue
+        n_spans += 1
+        for key in ("name", "cat", "pid", "tid", "ts", "dur", "args"):
+            if key not in e:
+                raise BenchSchemaError(f"trace.traceEvents[{i}].{key}: missing")
+        for key in ("ts", "dur"):
+            v = e[key]
+            if not isinstance(v, (int, float)) or isinstance(v, bool) or v < 0:
+                raise BenchSchemaError(
+                    f"trace.traceEvents[{i}].{key}: invalid {v!r}"
+                )
+        if not isinstance(e["args"], dict) or "seq" not in e["args"]:
+            raise BenchSchemaError(
+                f"trace.traceEvents[{i}].args: missing the seq stamp"
+            )
+    if n_spans < 1:
+        raise BenchSchemaError("trace: no complete ('X') events")
+    if other.get("spans") != n_spans:
+        raise BenchSchemaError(
+            f"trace.otherData.spans: {other.get('spans')!r} != {n_spans} "
+            "counted events"
         )
     return doc
 

@@ -17,6 +17,7 @@ façade, against BOTH execution backends, from the *same* typed
 Run:  PYTHONPATH=src python examples/serve_edge.py
 """
 import os
+import tempfile
 
 # 3 placeholder devices: one EP rank per edge server
 # (standalone script — safe to set before jax initialises)
@@ -126,7 +127,8 @@ def main():
     # no longer needs to divide evenly over the 3-device mesh
     cluster = EdgeCluster("runtime", engine=engine, n_servers=N_SERVERS,
                           controller=controller, topology=topo,
-                          runtime_opts=dict(max_slots=4, prefix_cache=False))
+                          runtime_opts=dict(max_slots=4, prefix_cache=False),
+                          trace=True)      # span tracing on the tick clock
     handles = [cluster.submit(r) for r in requests]
     cluster.run()
     counts = engine.stats.counts.copy()          # [n_groups, n_ep, E]
@@ -148,6 +150,18 @@ def main():
     print(f"  cross-server dispatch: {net['cross_server_bytes']:.3g} bytes "
           f"over {net['rounds']} metered rounds")
     assert net["cross_server_bytes"] > 0
+
+    # unified tracing: queue/prefill/decode spans + the control plane's
+    # PLACEMENT_REVIEW decisions and per-link TRANSFER_TASKs, exported as
+    # Chrome-trace JSON (load at https://ui.perfetto.dev)
+    obs = cluster.metrics()["obs"]
+    assert obs["dropped_events"] == 0
+    assert obs["span_counts"].get("PLACEMENT_REVIEW", 0) >= 1
+    assert obs["span_counts"].get("TRANSFER_TASK", 0) >= 1
+    tpath = os.path.join(tempfile.gettempdir(), "serve_edge_trace.json")
+    cluster.export_trace(tpath)
+    print(f"  trace: {obs['events']} spans "
+          f"({', '.join(sorted(obs['span_counts']))}) -> {tpath}")
 
     # 1) outputs are token-identical to sequential generate() per request
     #    (one batched reference call — rows are independent)
@@ -174,12 +188,15 @@ def main():
         cluster=ClusterView.from_topology(topo, profile), interval=10.0,
         topology=topo)
     sim = EdgeCluster("sim", topology=topo, profile=profile,
-                      controller=sim_ctrl, seed=0)
+                      controller=sim_ctrl, seed=0,
+                      trace=True)          # same tracer, seconds clock
     sim_handles = [sim.submit(r) for r in requests]
     sim.run()
     show(sim.metrics())
     assert all(h.done for h in sim_handles)
     assert all(h.metrics["latency"] > 0 for h in sim_handles)
+    sim_obs = sim.metrics()["obs"]
+    assert sim_obs["clock"] == "seconds" and sim_obs["dropped_events"] == 0
 
     # one contract, two worlds: identical metric surface — including the
     # topology/net section both backends derive from the one Topology

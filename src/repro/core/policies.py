@@ -275,9 +275,26 @@ class PlacementController:
     tiers: "object | None" = None            # serving.tiers.TierManager —
     #                                          rebinds tier residency on
     #                                          every plan switch
+    tracer: "object | None" = None           # serving.obs.Tracer — every
+    #                                          events record doubles as a
+    #                                          PLACEMENT_REVIEW instant
+    #                                          (full Eq.-4 diag) and staged
+    #                                          transfers as TRANSFER_TASK
+    #                                          spans; duck-typed so core
+    #                                          stays import-free of serving
 
     def __post_init__(self):
         self.policy = as_policy(self.policy)
+
+    def _record(self, diag: dict) -> None:
+        """The one decision-record point: append to ``events`` and mirror
+        the full diag (reason, adopted, Eq.-4 cost numbers, staging
+        payload) as a control-plane ``PLACEMENT_REVIEW`` trace instant."""
+        self.events.append(diag)
+        if self.tracer is not None and self.tracer.enabled:
+            self.tracer.instant("PLACEMENT_REVIEW", diag.get("time", 0.0),
+                                **{k: v for k, v in diag.items()
+                                   if k != "time"})
 
     def _set_plan(self, plan: PlacementPlan) -> None:
         """The one plan-switch point: every adoption path (instant,
@@ -380,6 +397,7 @@ class PlacementController:
             self._set_plan(candidate)
             return None
         seconds = _net.schedule_transfers(tasks, self.topology)
+        _net.trace_transfers(self.tracer, tasks, now, self.clock_rate)
         staged = _net.StagedMigration(
             plan=candidate, tasks=tasks, started=now,
             eta=now + seconds / self.clock_rate, seconds=seconds)
@@ -427,7 +445,7 @@ class PlacementController:
                     diag["transfer_bytes"] = staged.nbytes
             else:
                 self._set_plan(candidate)
-        self.events.append(diag)
+        self._record(diag)
         return PlacementDecision(self.plan, adopt, diag,
                                  staged=staged is not None)
 
@@ -458,7 +476,7 @@ class PlacementController:
         if p is None:
             return None
         self.pending = None
-        self.events.append({
+        self._record({
             "reason": "migration-aborted", "time": now, "adopted": False,
             "abort_cause": cause, "staged_at": p.started, "eta": p.eta,
             "transfers": len(p.tasks), "transfer_seconds": p.seconds,
@@ -490,7 +508,7 @@ class PlacementController:
             # experts stay unservable until capacity returns
             diag = {"reason": cause, "time": now, "adopted": False,
                     "fault_review": True, "infeasible": str(e)}
-            self.events.append(diag)
+            self._record(diag)
             return PlacementDecision(self.plan, False, diag, staged=False)
         diag = {"reason": cause, "time": now, "adopted": True,
                 "fault_review": True}
@@ -505,7 +523,7 @@ class PlacementController:
                 diag["transfer_bytes"] = staged.nbytes
         else:
             self._set_plan(candidate)
-        self.events.append(diag)
+        self._record(diag)
         return PlacementDecision(self.plan, True, diag,
                                  staged=staged is not None)
 
@@ -520,7 +538,7 @@ class PlacementController:
             return None
         self.pending = None
         self._set_plan(p.plan)
-        self.events.append({
+        self._record({
             "reason": "migration-complete", "time": now, "adopted": False,
             "staged_at": p.started, "eta": p.eta,
             "transfers": len(p.tasks), "transfer_seconds": p.seconds,

@@ -29,6 +29,7 @@ from repro.models import moe as M
 from repro.models import transformer as tr
 from repro.serving.api import Request
 from repro.serving.engine import ServingEngine
+from repro.serving.obs import Tracer
 from repro.serving.runtime import ServingRuntime
 
 
@@ -63,6 +64,10 @@ def main():
     ap.add_argument("--policy", default="dancemoe", choices=list_policies())
     ap.add_argument("--review-rounds", type=int, default=16,
                     help="placement review period in decode rounds")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record per-request/system spans and export the "
+                    "Chrome-trace JSON here (open at ui.perfetto.dev; "
+                    "inspect with tools/trace_view.py)")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
     if args.shared_prefix and args.shared_prefix >= args.prompt:
@@ -107,6 +112,9 @@ def main():
                            max_len=args.prompt + args.steps + 8)
     if args.warmup and args.dense_pool:
         ap.error("--warmup needs the paged pool (drop --dense-pool)")
+    tracer = Tracer(clock="ticks") if args.trace_out else None
+    if controller is not None and tracer is not None:
+        controller.tracer = tracer          # PLACEMENT_REVIEW decisions
     runtime = ServingRuntime(engine, max_slots=args.slots,
                              controller=controller,
                              paged=False if args.dense_pool else None,
@@ -114,7 +122,8 @@ def main():
                              n_blocks=args.blocks,
                              prefix_cache=args.prefix_cache,
                              warmup=args.warmup,
-                             warmup_origins="untagged")
+                             warmup_origins="untagged",
+                             tracer=tracer)
     if args.warmup:
         print(f"warmup: {runtime.executables_compiled} executables in "
               f"{runtime.warmup_seconds:.1f}s")
@@ -154,6 +163,12 @@ def main():
               f"decode_round_ms p50={p['decode_round_ms']['p50']:.2f} "
               f"p99={p['decode_round_ms']['p99']:.2f} "
               f"ttft_ms p50={p['ttft_ms']['p50']:.2f}")
+    if tracer is not None:
+        obs = tracer.summary()
+        tracer.export(args.trace_out)
+        print(f"trace: {obs['events']} spans "
+              f"(dropped={obs['dropped_events']}, "
+              f"overhead={obs['overhead_ms']:.2f}ms) -> {args.trace_out}")
 
 
 if __name__ == "__main__":

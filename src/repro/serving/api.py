@@ -85,11 +85,34 @@ class Event:
     ``time`` is in the emitting backend's clock (scheduler ticks for the
     runtime backend, seconds for the simulator); ``data`` is the typed
     payload (token id, deferral depth, the FINISHED metrics dict, ...).
+    ``seq`` is the emitting backend's monotonic emission index — the
+    tie-breaker that makes merged event streams (``EdgeCluster.events``
+    interleaves per-request, migration and fault events) a *stable total
+    order*: sort by ``(time, seq)``, never by insertion. -1 marks events
+    from legacy emitters that predate sequencing.
     """
     type: str
     rid: int
     time: float
     data: dict = dataclasses.field(default_factory=dict)
+    seq: int = -1
+
+
+class SeqCounter:
+    """Shared monotonic event-sequence source. One counter per backend
+    (``EdgeCluster`` threads a single instance through its servers and
+    its own fault/migration emitters), so equal-time events still have
+    one deterministic order on rerun."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0
+
+    def __call__(self) -> int:
+        v = self.value
+        self.value += 1
+        return v
 
 
 @dataclasses.dataclass
@@ -165,10 +188,12 @@ class RequestHandle:
     FINISHED payload), or call :meth:`result` for the generated tokens.
     """
 
-    def __init__(self, rid: int, request: Request, clock: str = "ticks"):
+    def __init__(self, rid: int, request: Request, clock: str = "ticks",
+                 seq: "SeqCounter | None" = None):
         self.rid = rid
         self.request = request
         self.clock = clock                 # "ticks" | "seconds"
+        self._seqc = seq                   # shared backend event sequencer
         self.events: list[Event] = []
         self.server: int | None = None     # server the request was routed to
         self.submitted_at: float | None = None
@@ -179,7 +204,8 @@ class RequestHandle:
 
     # -- backend side ------------------------------------------------------
     def _emit(self, type_: str, time: float, **data) -> Event:
-        ev = Event(type_, self.rid, time, data)
+        ev = Event(type_, self.rid, time, data,
+                   self._seqc() if self._seqc is not None else -1)
         self.events.append(ev)
         if type_ == EventType.ADMITTED:
             self.admitted_at = time

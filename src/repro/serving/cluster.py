@@ -31,10 +31,11 @@ import heapq
 import numpy as np
 
 from repro.serving.api import (Event, EventType, Request, RequestHandle,
-                               as_router)
+                               SeqCounter, as_router)
 from repro.serving.faults import (FaultSchedule, SERVER_DOWN, SERVER_JOINED,
                                   LINK_DEGRADED, apply_fault)
 from repro.serving.net import Topology, TrafficMeter
+from repro.serving.obs import NULL_TRACER, Registry, SpanKind, as_tracer
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,7 +163,7 @@ class _RuntimeBackend:
                  topology: Topology | None = None,
                  fault_schedule: FaultSchedule | None = None,
                  failover: bool = True, prefetch: bool = True,
-                 slo_aware: bool = False):
+                 slo_aware: bool = False, tracer=None, seq=None):
         from repro.serving.runtime import ServingRuntime   # lazy: keeps the
         #   sim world (simulator.py imports this module) free of jax
         self.engine = engine
@@ -171,6 +172,11 @@ class _RuntimeBackend:
         self.controller = controller
         self.shared = shared_runtime
         self.topology = topology
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.seqc = seq if seq is not None else SeqCounter()
+        if controller is not None and getattr(controller, "tracer",
+                                              None) is None:
+            controller.tracer = self.tracer
         n_ep = engine.rt.ep_spec.n_ep if engine.rt.ep_spec is not None else 1
         # per-origin stats attribution needs one EP rank per server; when
         # the engine cannot represent every origin, serve untagged (the
@@ -191,7 +197,8 @@ class _RuntimeBackend:
             eb = getattr(controller.cost, "expert_bytes", None)
             self.tiers = TierManager(
                 topology, float(eb) if eb else self._expert_bytes(),
-                prefetch=prefetch, clock_rate=controller.clock_rate)
+                prefetch=prefetch, clock_rate=controller.clock_rate,
+                tracer=self.tracer)
             controller.tiers = self.tiers
             if controller.plan is not None:
                 self.tiers.bind(controller.plan)   # pre-set plans (e.g.
@@ -223,8 +230,11 @@ class _RuntimeBackend:
             budgets = topology.kv_block_budgets(bs * pos_bytes)
             for s, o in enumerate(opts):
                 o["n_blocks"] = 1 + int(budgets[s])
-        self.runtimes = [ServingRuntime(engine, controller=None, **o)
-                         for o in opts]
+        self.runtimes = [
+            ServingRuntime(engine, controller=None, tracer=self.tracer,
+                           seq_counter=self.seqc,
+                           tracer_server=(-1 if shared_runtime else s), **o)
+            for s, o in enumerate(opts)]
         self.rounds = 0
         self._rr = 0                 # round-robin cursor (shared mode)
         self.migrations: list = []
@@ -370,7 +380,7 @@ class _RuntimeBackend:
                 # promotions change which experts are GPU-resident: refresh
                 # the engine's slot tables under the new tier priority
                 ctrl._apply_plan(self.engine)
-            tm.observe(self.engine.stats.counts)
+            tm.observe(self.engine.stats.counts, now=self.rounds)
             tm.prefetch_step(self.rounds)
         if self.meter is not None and res_before is not None:
             if res_before.shape == self.engine.stats.counts.shape:
@@ -403,7 +413,7 @@ class _RuntimeBackend:
         """Consume one due ``FaultEvent``: flip the shared link state,
         evict + re-route (or drop) the victims of a crash, and trigger
         the controller's fault review around the capacity change."""
-        apply_fault(ev, self.topology)
+        apply_fault(ev, self.topology, tracer=self.tracer, now=now)
         self.faults_injected += 1
         ctrl = self.controller
         data = ev.payload()
@@ -436,7 +446,7 @@ class _RuntimeBackend:
                 if dec.applied:
                     self.migrations.append(dec.diag)
         self.fault_events.append(
-            Event(getattr(EventType, ev.kind), -1, now, data))
+            Event(getattr(EventType, ev.kind), -1, now, data, self.seqc()))
 
     def _fail_server(self, server: int, now: float) -> dict:
         """Evict every request the crashed server was serving. With
@@ -481,6 +491,13 @@ class _RuntimeBackend:
             h.request = req            # keep the caller's origin for metrics
             reassigned.append(new_server)
             recovering.append(h)
+            if self.tracer.enabled:
+                # h.rid is the fresh re-admit rid the victim's remaining
+                # spans will carry on the surviving server
+                self.tracer.instant(SpanKind.FAILOVER_REPREFILL, now,
+                                    rid=h.rid, server=new_server,
+                                    from_server=server,
+                                    tokens_lost=done_tokens)
         self.tokens_lost += lost
         if recovering:
             self._recovering.append((now, recovering))
@@ -583,13 +600,18 @@ class _SimBackend:
                  ratio_bucket: float, topology: Topology | None = None,
                  fault_schedule: FaultSchedule | None = None,
                  failover: bool = True, prefetch: bool = True,
-                 slo_aware: bool = False):
+                 slo_aware: bool = False, tracer=None, seq=None):
         from repro.data.traces import Workload     # numpy-only
         from repro.serving.simulator import EdgeSimulator   # lazy: this
         #   module is imported by simulator.py (no import cycle at load)
         self.profile = profile
         self.seed = seed
         self.topology = topology
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.seqc = seq if seq is not None else SeqCounter()
+        if controller is not None and getattr(controller, "tracer",
+                                              None) is None:
+            controller.tracer = self.tracer
         self.workload = Workload(requests=[], tasks=dict(tasks or {}),
                                  duration=0.0)
         self.sim = EdgeSimulator(spec, profile, self.workload, plan=plan,
@@ -605,7 +627,8 @@ class _SimBackend:
             eb = getattr(controller.cost, "expert_bytes", None)
             self.tiers = TierManager(
                 topology, float(eb) if eb else profile.expert_bytes,
-                prefetch=prefetch, clock_rate=1.0)   # seconds clock
+                prefetch=prefetch, clock_rate=1.0,   # seconds clock
+                tracer=self.tracer)
             controller.tiers = self.tiers
             if controller.plan is not None:
                 self.tiers.bind(controller.plan)
@@ -655,7 +678,8 @@ class _SimBackend:
                              else -1,
                              task=task, prompt_tokens=len(req.prompt),
                              decode_tokens=req.max_new_tokens)
-        handle = RequestHandle(self._seq, req, clock="seconds")
+        handle = RequestHandle(self._seq, req, clock="seconds",
+                               seq=self.seqc)
         handle.submitted_at = arrival
         heapq.heappush(self._pending, (arrival, self._seq, sim_req, handle))
         self._seq += 1
@@ -728,6 +752,13 @@ class _SimBackend:
                 # no live server can even *start* by the deadline —
                 # admitting would burn timeline another request could use
                 self.sheds += 1
+                if self.tracer.enabled:
+                    self.tracer.span(SpanKind.QUEUE_WAIT, sub, arrival,
+                                     rid=handle.rid, shed=True)
+                    self.tracer.instant(
+                        SpanKind.SHED, arrival, rid=handle.rid,
+                        deadline=deadline,
+                        earliest_start=float(loads.min()))
                 handle._emit(EventType.SHED, arrival, deadline=deadline,
                              earliest_start=float(loads.min()))
                 handle._emit(
@@ -742,6 +773,21 @@ class _SimBackend:
                 sim_req = dataclasses.replace(sim_req, server=n)
         rec = self.sim.serve_request(sim_req)
         handle._emit(EventType.ADMITTED, rec["start"], server=rec["server"])
+        if self.tracer.enabled:
+            # phase split mirroring workload._ttft_itl: the modeled
+            # latency spreads uniformly over prompt + decode tokens, so
+            # prefill covers the first prompt_tokens shares of service
+            rid, srv = handle.rid, int(rec["server"])
+            T = sim_req.prompt_tokens
+            toks = sim_req.decode_tokens
+            itl = max(rec["done"] - rec["start"], 0.0) / max(T + toks, 1)
+            split = rec["start"] + itl * T
+            self.tracer.span(SpanKind.QUEUE_WAIT, sub, rec["start"],
+                             rid=rid, server=srv)
+            self.tracer.span(SpanKind.PREFILL_CHUNK, rec["start"], split,
+                             rid=rid, server=srv, prompt_tokens=T)
+            self.tracer.span(SpanKind.DECODE_ROUND, split, rec["done"],
+                             rid=rid, server=srv, tokens=toks)
         latency = rec["done"] - sub
         handle._emit(
             EventType.FINISHED, rec["done"],
@@ -762,7 +808,7 @@ class _SimBackend:
         if self.tiers is not None:
             done = rec["done"]
             self.tiers.poll(done)
-            self.tiers.observe(self.sim._dispatch_counts)
+            self.tiers.observe(self.sim._dispatch_counts, now=done)
             self.tiers.prefetch_step(done)
         return True
 
@@ -777,7 +823,7 @@ class _SimBackend:
         baseline skips the recovery (and the simulator keeps serving the
         survivors under the pre-crash time model — only the dead server's
         arrivals are lost)."""
-        apply_fault(ev, self.topology)
+        apply_fault(ev, self.topology, tracer=self.tracer, now=now)
         self.faults_injected += 1
         ctrl = self.controller
         data = ev.payload()
@@ -801,7 +847,7 @@ class _SimBackend:
                 self._note_decision(
                     ctrl.fault_review(now, cause="link-degraded"), now)
         self.fault_events.append(
-            Event(getattr(EventType, ev.kind), -1, now, data))
+            Event(getattr(EventType, ev.kind), -1, now, data, self.seqc()))
 
     def _note_decision(self, dec, now: float) -> None:
         if not dec.adopted:
@@ -916,6 +962,21 @@ class EdgeCluster:
                     bind-time split (cold experts keep paying on-demand
                     fetch stalls — the baseline leg of the oversized-model
                     benchmark). Surfaced as ``metrics()["tiers"]``.
+    trace:          unified span tracing (default False — a no-op
+                    ``NULL_TRACER``; the serving hot path pays one
+                    attribute check). ``trace=True`` builds a
+                    ``repro.serving.obs.Tracer`` on the backend's clock
+                    and threads it through every emitter: per-request
+                    spans (QUEUE_WAIT / PREFILL_CHUNK / DECODE_ROUND /
+                    PREFIX_HIT / SHED / FAILOVER_REPREFILL /
+                    COLD_FETCH_STALL), control-plane PLACEMENT_REVIEW
+                    decisions with the full Eq.-4 cost breakdown,
+                    per-link TRANSFER_TASK spans, FAULT consumptions and
+                    tier PREFETCH promotions. Export with
+                    ``export_trace(path)`` (Chrome-trace/Perfetto JSON);
+                    self-accounting in ``metrics()["obs"]``. A
+                    pre-built ``Tracer`` is accepted (its clock must
+                    match the backend).
     """
 
     def __init__(self, backend: str = "runtime", *,
@@ -929,8 +990,17 @@ class EdgeCluster:
                  topology: Topology | None = None,
                  fault_schedule: FaultSchedule | None = None,
                  failover: bool = True, prefetch: bool = True,
-                 slo_aware: bool = False):
+                 slo_aware: bool = False, trace=False):
         router = as_router(router)
+        # one cluster-wide event sequencer + span tracer, threaded through
+        # every emitter (member runtimes / the simulator, the fault
+        # injector, the controller, tiers), so merged streams have a
+        # stable total order and one trace covers the whole cluster.
+        # trace= takes False (default, the zero-overhead NULL_TRACER),
+        # True (build a Tracer on the backend's clock) or a Tracer.
+        self.seq = SeqCounter()
+        self.tracer = as_tracer(
+            trace, "ticks" if backend == "runtime" else "seconds")
         if controller is not None:
             topology = controller.attach_topology(topology)   # one shared
             #   link model between the cluster and the control plane
@@ -957,7 +1027,9 @@ class EdgeCluster:
                                            fault_schedule=fault_schedule,
                                            failover=failover,
                                            prefetch=prefetch,
-                                           slo_aware=slo_aware)
+                                           slo_aware=slo_aware,
+                                           tracer=self.tracer,
+                                           seq=self.seq)
         elif backend == "sim":
             if spec is None and topology is not None:
                 spec = topology.to_cluster_spec()
@@ -977,7 +1049,9 @@ class EdgeCluster:
                                        fault_schedule=fault_schedule,
                                        failover=failover,
                                        prefetch=prefetch,
-                                       slo_aware=slo_aware)
+                                       slo_aware=slo_aware,
+                                       tracer=self.tracer,
+                                       seq=self.seq)
         else:
             raise ValueError(
                 f"unknown backend {backend!r}: expected 'runtime' or 'sim'")
@@ -986,6 +1060,21 @@ class EdgeCluster:
         self.controller = controller
         self.topology = topology
         self.handles: list[RequestHandle] = []
+        # controller decision records are drained into seq-stamped cluster
+        # Events eagerly (each step) so the merged event stream keeps one
+        # stable total order under (time, seq)
+        self._ctrl_cursor = 0
+        self._cluster_events: list[Event] = []
+        # metrics() is assembled from one namespaced registry instead of
+        # hand-merged dicts; a provider returning None drops its section
+        self.registry = Registry()
+        self.registry.register("cluster", self._cluster_metrics)
+        self.registry.register(
+            "perf", getattr(self.backend, "perf", None) or (lambda: None))
+        self.registry.register("net", self._net_metrics)
+        self.registry.register("tiers", self._tiers_metrics)
+        self.registry.register("faults", self._faults_metrics)
+        self.registry.register("obs", self._obs_metrics)
 
     # -- the portable surface ------------------------------------------
     def submit(self, request: Request) -> RequestHandle:
@@ -997,13 +1086,23 @@ class EdgeCluster:
 
     def step(self) -> bool:
         """Advance the cluster one unit of its backend clock."""
-        return self.backend.step()
+        more = self.backend.step()
+        self._drain_ctrl_events()
+        return more
 
     def run(self) -> list[RequestHandle]:
         """Serve until every submitted request finished; returns all
         handles in submission order."""
         self.backend.run()
+        self._drain_ctrl_events()
         return self.handles
+
+    def export_trace(self, path: str) -> str:
+        """Write this run's span trace as Chrome-trace/Perfetto JSON
+        (requires ``trace=``); returns ``path``. Deterministic: two runs
+        of the same inputs (``.copy()`` the fault schedule) produce
+        byte-identical files."""
+        return self.tracer.export(path)
 
     @property
     def migrations(self) -> list:
@@ -1021,22 +1120,41 @@ class EdgeCluster:
         merged with the consumed fault-injection events
         (``SERVER_DOWN``/``SERVER_JOINED``/``LINK_DEGRADED``/
         ``LINK_RESTORED``, payload: the fault fields plus the failover
-        bookkeeping — victims, tokens lost, reassignments)."""
-        out: list[Event] = []
-        ctrl = self.controller
-        for e in (ctrl.events if ctrl is not None else []):
-            if e.get("staged"):
-                out.append(Event(EventType.MIGRATION_STARTED, -1,
-                                 e["time"], dict(e)))
-            elif e.get("reason") == "migration-complete":
-                out.append(Event(EventType.MIGRATION_COMPLETED, -1,
-                                 e["time"], dict(e)))
-            elif e.get("reason") == "migration-aborted":
-                out.append(Event(EventType.MIGRATION_ABORTED, -1,
-                                 e["time"], dict(e)))
+        bookkeeping — victims, tokens lost, reassignments).
+
+        Ordering contract: every event carries the cluster-wide monotonic
+        ``seq`` stamp, and the merged list is sorted by ``(time, seq)`` —
+        a *stable total order* that is identical on a deterministic
+        rerun, even when control-plane and fault events coincide in
+        time."""
+        self._drain_ctrl_events()
+        out = list(self._cluster_events)
         out.extend(getattr(self.backend, "fault_events", []))
-        out.sort(key=lambda e: e.time)     # stable: intra-source order kept
+        out.sort(key=lambda e: (e.time, e.seq))
         return out
+
+    def _drain_ctrl_events(self) -> None:
+        """Convert controller decision records appended since the last
+        drain into cluster ``Event``s, stamping the cluster-wide sequence
+        number. Plain reviews (no adoption) are skipped — they stay
+        visible in ``controller.events`` and the trace."""
+        ctrl = self.controller
+        if ctrl is None:
+            return
+        recs = ctrl.events
+        while self._ctrl_cursor < len(recs):
+            e = recs[self._ctrl_cursor]
+            self._ctrl_cursor += 1
+            if e.get("staged"):
+                t = EventType.MIGRATION_STARTED
+            elif e.get("reason") == "migration-complete":
+                t = EventType.MIGRATION_COMPLETED
+            elif e.get("reason") == "migration-aborted":
+                t = EventType.MIGRATION_ABORTED
+            else:
+                continue
+            self._cluster_events.append(
+                Event(t, -1, e["time"], dict(e), self.seq()))
 
     def _net_metrics(self) -> dict | None:
         """The ``metrics()["net"]`` payload: per-link dispatch bytes from
@@ -1069,12 +1187,29 @@ class EdgeCluster:
         }
         return out
 
-    def metrics(self) -> dict:
-        """Per-server serving metrics in one backend-agnostic shape:
-        submitted/served/finished/redirected request counts, mean latency
-        by origin (backend clock units) and the local-compute ratio. With
-        a topology attached, a ``net`` section adds the per-link dispatch
-        bytes, staged-migration totals and per-server budget caps."""
+    def _tiers_metrics(self) -> dict | None:
+        """``metrics()["tiers"]``: per-server per-tier residency,
+        promotion/demotion counts, prefetch-hit ratio and on-demand-fetch
+        stalls (None without a tier hierarchy)."""
+        tm = getattr(self.backend, "tiers", None)
+        return tm.summary() if tm is not None else None
+
+    def _faults_metrics(self) -> dict | None:
+        """``metrics()["faults"]``: injected/recovered counts, tokens
+        lost and recovery time (None without a fault schedule)."""
+        fm = getattr(self.backend, "faults_metrics", None)
+        return fm() if fm is not None else None
+
+    def _obs_metrics(self) -> dict | None:
+        """``metrics()["obs"]``: tracer self-accounting — span counts by
+        kind, dropped-event count and recording overhead (None when
+        tracing is off)."""
+        return self.tracer.summary() if self.tracer.enabled else None
+
+    def _cluster_metrics(self) -> dict:
+        """The registry's ``cluster`` namespace: the backend-agnostic
+        per-server serving metrics (splatted at the top level of
+        ``metrics()`` for compatibility)."""
         N = self.n_servers
         submitted = np.zeros(N, int)
         served = np.zeros(N, int)
@@ -1118,24 +1253,21 @@ class EdgeCluster:
             "redirected_total": int(redirected.sum()),
             "sheds": int(getattr(self.backend, "sheds", 0)),
         }
-        perf = getattr(self.backend, "perf", None)
-        if perf is not None:
-            # runtime backend only: AOT warmup cost, retrace/stall counters
-            # and decode-round / TTFT wall-time percentiles (the sim
-            # backend models time, so wall-clock perf is meaningless there)
-            out["perf"] = perf()
-        net = self._net_metrics()
-        if net is not None:
-            out["net"] = net
-        tm = getattr(self.backend, "tiers", None)
-        if tm is not None:
-            # per-server per-tier residency, promotion/demotion counts,
-            # prefetch-hit ratio and on-demand-fetch stalls
-            out["tiers"] = tm.summary()
-        fm = getattr(self.backend, "faults_metrics", None)
-        faults = fm() if fm is not None else None
-        if faults is not None:
-            out["faults"] = faults
+        return out
+
+    def metrics(self) -> dict:
+        """Per-server serving metrics in one backend-agnostic shape:
+        submitted/served/finished/redirected request counts, mean latency
+        by origin (backend clock units) and the local-compute ratio.
+        Assembled from ``self.registry`` (one namespaced provider tree —
+        ``cluster``/``perf``/``net``/``tiers``/``faults``/``obs``); the
+        ``cluster`` namespace is splatted at the top level, providers
+        returning None drop their section. With a topology attached the
+        ``net`` section adds per-link dispatch bytes, staged-migration
+        totals and per-server budget caps; ``trace=`` adds ``obs``."""
+        tree = self.registry.collect()
+        out = tree.pop("cluster")
+        out.update(tree)
         return out
 
 

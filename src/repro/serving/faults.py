@@ -165,11 +165,20 @@ class FaultSchedule:
         return FaultSchedule(events)
 
 
-def apply_fault(event: FaultEvent, topology) -> None:
+def apply_fault(event: FaultEvent, topology, tracer=None, now: float = 0.0) -> None:
     """Mutate ``topology.state`` (the shared :class:`LinkState`) to
     reflect ``event``. The placement/failover *response* is the caller's
     job; this only flips the liveness/bandwidth switches every cost
-    primitive reads."""
+    primitive reads. A ``tracer`` (``repro.serving.obs.Tracer``) records
+    the consumption as a ``FAULT`` instant at ``now`` on the caller's
+    clock, carrying the full :meth:`FaultEvent.payload`."""
+    if tracer is not None and tracer.enabled:
+        tracer.instant(
+            "FAULT",
+            now,
+            server=event.server if event.server is not None else -1,
+            fault=event.payload(),
+        )
     state = topology.state
     if event.kind == SERVER_DOWN:
         state.up[event.server] = False

@@ -578,6 +578,24 @@ def schedule_transfers(tasks: list[TransferTask], topology: Topology,
     return finish
 
 
+def trace_transfers(tracer, tasks: list[TransferTask], now: float = 0.0,
+                    clock_rate: float = 1.0) -> None:
+    """Record one ``TRANSFER_TASK`` span per scheduled transfer on
+    ``tracer`` (``repro.serving.obs.Tracer``). Tasks carry start/end in
+    modeled seconds relative to the adoption instant
+    (:func:`schedule_transfers`); ``now`` is the adoption time on the
+    caller's clock and ``clock_rate`` its seconds-per-clock-unit, so the
+    spans land on the owning backend's timeline (each on its destination
+    server's track)."""
+    if tracer is None or not tracer.enabled:
+        return
+    for t in tasks:
+        tracer.span("TRANSFER_TASK", now + t.start / clock_rate,
+                    now + t.end / clock_rate, server=t.dst,
+                    layer=t.layer, expert=t.expert, src=t.src, dst=t.dst,
+                    nbytes=t.nbytes, via=t.via)
+
+
 @dataclasses.dataclass
 class StagedMigration:
     """An adopted-but-not-yet-active plan in flight over the links.

@@ -91,8 +91,9 @@ import numpy as np
 
 from repro.core.policies import PlacementController
 from repro.models import transformer as tr
-from repro.serving.api import EventType, Request, RequestHandle
+from repro.serving.api import EventType, Request, RequestHandle, SeqCounter
 from repro.serving.engine import ServingEngine
+from repro.serving.obs import NULL_TRACER, SpanKind, Tracer
 from repro.serving.prefix_cache import PrefixMatch, RadixPrefixCache
 from repro.serving.sampling import sample_token_host, sample_tokens
 
@@ -352,9 +353,21 @@ class ServingRuntime:
                  chunks_per_tick: int = 1, prefix_cache: bool = True,
                  compact_decode: bool = True, compact_prefill: bool = True,
                  warmup: bool = False, warmup_origins: str = "both",
-                 slo_aware: bool = False):
+                 slo_aware: bool = False, tracer: Tracer | None = None,
+                 seq_counter: SeqCounter | None = None,
+                 tracer_server: int = -1):
         self.engine = engine
         self.max_slots = max_slots
+        # observability: span emission sites guard on tracer.enabled (the
+        # default NULL_TRACER), so an untraced runtime allocates nothing
+        # extra. tracer_server labels this runtime's spans with its
+        # cluster server id (its Perfetto track); -1 = standalone.
+        # seq_counter (cluster-shared) stamps handle events with the
+        # monotonic merge order; standalone runtimes get their own.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.seq = seq_counter if seq_counter is not None else SeqCounter()
+        self.tracer_server = tracer_server
+        self._enq_tick: dict[int, int] = {}   # rid -> enqueue tick (traced)
         # SLO-aware scheduling: admission drains the queue in deadline
         # order (EDF) instead of FIFO, and requests whose deadline cannot
         # be met even under the best case (full prefix hit, one token per
@@ -532,13 +545,21 @@ class ServingRuntime:
         rid = self._next_rid
         self._next_rid += 1
         if handle is None:
-            handle = RequestHandle(rid, request, clock="ticks")
+            handle = RequestHandle(rid, request, clock="ticks",
+                                   seq=self.seq)
             handle.submitted_at = self.ticks
         else:
             handle.rid = rid
             handle.request = request
+            if handle._seqc is None:
+                handle._seqc = self.seq
             if handle.submitted_at is None:
                 handle.submitted_at = self.ticks
+        if self.tracer.enabled:
+            # QUEUE_WAIT opens here; closed (and popped) at admission or
+            # shed. Keyed by the fresh rid, so a failover re-admit's wait
+            # on the new server is its own span.
+            self._enq_tick[rid] = self.ticks
         slo = request.slo
         # the deadline is anchored at the *original* submit tick, so a
         # failover re-admit does not get a fresh SLO budget
@@ -617,6 +638,7 @@ class ServingRuntime:
                 del self.queue[k]
                 self.handles.pop(rid, None)
                 self._t_enqueue.pop(rid, None)
+                self._enq_tick.pop(rid, None)
                 return 0
         for i, s in enumerate(self.slots):
             if s is not None and s.rid == rid:
@@ -626,6 +648,7 @@ class ServingRuntime:
                 self.slots[i] = None
                 self.handles.pop(rid, None)
                 self._t_enqueue.pop(rid, None)
+                self._enq_tick.pop(rid, None)
                 return len(s.tokens)
         return 0
 
@@ -711,6 +734,14 @@ class ServingRuntime:
         FINISHED (``tokens=0, shed=True, slo_met=False``) so the request
         still resolves — consumers block on FINISHED, never on SHED."""
         self.sheds += 1
+        if self.tracer.enabled:
+            self.tracer.span(SpanKind.QUEUE_WAIT,
+                             self._enq_tick.pop(r.rid, self.ticks),
+                             self.ticks, rid=r.rid,
+                             server=self.tracer_server, shed=True)
+            self.tracer.instant(SpanKind.SHED, self.ticks, rid=r.rid,
+                                server=self.tracer_server,
+                                deadline=r.deadline, need=r.max_new_tokens)
         self._emit(r.rid, EventType.SHED, deadline=r.deadline,
                    need=r.max_new_tokens)
         self.finished[r.rid] = np.zeros(0, np.int32)
@@ -801,9 +832,19 @@ class ServingRuntime:
         self.slots[i] = slot
         self._emit(r.rid, EventType.ADMITTED, slot=i, server=r.origin,
                    pages=len(pages))
+        if self.tracer.enabled:
+            self.tracer.span(SpanKind.QUEUE_WAIT,
+                             self._enq_tick.pop(r.rid, self.ticks),
+                             self.ticks, rid=r.rid,
+                             server=self.tracer_server, slot=i)
         if m.tokens:
             self.prefix_hits += 1
             self.prefix_tokens_skipped += m.tokens
+            if self.tracer.enabled:
+                self.tracer.instant(SpanKind.PREFIX_HIT, self.ticks,
+                                    rid=r.rid, server=self.tracer_server,
+                                    tokens_skipped=m.tokens,
+                                    full_hit=m.full_hit)
             self._emit(r.rid, EventType.PREFIX_HIT, tokens_skipped=m.tokens,
                        full_hit=m.full_hit)
         if m.full_hit:
@@ -854,6 +895,12 @@ class ServingRuntime:
                 self.slots[free[j]] = slot
                 self._emit(r.rid, EventType.ADMITTED, slot=free[j],
                            server=r.origin)
+                if self.tracer.enabled:
+                    self.tracer.span(SpanKind.QUEUE_WAIT,
+                                     self._enq_tick.pop(r.rid, self.ticks),
+                                     self.ticks, rid=r.rid,
+                                     server=self.tracer_server,
+                                     slot=free[j])
                 self._append_token(slot, first)
                 self._retire_if_done(free[j])
             admitted += len(group)
@@ -1006,6 +1053,14 @@ class ServingRuntime:
             self.prefill_calls += 1
             self.prefill_rows += B
             self.chunks_executed += len(act)
+            if self.tracer.enabled:
+                # batch-level span from launch-side metadata only (slot
+                # counts, tick number — all host-known): tracing adds no
+                # device reads, so the zero-stall loop stays zero-stall
+                self.tracer.span(SpanKind.PREFILL_CHUNK, self.ticks,
+                                 self.ticks + 1, server=self.tracer_server,
+                                 rows=len(act), batch=B,
+                                 finals=len(finals))
             if self.warmup:
                 if finals:
                     self._copy_async(logits)
@@ -1093,6 +1148,11 @@ class ServingRuntime:
             s.pos += 1
             s.launched += 1
             launched.append((j, i, s.rid))
+        if self.tracer.enabled:
+            # launch-side only (see _prefill_round): no extra host syncs
+            self.tracer.span(SpanKind.DECODE_ROUND, self.ticks,
+                             self.ticks + 1, server=self.tracer_server,
+                             rows=len(act), batch=B)
         org = self._origin_arg(
             self.slots[i].origin if i is not None else None
             for i in row_slots)

@@ -11,6 +11,7 @@ to the engine. New code should construct a ``PlacementController`` plus a
 .Request`` objects — see serving/README.md ("Serving API v1") for the
 migration table. Live adoption is ``PlacementController
 .review_and_apply(now, engine)``, the same code path both consumers use."""
+
 from __future__ import annotations
 
 import dataclasses
@@ -28,9 +29,9 @@ from repro.serving.engine import ServingEngine
 @dataclasses.dataclass
 class GlobalScheduler:
     engine: ServingEngine
-    capacity: np.ndarray                  # per-EP-rank slot budget
+    capacity: np.ndarray  # per-EP-rank slot budget
     cost: CostModel
-    interval_batches: int = 8             # review period (batches ~ minutes)
+    interval_batches: int = 8  # review period (batches ~ minutes)
     placement_fn: Callable | None = None  # freqs -> PlacementPlan
     _batches: int = 0
 
@@ -39,16 +40,23 @@ class GlobalScheduler:
             "GlobalScheduler is deprecated: construct a "
             "core.policies.PlacementController plus a "
             "serving.runtime.ServingRuntime instead (see serving/README.md)",
-            DeprecationWarning, stacklevel=3)  # 3: through the generated
-        spec = self.engine.rt.ep_spec          # dataclass __init__
+            DeprecationWarning,
+            stacklevel=3,
+        )  # 3: through the generated dataclass __init__
+        spec = self.engine.rt.ep_spec
         cluster = ClusterView(
             capacity=np.asarray(self.capacity),
-            slots_cap=np.full(len(self.capacity), spec.slots))
+            slots_cap=np.full(len(self.capacity), spec.slots),
+        )
         self.ctrl = PlacementController(
-            policy=self.placement_fn if self.placement_fn is not None
+            policy=self.placement_fn
+            if self.placement_fn is not None
             else get_policy("dancemoe"),
-            cost=self.cost, cluster=cluster,
-            interval=self.interval_batches, stats=self.engine.stats)
+            cost=self.cost,
+            cluster=cluster,
+            interval=self.interval_batches,
+            stats=self.engine.stats,
+        )
         self.events = self.ctrl.events
 
     @property
@@ -63,7 +71,6 @@ class GlobalScheduler:
         dec = self.ctrl.review(self._batches, force=True)
         dec.diag["batch"] = self._batches
         if dec.adopted:
-            stacked = build_ep_placement(dec.plan,
-                                         self.engine.rt.ep_spec.slots)
+            stacked = build_ep_placement(dec.plan, self.engine.rt.ep_spec.slots)
             self.engine.migrate(stacked)
         return dec.adopted

@@ -35,6 +35,7 @@ identical in both worlds. A static ``PlacementPlan`` or the legacy
 Also implements the paper's Table-I baselines: single-server memory
 offloading ("MoE-Infinity"-style), with and without request redirection.
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -63,6 +64,7 @@ class ArrivalSource:
     arrival order — a streaming generator (e.g.
     ``repro.serving.workload.WorkloadStream``) is consumed lazily, so a
     million-request scenario never exists in memory at once."""
+
     workload: "Workload | object"
 
     def __iter__(self):
@@ -70,8 +72,7 @@ class ArrivalSource:
         return iter(reqs)
 
 
-def slo_admission(server: int, loads: np.ndarray,
-                  deadline: float) -> tuple[str, int]:
+def slo_admission(server: int, loads: np.ndarray, deadline: float) -> tuple[str, int]:
     """The time model's SLO-aware admission rule, shared with the cluster
     sim backend (``EdgeCluster(slo_aware=True)``).
 
@@ -99,7 +100,8 @@ class Timeline:
     """Component 5: per-server occupancy. ``free[n]`` is the time server n
     finishes its current FIFO backlog; remote expert calls add asynchronous
     compute load to their target server."""
-    free: np.ndarray                        # [N]
+
+    free: np.ndarray  # [N]
 
     @staticmethod
     def create(n: int) -> "Timeline":
@@ -125,6 +127,7 @@ class Router:
     ``repro.serving.api`` (``HomeRouter`` / ``LeastLoadedRouter``) so the
     runtime-backed ``EdgeCluster`` and the simulator share them. This shim
     keeps the old ``route(req, timeline)`` signature."""
+
     redirect: bool = False
 
     def __post_init__(self):
@@ -132,7 +135,9 @@ class Router:
             "serving.simulator.Router is deprecated: use "
             "repro.serving.api.HomeRouter / LeastLoadedRouter (or pass "
             "router= to EdgeSimulator / EdgeCluster)",
-            DeprecationWarning, stacklevel=3)
+            DeprecationWarning,
+            stacklevel=3,
+        )
 
     def route(self, req: Request, timeline: Timeline) -> int:
         loads = np.maximum(timeline.free, req.arrival)
@@ -152,8 +157,7 @@ class TimeModel:
     WAN-ish link is avoided when a nearer replica exists. Without it the
     legacy uniform model is bit-identical to before."""
 
-    def __init__(self, cluster: ClusterSpec, profile: MoEProfile,
-                 topology=None):
+    def __init__(self, cluster: ClusterSpec, profile: MoEProfile, topology=None):
         self.cluster, self.profile = cluster, profile
         self.topology = topology
         self.speeds = np.array([s.compute_speed for s in cluster.servers])
@@ -169,22 +173,24 @@ class TimeModel:
         return rng.multinomial(tokens * self.profile.top_k, probs)  # [L, E]
 
     def dense_time(self, tokens: int, server: int) -> float:
-        return tokens * self.profile.dense_flops_per_token \
-            / self.speeds[server]
+        return tokens * self.profile.dense_flops_per_token / self.speeds[server]
 
     def _tier_table(self, layer: int | None) -> np.ndarray | None:
         """[N, E] tier assignment for this layer, or None when no
         TierManager is attached (flat pricing)."""
         tm = self.tiers
-        if (tm is None or layer is None or tm.tier is None
-                or layer >= tm.tier.shape[0]):
+        if tm is None or layer is None or tm.tier is None or layer >= tm.tier.shape[0]:
             return None
         return tm.tier[layer]
 
-    def collab_layer(self, counts: np.ndarray, res_l: np.ndarray,
-                     server: int, timeline: Timeline,
-                     layer: int | None = None
-                     ) -> tuple[float, float, float]:
+    def collab_layer(
+        self,
+        counts: np.ndarray,
+        res_l: np.ndarray,
+        server: int,
+        timeline: Timeline,
+        layer: int | None = None,
+    ) -> tuple[float, float, float]:
         """Eq. 1 for one layer under a placement residency ``res_l``
         [N, E]: local experts compute at the home server; remote experts go
         to the nearest-idle replica (comm + comp, async load on the
@@ -200,66 +206,78 @@ class TimeModel:
         local = active & (res_l[server] > 0)
         remote = active & ~local
         comp_b = counts * pf.expert_flops_per_token
-        worst = float((comp_b * local).max() / self.speeds[server]) \
-            if local.any() else 0.0
+        worst = (
+            float((comp_b * local).max() / self.speeds[server]) if local.any() else 0.0
+        )
         if tier_l is not None and local.any():
             back = local & (tier_l[server] > 0)
             if back.any():
                 if tier_l[server][back].max() > 1:
-                    stall = self.topology.disk_fetch_seconds(
-                        server, pf.expert_bytes)
+                    stall = self.topology.disk_fetch_seconds(server, pf.expert_bytes)
                 else:
-                    stall = self.topology.host_fetch_seconds(
-                        server, pf.expert_bytes)
-                worst = max(worst, float(comp_b[back].max()
-                                         / self.speeds[server]) + stall)
+                    stall = self.topology.host_fetch_seconds(server, pf.expert_bytes)
+                worst = max(
+                    worst, float(comp_b[back].max() / self.speeds[server]) + stall
+                )
         hits = float(counts[local].sum())
         tot = float(counts[active].sum())
         if remote.any():
-            free_m = np.where(res_l.T[remote] > 0, timeline.free[None],
-                              np.inf)                     # [R, N]
+            free_m = np.where(
+                res_l.T[remote] > 0, timeline.free[None], np.inf
+            )  # [R, N]
             if self.topology is not None:
                 # per-link pricing: candidate replica n costs its queue
                 # plus the (server -> n) dispatch and the (n -> server)
                 # return for this batch — each leg at its own link (they
                 # differ on asymmetric topologies)
-                per_tok = (pf.hidden_bytes_per_token
-                           / self.topology.bandwidth[server]
-                           + pf.hidden_bytes_per_token
-                           / self.topology.bandwidth[:, server])     # [N]
-                lat2 = (self.topology.latency[server]
-                        + self.topology.latency[:, server])          # [N]
-                comm_m = (counts[remote][:, None] * per_tok[None, :]
-                          + lat2[None, :])                           # [R, N]
+                per_tok = (
+                    pf.hidden_bytes_per_token / self.topology.bandwidth[server]
+                    + pf.hidden_bytes_per_token / self.topology.bandwidth[:, server]
+                )  # [N]
+                lat2 = (
+                    self.topology.latency[server] + self.topology.latency[:, server]
+                )  # [N]
+                comm_m = (
+                    counts[remote][:, None] * per_tok[None, :] + lat2[None, :]
+                )  # [R, N]
                 if tier_l is not None:
                     # a candidate holding the expert only in a back tier
                     # must fetch it first — surcharge its column
-                    t_re = tier_l.T[remote]                          # [R, N]
-                    fetch_n = np.array([
-                        self.topology.host_fetch_seconds(
-                            i, pf.expert_bytes)
-                        for i in range(res_l.shape[0])])
-                    disk_n = np.array([
-                        self.topology.disk_fetch_seconds(
-                            i, pf.expert_bytes)
-                        for i in range(res_l.shape[0])])
+                    t_re = tier_l.T[remote]  # [R, N]
+                    fetch_n = np.array(
+                        [
+                            self.topology.host_fetch_seconds(i, pf.expert_bytes)
+                            for i in range(res_l.shape[0])
+                        ]
+                    )
+                    disk_n = np.array(
+                        [
+                            self.topology.disk_fetch_seconds(i, pf.expert_bytes)
+                            for i in range(res_l.shape[0])
+                        ]
+                    )
                     comm_m = comm_m + np.where(
-                        t_re == 1, fetch_n[None, :],
-                        np.where(t_re == 2, disk_n[None, :], 0.0))
+                        t_re == 1,
+                        fetch_n[None, :],
+                        np.where(t_re == 2, disk_n[None, :], 0.0),
+                    )
                 tgt = np.argmin(free_m + comm_m, axis=-1)
                 comm = comm_m[np.arange(len(tgt)), tgt]
             else:
                 tgt = np.argmin(free_m, axis=-1)
-                comm = (2 * counts[remote] * pf.hidden_bytes_per_token
-                        / self.cluster.bandwidth + self.cluster.rtt)
+                comm = (
+                    2 * counts[remote] * pf.hidden_bytes_per_token
+                    / self.cluster.bandwidth
+                    + self.cluster.rtt
+                )
             comp = comp_b[remote] / self.speeds[tgt]
-            timeline.add_async(tgt, comp)                 # async load
+            timeline.add_async(tgt, comp)  # async load
             worst = max(worst, float((comm + comp).max()))
         return worst, hits, tot
 
-    def offload_service(self, layer_counts: np.ndarray, server: int,
-                        cache_mask_n: np.ndarray
-                        ) -> tuple[float, float, float]:
+    def offload_service(
+        self, layer_counts: np.ndarray, server: int, cache_mask_n: np.ndarray
+    ) -> tuple[float, float, float]:
         """Single-server offloading: cached experts compute locally, misses
         load weights from host RAM (MoE-Infinity baseline)."""
         pf = self.profile
@@ -271,17 +289,19 @@ class TimeModel:
         tot = float(layer_counts.sum())
         return service, hits, tot
 
-    def migration_pause(self, old_res: np.ndarray, new_res: np.ndarray
-                        ) -> tuple[np.ndarray, np.ndarray]:
+    def migration_pause(
+        self, old_res: np.ndarray, new_res: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray]:
         """Eq. 3: per-server stall for newly placed expert weights.
         Returns (delays [N] seconds, experts added per server [N])."""
-        added = np.maximum(new_res - old_res, 0).sum(0).sum(-1)   # [N]
+        added = np.maximum(new_res - old_res, 0).sum(0).sum(-1)  # [N]
         return added * self.profile.expert_bytes / self.io, added
 
 
 @dataclasses.dataclass
 class LocalRatioTracker:
     """Bucketed local-compute-ratio time series."""
+
     bucket: float
     samples: list = dataclasses.field(default_factory=list)
     hits: float = 0.0
@@ -297,16 +317,14 @@ class LocalRatioTracker:
 
     def roll(self, now: float) -> None:
         while now >= self.next_bucket:
-            self.samples.append((self.next_bucket,
-                                 self.hits / max(self.tot, 1.0)))
+            self.samples.append((self.next_bucket, self.hits / max(self.tot, 1.0)))
             self.hits = self.tot = 0.0
             self.next_bucket += self.bucket
 
     def flush(self) -> None:
         """Emit the trailing partial bucket (previously dropped)."""
         if self.tot > 0:
-            self.samples.append((self.next_bucket,
-                                 self.hits / max(self.tot, 1.0)))
+            self.samples.append((self.next_bucket, self.hits / max(self.tot, 1.0)))
             self.hits = self.tot = 0.0
 
 
@@ -316,20 +334,25 @@ class LocalRatioTracker:
 
 @dataclasses.dataclass
 class SimResult:
-    latencies: np.ndarray            # per request
-    servers: np.ndarray              # per request (arrival/home server)
+    latencies: np.ndarray  # per request
+    servers: np.ndarray  # per request (arrival/home server)
     finish_times: np.ndarray
-    local_ratio_t: list              # (time, ratio) samples
-    migrations: list                 # diagnostics dicts
+    local_ratio_t: list  # (time, ratio) samples
+    migrations: list  # diagnostics dicts
     stats: ActivationStats
-    routed: np.ndarray | None = None         # per request: serving server
+    routed: np.ndarray | None = None  # per request: serving server
     hits_by_server: np.ndarray | None = None  # [N] local activations served
-    tot_by_server: np.ndarray | None = None   # [N] total activations served
+    tot_by_server: np.ndarray | None = None  # [N] total activations served
 
     def avg_latency_per_server(self, n: int) -> np.ndarray:
-        return np.array([self.latencies[self.servers == i].mean()
-                         if (self.servers == i).any() else 0.0
-                         for i in range(n)])
+        return np.array(
+            [
+                self.latencies[self.servers == i].mean()
+                if (self.servers == i).any()
+                else 0.0
+                for i in range(n)
+            ]
+        )
 
     @property
     def avg_latency(self) -> float:
@@ -341,11 +364,20 @@ class SimResult:
 # ---------------------------------------------------------------------------
 
 class EdgeSimulator:
-    def __init__(self, cluster: ClusterSpec, profile: MoEProfile,
-                 workload: Workload, plan: PlacementPlan | None = None,
-                 controller=None, mode: str = "collab",
-                 redirect: bool = False, seed: int = 0,
-                 ratio_bucket: float = 60.0, router=None, topology=None):
+    def __init__(
+        self,
+        cluster: ClusterSpec,
+        profile: MoEProfile,
+        workload: Workload,
+        plan: PlacementPlan | None = None,
+        controller=None,
+        mode: str = "collab",
+        redirect: bool = False,
+        seed: int = 0,
+        ratio_bucket: float = 60.0,
+        router=None,
+        topology=None,
+    ):
         """mode: 'collab' (distributed expert calls under `plan`) or
         'offload' (each server caches its own top experts; misses load
         weights from host RAM — the MoE-Infinity-style baseline).
@@ -368,14 +400,19 @@ class EdgeSimulator:
         if self.controller is not None:
             # one shared link model; the profile knows m_e for transfers
             topology = self.controller.attach_topology(
-                topology, expert_bytes=profile.expert_bytes)
+                topology, expert_bytes=profile.expert_bytes
+            )
         self.topology = topology
         self.mode = mode
         self.rng = np.random.default_rng(seed)
         self.source = ArrivalSource(workload)
-        self.router = (as_router(router) if router is not None
-                       else LeastLoadedRouter() if redirect
-                       else HomeRouter())
+        self.router = (
+            as_router(router)
+            if router is not None
+            else LeastLoadedRouter()
+            if redirect
+            else HomeRouter()
+        )
         self.time_model = TimeModel(cluster, profile, topology=topology)
         self.ratio_bucket = ratio_bucket
         self._started = False
@@ -400,7 +437,7 @@ class EdgeSimulator:
         server keeps its own most-frequent experts, split evenly across
         layers)."""
         cl, pf = self.cluster, self.profile
-        exp_freq = self.workload.freqs_by_server(cl.n)   # [L, N, E]
+        exp_freq = self.workload.freqs_by_server(cl.n)  # [L, N, E]
         cap = cl.expert_capacity(pf.expert_bytes)
         per_layer = np.maximum(cap // pf.num_layers, 1)
         caches = []
@@ -430,13 +467,13 @@ class EdgeSimulator:
         ctrl = self.controller
         if ctrl is not None and ctrl.stats is None:
             ctrl.stats = ActivationStats(L, N, E)
-        self._stats = (ctrl.stats if ctrl is not None
-                       else ActivationStats(L, N, E))
+        self._stats = ctrl.stats if ctrl is not None else ActivationStats(L, N, E)
         self._plan = self.plan
         if ctrl is not None:
-            self._plan = ctrl.review(0.0).plan      # initial placement
-        self._res = (self._plan.residency()
-                     if self._plan is not None else None)      # [L, N, E]
+            self._plan = ctrl.review(0.0).plan  # initial placement
+        self._res = (
+            self._plan.residency() if self._plan is not None else None
+        )  # [L, N, E]
         if self.mode == "offload":
             caches = self._offload_caches()
             self._cache_mask = np.zeros((N, L, E), bool)
@@ -473,8 +510,9 @@ class EdgeSimulator:
         dense_t = tm.dense_time(tokens, n)
         req_hits = req_tot = 0.0
         if self.mode == "offload":
-            service, hits, tot = tm.offload_service(layer_counts, n,
-                                                    self._cache_mask[n])
+            service, hits, tot = tm.offload_service(
+                layer_counts, n, self._cache_mask[n]
+            )
             service += L * dense_t
             ratio.add(hits, tot)
             req_hits, req_tot = hits, tot
@@ -482,9 +520,9 @@ class EdgeSimulator:
             res = self._effective_res()
             service = 0.0
             for l in range(L):
-                worst, hits, tot = tm.collab_layer(layer_counts[l],
-                                                   res[l], n, timeline,
-                                                   layer=l)
+                worst, hits, tot = tm.collab_layer(
+                    layer_counts[l], res[l], n, timeline, layer=l
+                )
                 ratio.add(hits, tot)
                 req_hits += hits
                 req_tot += tot
@@ -506,21 +544,34 @@ class EdgeSimulator:
             migrated = self.poll_migration(done)
             dec = ctrl.review(done)
             if dec.adopted and dec.staged:
-                self._migrations.append({
-                    "time": done, "staged": True, "eta": dec.diag["eta"],
-                    "transfers": dec.diag["transfers"],
-                    "transfer_bytes": dec.diag["transfer_bytes"]})
+                self._migrations.append(
+                    {
+                        "time": done,
+                        "staged": True,
+                        "eta": dec.diag["eta"],
+                        "transfers": dec.diag["transfers"],
+                        "transfer_bytes": dec.diag["transfer_bytes"],
+                    }
+                )
             elif dec.adopted and not dec.staged:
                 new_res = dec.plan.residency()
                 delays, added = tm.migration_pause(self._res, new_res)  # Eq.3
                 timeline.pause(delays)
-                self._migrations.append({"time": done,
-                                         "added_per_server": added.tolist()})
+                self._migrations.append(
+                    {"time": done, "added_per_server": added.tolist()}
+                )
                 self._plan, self._res = dec.plan, new_res
                 migrated = True
-        return {"origin": r.server, "server": n, "start": start,
-                "done": done, "latency": done - r.arrival,
-                "hits": req_hits, "tot": req_tot, "migrated": migrated}
+        return {
+            "origin": r.server,
+            "server": n,
+            "start": start,
+            "done": done,
+            "latency": done - r.arrival,
+            "hits": req_hits,
+            "tot": req_tot,
+            "migrated": migrated,
+        }
 
     def poll_migration(self, now: float) -> bool:
         """Complete the controller's in-flight staged migration once its
@@ -538,12 +589,17 @@ class EdgeSimulator:
             return False
         new_res = comp.plan.residency()
         added = np.maximum(new_res - self._res, 0).sum(0).sum(-1)
-        self._migrations.append({
-            "time": now, "completed": True,
-            "staged_at": comp.started, "eta": comp.eta,
-            "transfer_seconds": comp.seconds,
-            "transfer_bytes": comp.nbytes,
-            "added_per_server": added.tolist()})
+        self._migrations.append(
+            {
+                "time": now,
+                "completed": True,
+                "staged_at": comp.started,
+                "eta": comp.eta,
+                "transfer_seconds": comp.seconds,
+                "transfer_bytes": comp.nbytes,
+                "added_per_server": added.tolist(),
+            }
+        )
         self._plan, self._res = comp.plan, new_res
         return True
 
@@ -559,8 +615,7 @@ class EdgeSimulator:
         every server is up (or without a topology / with
         ``mask_dead_residency`` off)."""
         res = self._res
-        if (res is None or not self.mask_dead_residency
-                or self.topology is None):
+        if res is None or not self.mask_dead_residency or self.topology is None:
             return res
         up = np.asarray(self.topology.state.up)
         if up.all():
@@ -591,21 +646,26 @@ class EdgeSimulator:
         """[N] local-compute ratio of the traffic each server has served so
         far (live view; 1.0 for servers with no traffic yet)."""
         self.start()
-        return np.where(self._tot_by_server > 0,
-                        self._hits_by_server
-                        / np.maximum(self._tot_by_server, 1.0), 1.0)
+        return np.where(
+            self._tot_by_server > 0,
+            self._hits_by_server / np.maximum(self._tot_by_server, 1.0),
+            1.0,
+        )
 
     def finish(self) -> SimResult:
         self.start()
         self._ratio.flush()
-        return SimResult(latencies=np.array(self._latencies),
-                         servers=np.array(self._servers),
-                         finish_times=np.array(self._finishes),
-                         local_ratio_t=self._ratio.samples,
-                         migrations=self._migrations, stats=self._stats,
-                         routed=np.array(self._routed, int),
-                         hits_by_server=self._hits_by_server.copy(),
-                         tot_by_server=self._tot_by_server.copy())
+        return SimResult(
+            latencies=np.array(self._latencies),
+            servers=np.array(self._servers),
+            finish_times=np.array(self._finishes),
+            local_ratio_t=self._ratio.samples,
+            migrations=self._migrations,
+            stats=self._stats,
+            routed=np.array(self._routed, int),
+            hits_by_server=self._hits_by_server.copy(),
+            tot_by_server=self._tot_by_server.copy(),
+        )
 
     def run(self) -> SimResult:
         # a full pass always starts from a fresh timeline (run() was

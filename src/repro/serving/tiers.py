@@ -85,6 +85,10 @@ class TierManager:
 
     tier: np.ndarray | None = None  # [L, N, E] int8, -1 = unplaced
     events: list = dataclasses.field(default_factory=list)
+    # optional span tracer (repro.serving.obs.Tracer): PREFETCH spans for
+    # landed promotions, COLD_FETCH_STALL spans for on-demand fetches —
+    # duck-typed so this module stays importable without obs
+    tracer: "object | None" = None
 
     def __post_init__(self):
         self._heat: np.ndarray | None = None  # [L, E] accumulated
@@ -144,11 +148,13 @@ class TierManager:
         return self.tier
 
     # -- stats ingestion + hit/stall accounting ------------------------
-    def observe(self, total_counts: np.ndarray) -> None:
+    def observe(self, total_counts: np.ndarray, now: float = 0.0) -> None:
         """Fold a cumulative per-origin ``[L, N, E]`` gating-counts matrix
         (the same accumulator the ``TrafficMeter`` observes) into the
         prefetch heat table, and book this round's hits/fetches against
-        the current tier residency."""
+        the current tier residency. ``now`` (owner's clock) anchors the
+        traced ``COLD_FETCH_STALL`` spans; it never affects the
+        accounting itself."""
         total = np.asarray(total_counts, float)
         if self._snapshot is None or self._snapshot.shape != total.shape:
             self._snapshot = np.zeros_like(total)
@@ -176,6 +182,17 @@ class TierManager:
                 else:
                     stall = self.topology.host_fetch_seconds(int(n), eb)
                 self.on_demand_stall_seconds += stall
+                if self.tracer is not None and self.tracer.enabled:
+                    self.tracer.span(
+                        "COLD_FETCH_STALL",
+                        now,
+                        now + stall / self.clock_rate,
+                        server=int(n),
+                        layer=int(l),
+                        expert=int(e),
+                        tier=int(t_l[n, e]),
+                        stall_seconds=stall,
+                    )
 
     def fetch_stall_seconds(self, layer: int, server: int, expert: int) -> float:
         """Modeled stall for invoking ``expert`` on ``server`` right now:
@@ -249,6 +266,20 @@ class TierManager:
             self.tier[p.layer, p.server, p.evict] = TIER_HOST
             self.promotions += 1
             self.demotions += 1
+            if self.tracer is not None and self.tracer.enabled:
+                # the fetch occupied the host link for p.seconds modeled
+                # seconds ending at its eta (poll may run late; the span
+                # records the modeled transfer window, not the poll time)
+                self.tracer.span(
+                    "PREFETCH",
+                    p.eta - p.seconds / self.clock_rate,
+                    p.eta,
+                    server=p.server,
+                    layer=p.layer,
+                    expert=p.expert,
+                    evict=p.evict,
+                    seconds=p.seconds,
+                )
             self.events.append(
                 {
                     "type": "tier-promotion",

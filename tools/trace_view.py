@@ -1,0 +1,163 @@
+"""Textual viewer for exported serving traces.
+
+Reads a Chrome-trace JSON file written by ``Tracer.export`` (e.g. via
+``EdgeCluster.export_trace`` or ``launch/serve.py --trace-out``) and
+prints the per-phase latency breakdown: span counts and duration
+percentiles by kind, per-server track activity, and the slowest
+requests decomposed into their phases (queue wait vs prefill vs decode
+vs cold-fetch stalls).
+
+Run:  PYTHONPATH=src python tools/trace_view.py TRACE.json [--top N]
+
+The viewer is dependency-free on purpose (stdlib only): it must load in
+CI and on machines without the repo's accelerator stack.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# phase printing order: request phases first, control plane after
+KIND_ORDER = (
+    "QUEUE_WAIT",
+    "PREFILL_CHUNK",
+    "DECODE_ROUND",
+    "PREFIX_HIT",
+    "SHED",
+    "FAILOVER_REPREFILL",
+    "COLD_FETCH_STALL",
+    "PLACEMENT_REVIEW",
+    "TRANSFER_TASK",
+    "FAULT",
+    "PREFETCH",
+)
+
+
+def _percentile(xs: list, q: float) -> float:
+    """Nearest-rank percentile over a sorted copy (stdlib-only)."""
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    i = min(int(round(q / 100.0 * (len(xs) - 1))), len(xs) - 1)
+    return xs[i]
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if "traceEvents" not in doc:
+        raise ValueError(f"{path}: not a Chrome-trace document")
+    return doc
+
+
+def spans(doc: dict) -> list:
+    """The complete ('X') events, in file order."""
+    return [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+
+
+def phase_table(doc: dict) -> list:
+    """Rows of (kind, count, total_ms, mean_ms, p50_ms, p99_ms)."""
+    by_kind: dict = {}
+    for e in spans(doc):
+        by_kind.setdefault(e["name"], []).append(e["dur"] / 1e3)
+    rows = []
+    known = [k for k in KIND_ORDER if k in by_kind]
+    extra = sorted(k for k in by_kind if k not in KIND_ORDER)
+    for kind in known + extra:
+        ds = by_kind[kind]
+        rows.append(
+            (
+                kind,
+                len(ds),
+                sum(ds),
+                sum(ds) / len(ds),
+                _percentile(ds, 50),
+                _percentile(ds, 99),
+            )
+        )
+    return rows
+
+
+def request_table(doc: dict, top: int = 10) -> list:
+    """The ``top`` requests by total recorded span time, each row:
+    (rid, total_ms, {kind: ms})."""
+    by_rid: dict = {}
+    for e in spans(doc):
+        rid = e.get("args", {}).get("rid", -1)
+        if rid < 0:
+            continue
+        phases = by_rid.setdefault(rid, {})
+        phases[e["name"]] = phases.get(e["name"], 0.0) + e["dur"] / 1e3
+    rows = [(rid, sum(ph.values()), ph) for rid, ph in by_rid.items()]
+    rows.sort(key=lambda r: (-r[1], r[0]))
+    return rows[:top]
+
+
+def server_table(doc: dict) -> list:
+    """Per-track rows of (name, events, busy_ms) from the thread
+    metadata plus each track's span activity."""
+    names = {}
+    for e in doc["traceEvents"]:
+        if e.get("ph") == "M" and e.get("name") == "thread_name":
+            names[e["tid"]] = e["args"]["name"]
+    stats: dict = {}
+    for e in spans(doc):
+        n, busy = stats.get(e["tid"], (0, 0.0))
+        stats[e["tid"]] = (n + 1, busy + e["dur"] / 1e3)
+    return [
+        (names.get(tid, f"tid{tid}"), n, busy)
+        for tid, (n, busy) in sorted(stats.items())
+    ]
+
+
+def render(doc: dict, top: int = 10) -> str:
+    """The full textual report for one trace document."""
+    other = doc.get("otherData", {})
+    unit = "tick(ms)" if other.get("clock") == "ticks" else "ms"
+    out = [
+        f"trace: {other.get('spans', len(spans(doc)))} spans, "
+        f"clock={other.get('clock', '?')}, "
+        f"dropped={other.get('dropped', 0)}",
+        "",
+        f"{'phase':<20}{'count':>7}{'total':>12}{'mean':>10}"
+        f"{'p50':>10}{'p99':>10}   [{unit}]",
+    ]
+    for kind, n, tot, mean, p50, p99 in phase_table(doc):
+        out.append(
+            f"{kind:<20}{n:>7}{tot:>12.3f}{mean:>10.3f}{p50:>10.3f}{p99:>10.3f}"
+        )
+    out += ["", f"{'track':<20}{'events':>7}{'busy':>12}   [{unit}]"]
+    for name, n, busy in server_table(doc):
+        out.append(f"{name:<20}{n:>7}{busy:>12.3f}")
+    reqs = request_table(doc, top)
+    if reqs:
+        out += ["", f"slowest {len(reqs)} requests by recorded span time:"]
+        for rid, tot, phases in reqs:
+            detail = "  ".join(
+                f"{k}={phases[k]:.3f}" for k in KIND_ORDER if k in phases
+            )
+            out.append(f"  rid {rid:<6} {tot:>10.3f}  {detail}")
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="print the per-phase latency breakdown of an "
+        "exported serving trace"
+    )
+    ap.add_argument("trace", help="path to a Tracer.export JSON file")
+    ap.add_argument(
+        "--top",
+        type=int,
+        default=10,
+        help="how many slowest requests to decompose (default 10)",
+    )
+    args = ap.parse_args(argv)
+    print(render(load(args.trace), top=args.top))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
